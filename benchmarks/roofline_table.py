@@ -1,0 +1,52 @@
+"""Render the EXPERIMENTS.md roofline tables from dry-run JSON rows.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table results/dryrun_opt
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def load(outdir: str, mesh: str) -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(f"{outdir}/*.{mesh}.json")):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def render(outdir: str = "results/dryrun_opt") -> str:
+    lines = []
+    for mesh, label in (("single", "single-pod (16,16) = 256 chips"),
+                        ("multi", "multi-pod (2,16,16) = 512 chips")):
+        rows = load(outdir, mesh)
+        if not rows:
+            continue
+        lines.append(f"\n### {label}\n")
+        lines.append("| cell | compute_s | memory_s | collective_s | "
+                     "bottleneck | roofline | useful | GiB/dev | fits |")
+        lines.append("|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            cell = f"{r['arch']}.{r['shape']}"
+            if r["status"] == "skipped":
+                lines.append(f"| {cell} | — | — | — | skip | — | — | — | "
+                             f"n/a |")
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {cell} | FAILED: {r['error'][:40]} "
+                             f"| | | | | | | |")
+                continue
+            lines.append(
+                f"| {cell} | {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+                f"| {r['collective_s']:.3f} | {r['bottleneck']} "
+                f"| {r['roofline_fraction']:.2f} "
+                f"| {r['useful_ratio']:.2f} "
+                f"| {r['bytes_per_device'] / 2**30:.1f} "
+                f"| {'yes' if r['hbm_ok'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(render(sys.argv[1] if len(sys.argv) > 1 else
+                 "results/dryrun_opt"))

@@ -1,0 +1,85 @@
+"""Elastic rescaling: lose a pod mid-training, continue on fewer chips.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/elastic_rescale.py
+
+Checkpoints are *logical* (unsharded pytrees in the versioned store), so
+rescaling is purely a placement decision: restore the branch head, derive
+new NamedShardings from the new mesh, `device_put`, continue. The global
+batch contract is preserved (the pipeline cursor is part of the commit),
+so the loss trajectory continues exactly — the paper's partial-vs-total-
+failure upgrade applied to cluster capacity.
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax                                                    # noqa: E402
+import numpy as np                                            # noqa: E402
+
+from repro.checkpoints.checkpointing import CheckpointManager  # noqa: E402
+from repro.configs import get_smoke_config                    # noqa: E402
+from repro.core.catalog import Catalog                        # noqa: E402
+from repro.data.pipeline import DataPipeline, TokenDataset    # noqa: E402
+from repro.data.synthetic import markov_corpus                # noqa: E402
+from repro.distributed.elastic import reshard                 # noqa: E402
+from repro.distributed.sharding import make_rules             # noqa: E402
+from repro.training.optimizer import AdamWConfig              # noqa: E402
+from repro.training.train_loop import TrainConfig, train      # noqa: E402
+
+
+def mesh_of(n, shape, axes):
+    devs = np.array(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+def main():
+    cfg = get_smoke_config("xlstm_350m")
+    B, S = 8, 32
+    tokens = markov_corpus(B * S * 64, cfg.vocab_size, seed=0)
+
+    def pipeline():
+        return DataPipeline(TokenDataset(tokens, shard_tokens=B * S * 2),
+                            batch=B, seq_len=S, seed=0)
+
+    catalog = Catalog()
+    ckpt = CheckpointManager(catalog)
+    opt = AdamWConfig(lr=3e-3)
+
+    # phase 1: "two pods" — (2,2,2) mesh, 8 chips
+    m1 = mesh_of(8, (2, 2, 2), ("pod", "data", "model"))
+    print(f"[phase 1] {m1.devices.size} devices {dict(m1.shape)}")
+    with m1:
+        train(cfg, pipeline=pipeline(), opt_cfg=opt,
+              tc=TrainConfig(steps=10, ckpt_every=5), ckpt=ckpt)
+    print(f"[phase 1] committed step {ckpt.latest_step()}")
+
+    # phase 2: a pod dies — restore the SAME branch head on (2,2)=4 chips
+    m2 = mesh_of(4, (2, 2), ("data", "model"))
+    rules = make_rules("train", m2)
+    print(f"[phase 2] rescaled to {m2.devices.size} devices "
+          f"{dict(m2.shape)} — same checkpoint, new placement")
+    import repro.models.model as MDL
+    from repro.training.optimizer import adamw_init
+    like_p = MDL.init_params(jax.random.PRNGKey(0), cfg)
+    like_o = adamw_init(like_p)
+    params, opt_state, data_state, _ = ckpt.restore(like_p, like_o)
+    params = reshard(params, m2, rules)
+    opt_state = jax.tree.unflatten(
+        jax.tree.structure(opt_state),
+        jax.tree.leaves(reshard(opt_state, m2, rules)))
+    with m2:
+        res = train(cfg, pipeline=pipeline(), opt_cfg=opt,
+                    tc=TrainConfig(steps=20, ckpt_every=5), ckpt=ckpt)
+    hist = res["history"]
+    assert hist[0]["step"] == 10, "resumed from the committed cursor"
+    print(f"[phase 2] steps {hist[0]['step']}..{hist[-1]['step']}  "
+          f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+    print("[check] training continued across the rescale with the "
+          "committed data cursor — slow but CORRECT")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Serving against a pinned commit while training publishes new
+checkpoints (the snapshot-read guarantee at the serving boundary).
+
+    PYTHONPATH=src python examples/serve_pinned_commit.py
+"""
+import jax
+import numpy as np
+
+from repro.checkpoints.checkpointing import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.core.catalog import Catalog
+from repro.models import model as MDL
+from repro.serving.serve_loop import Request, ServeLoop, load_params_at
+from repro.training.optimizer import adamw_init
+
+
+class _Client:
+    def __init__(self, catalog):
+        self.catalog = catalog
+        self.store = catalog.store
+
+
+def main():
+    cfg = get_smoke_config("phi4_mini_3b")
+    params = MDL.init_params(jax.random.PRNGKey(0), cfg)
+
+    catalog = Catalog()
+    ckpt = CheckpointManager(catalog)
+    ckpt.save(step=100, params=params, opt_state=adamw_init(params),
+              data_state={"epoch": 0, "shard_order_seed": 0},
+              metrics={"loss": 2.0}, code="v1")
+    catalog.tag("serving/v1", "main")
+    print("replica pinned to tag serving/v1")
+
+    # replica loads from the immutable tag
+    client = _Client(catalog)
+    like = jax.tree.map(np.asarray, params)
+    served_params = load_params_at(client, "serving/v1", like)
+
+    # training publishes newer checkpoints on main — replica unaffected
+    noisier = jax.tree.map(lambda x: x + 1.0
+                           if hasattr(x, "dtype") and x.dtype.kind == "f"
+                           else x, like)
+    ckpt.save(step=200, params=noisier, opt_state=adamw_init(params),
+              data_state={"epoch": 0, "shard_order_seed": 0},
+              metrics={"loss": 1.5}, code="v2")
+    pinned_again = load_params_at(client, "serving/v1", like)
+    same = all(np.array_equal(a, b) for a, b in
+               zip(jax.tree.leaves(served_params),
+                   jax.tree.leaves(pinned_again)))
+    print(f"main advanced to step {ckpt.latest_step('main')}; "
+          f"pinned replica params unchanged: {same}")
+    assert same
+
+    # continuous-batching decode on the pinned params
+    loop = ServeLoop(cfg, jax.tree.map(jax.numpy.asarray, served_params),
+                     batch_slots=4, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(
+        0, cfg.vocab_size, 6).astype(np.int32), max_new=8)
+        for i in range(8)]
+    for r in reqs:
+        loop.submit(r)
+    loop.run()
+    print(f"served {sum(r.done for r in reqs)}/8 requests; "
+          f"sample completion: {reqs[0].out}")
+
+    # promotion is a catalog op, not a file copy:
+    catalog.tag("serving/v2", "main")
+    print("promotion: tagged serving/v2 ->", catalog.head("serving/v2").id[:10])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""End-to-end driver (deliverable b): train a model for a few hundred
+steps with transactional checkpoints, kill the worker mid-run, restart,
+and verify the resumed run is bitwise-identical to an uninterrupted one.
+
+    PYTHONPATH=src python examples/transactional_training.py [--steps 200]
+
+This is the paper's protocol applied to the training pipeline: the
+checkpoint {params, opt_state, data_state, metrics} is one transactional
+run — a restart can never observe params from step N with a dataloader
+cursor from step N-k.
+"""
+import argparse
+
+import numpy as np
+
+from repro.checkpoints.checkpointing import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.core.catalog import Catalog
+from repro.data.pipeline import DataPipeline, TokenDataset
+from repro.data.synthetic import markov_corpus
+from repro.distributed.fault_tolerance import (FailureInjector,
+                                               resilient_train)
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="xlstm_350m")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    B, S = 8, 64
+    tokens = markov_corpus(B * S * 128, cfg.vocab_size, seed=0)
+
+    def pipeline():
+        return DataPipeline(TokenDataset(tokens, shard_tokens=B * S * 2),
+                            batch=B, seq_len=S, seed=0)
+
+    opt = AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps)
+    tc = TrainConfig(steps=args.steps, ckpt_every=25, log_every=50)
+
+    # -- run A: uninterrupted ------------------------------------------------
+    cat_a = Catalog()
+    res_a = train(cfg, pipeline=pipeline(), opt_cfg=opt, tc=tc,
+                  ckpt=CheckpointManager(cat_a))
+    la = res_a["history"]
+    print(f"[A] steps 0..{la[-1]['step']}  "
+          f"loss {la[0]['loss']:.3f} -> {la[-1]['loss']:.3f}")
+
+    # -- run B: killed twice, restarted from the committed branch head -------
+    cat_b = Catalog()
+    ckpt_b = CheckpointManager(cat_b)
+    inj = FailureInjector(fail_at=(args.steps // 3, 2 * args.steps // 3))
+    res_b = resilient_train(cfg, pipeline_factory=pipeline, opt_cfg=opt,
+                            tc=tc, ckpt=ckpt_b, injector=inj)
+    lb = res_b["history"]
+    print(f"[B] killed at steps {sorted(inj._fired)}; "
+          f"final loss {lb[-1]['loss']:.3f}")
+
+    # -- the paper's claim: restart == replay --------------------------------
+    drift = abs(la[-1]["loss"] - lb[-1]["loss"])
+    print(f"[check] |loss_A - loss_B| = {drift:.2e} "
+          f"{'OK (reproducible restart)' if drift < 1e-4 else 'MISMATCH!'}")
+    assert drift < 1e-4
+
+    # every PUBLISHED checkpoint commit (where main's head actually
+    # moved) carries the complete artifact set — intermediate commits
+    # exist only on (merged) txn branches, never as a head of main.
+    published = [r for r in ckpt_b.registry.runs()
+                 if r.status == "committed"]
+    assert published
+    for r in published:
+        c = cat_b.commit(r.final_commit)
+        assert {"params", "opt_state", "data_state",
+                "metrics"} <= set(c.tables), "torn checkpoint!"
+    print(f"[check] all {len(published)} published checkpoints complete "
+          f"(head never observed torn)")
+
+
+if __name__ == "__main__":
+    main()

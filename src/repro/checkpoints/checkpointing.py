@@ -1,0 +1,100 @@
+"""Versioned, transactional checkpointing — the paper's §3.3 protocol
+applied to training state.
+
+A training checkpoint is a *multi-table commit*: ``params``,
+``opt_state``, ``data_state`` (pipeline cursor) and ``metrics`` must be
+published atomically — a restart that mixes params@N with cursor@N−k is
+exactly the torn state of paper Fig. 3. The manager therefore writes all
+four artifacts inside one :class:`TransactionalRun`, runs verifiers
+(finite-params check = the "data quality" gate), and merges atomically.
+
+Branches give the full Git-for-data workflow on checkpoints: train on a
+feature branch, tag milestones, merge to main when evals pass, reproduce
+any run from its pinned commit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.catalog import Catalog
+from repro.core.errors import QualityError
+from repro.core.store import ObjectStore, get_pytree, put_pytree
+from repro.core.transactions import RunRegistry, TransactionalRun
+
+TABLES = ("params", "opt_state", "data_state", "metrics")
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointRef:
+    step: int
+    commit: str
+    run_id: str
+
+
+class CheckpointManager:
+    def __init__(self, catalog: Catalog, *, branch: str = "main",
+                 registry: RunRegistry | None = None,
+                 check_finite: bool = True):
+        self.catalog = catalog
+        self.store: ObjectStore = catalog.store
+        self.branch = branch
+        self.registry = registry or RunRegistry()
+        self.check_finite = check_finite
+
+    # ------------------------------------------------------------------
+    def save(self, *, step: int, params: Any, opt_state: Any,
+             data_state: dict, metrics: dict,
+             code: str = "") -> CheckpointRef:
+        """Atomically publish a checkpoint (all four tables or none)."""
+        host_params = jax.tree.map(np.asarray, params)
+        host_opt = jax.tree.map(np.asarray, opt_state)
+
+        with TransactionalRun(self.catalog, self.branch, code=code,
+                              registry=self.registry,
+                              run_id=f"ckpt_{step}") as txn:
+            if self.check_finite:
+                for leaf in jax.tree.leaves(host_params):
+                    if np.issubdtype(leaf.dtype, np.floating) and \
+                            not np.isfinite(
+                                leaf.astype(np.float32)).all():
+                        raise QualityError(
+                            f"checkpoint step {step}: non-finite params")
+            txn.write_table("params", put_pytree(self.store, host_params),
+                            message=f"params@{step}")
+            txn.write_table("opt_state", put_pytree(self.store, host_opt),
+                            message=f"opt@{step}")
+            txn.write_table("data_state", self.store.put_json(
+                {"step": step, **data_state}))
+            txn.write_table("metrics", self.store.put_json(
+                {"step": step, **{k: float(v) for k, v in metrics.items()}}))
+        head = self.catalog.head(self.branch)
+        return CheckpointRef(step=step, commit=head.id,
+                             run_id=f"ckpt_{step}")
+
+    # ------------------------------------------------------------------
+    def restore(self, like_params: Any, like_opt: Any, *,
+                ref: str | None = None
+                ) -> tuple[Any, Any, dict, dict] | None:
+        """Load the latest checkpoint from ``ref`` (default: the branch).
+
+        Guaranteed consistent: all four tables come from ONE commit."""
+        ref = ref or self.branch
+        head = self.catalog.head(ref)
+        if "params" not in head.tables:
+            return None
+        params = get_pytree(self.store, head.tables["params"], like_params)
+        opt = get_pytree(self.store, head.tables["opt_state"], like_opt)
+        data_state = self.store.get_json(head.tables["data_state"])
+        metrics = self.store.get_json(head.tables["metrics"])
+        return params, opt, data_state, metrics
+
+    def latest_step(self, ref: str | None = None) -> int | None:
+        head = self.catalog.head(ref or self.branch)
+        if "data_state" not in head.tables:
+            return None
+        return int(self.store.get_json(head.tables["data_state"])["step"])

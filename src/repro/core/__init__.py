@@ -1,0 +1,23 @@
+"""Core: the paper's contribution — contracts, versioning, transactions.
+
+Public API re-exports for the composable surface used by examples, the
+training framework, and tests.
+"""
+from repro.core.catalog import Catalog, Commit, Visibility
+from repro.core.contracts import CastDecl, check_edge, check_node, validate_table
+from repro.core.dag import DeclarativeNode, Pipeline, PythonNode
+from repro.core.errors import (
+    ContractAuthoringError, ContractCompositionError, ContractError,
+    ContractRuntimeError, MergeConflict, Moment, PlanError, QualityError,
+    RefConflict, ReproError, TransactionAborted, VisibilityError,
+)
+from repro.core.planner import Plan, plan
+from repro.core.runner import Client, RunResult
+from repro.core.schema import (
+    BOOL, DATETIME, FLOAT, FLOAT32, INT, INT32, INT64, STR, Nullable,
+    NotNull, Schema, TensorContract,
+)
+from repro.core.store import FileStore, MemoryStore, ObjectStore
+from repro.core.transactions import RunRegistry, RunState, TransactionalRun
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,401 @@
+"""Git-for-data catalog (paper §3.2 and §4).
+
+Implements the Alloy model's signatures executably:
+
+- a **Commit** is an immutable mapping ``{table -> snapshot}`` plus a
+  parent set (merge commits have two parents) — "an immutable, unique
+  reference to the state of all table snapshots at that moment";
+- a **Branch** is a movable reference to the HEAD of a commit chain;
+- a **Tag** is an immutable reference;
+- ``create_table``/``write_table`` is the only state-changing operation:
+  it allocates a fresh commit and advances the branch head (Listing 8);
+- **merge** applies changes atomically from source to destination
+  (three-way over the merge base, fast-forward when possible).
+
+Branch heads move via optimistic compare-and-swap (the paper's substrate
+guarantees this via a relational database; here a lock + expected-head
+check), so concurrent writers conflict instead of silently interleaving.
+
+**Visibility classes** (the Fig. 4 guardrail — see DESIGN.md §6): branches
+carry a :class:`Visibility`; transactional branches are system-owned;
+*aborted* branches are readable but not mergeable, and branching off one
+requires ``allow_reuse=True`` and yields a ``QUARANTINED`` branch that can
+only be merged after explicit re-verification. This makes the Alloy
+counterexample unrepresentable while preserving the paper's idempotent
+re-run optimization.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import hashlib
+import itertools
+import threading
+import time
+from typing import Any, Callable, Iterator, Mapping
+
+from repro.core.errors import (
+    BranchExists,
+    BranchNotFound,
+    CatalogError,
+    MergeConflict,
+    RefConflict,
+    VisibilityError,
+)
+from repro.core.store import MemoryStore, ObjectStore
+
+__all__ = ["Visibility", "Commit", "BranchInfo", "Catalog"]
+
+
+class Visibility(enum.Enum):
+    USER = "user"                # normal branch: read/write/merge
+    TXN = "txn"                  # live transactional branch (system-owned)
+    ABORTED = "aborted"          # failed txn branch: read-only, not mergeable
+    QUARANTINED = "quarantined"  # reuse of an aborted branch: merge gated
+    TAG = "tag"                  # immutable
+
+
+@dataclasses.dataclass(frozen=True)
+class Commit:
+    """Immutable lake state: {table -> snapshot id} + parent commit ids."""
+
+    id: str
+    tables: Mapping[str, str]
+    parents: tuple[str, ...]
+    message: str = ""
+    author: str = ""
+    run_id: str | None = None
+    timestamp: float = 0.0
+
+    def snapshot_of(self, table: str) -> str | None:
+        return self.tables.get(table)
+
+
+@dataclasses.dataclass
+class BranchInfo:
+    name: str
+    head: str
+    visibility: Visibility = Visibility.USER
+    owner_run: str | None = None   # for TXN branches: the owning run id
+    verified: bool = False         # for QUARANTINED: re-verification flag
+
+
+def _commit_id(tables: Mapping[str, str], parents: tuple[str, ...],
+               message: str, salt: str) -> str:
+    h = hashlib.sha256()
+    for t in sorted(tables):
+        h.update(f"{t}={tables[t]};".encode())
+    h.update(("|".join(parents) + "|" + message + "|" + salt).encode())
+    return h.hexdigest()[:24]
+
+
+class Catalog:
+    """The versioning control plane. All public methods are atomic."""
+
+    def __init__(self, store: ObjectStore | None = None,
+                 main: str = "main"):
+        self.store = store if store is not None else MemoryStore()
+        self._lock = threading.RLock()
+        self._commits: dict[str, Commit] = {}
+        self._branches: dict[str, BranchInfo] = {}
+        self._tags: dict[str, str] = {}
+        self._counter = itertools.count()
+        # The system starts with a single branch Main and a root commit
+        # (Init) — paper Listing 7.
+        root = Commit(id=_commit_id({}, (), "init", "0"), tables={},
+                      parents=(), message="init", timestamp=time.time())
+        self._commits[root.id] = root
+        self._branches[main] = BranchInfo(name=main, head=root.id)
+        self.main = main
+
+    # ------------------------------------------------------------------
+    # refs
+    # ------------------------------------------------------------------
+    def branch_info(self, name: str) -> BranchInfo:
+        with self._lock:
+            try:
+                return dataclasses.replace(self._branches[name])
+            except KeyError:
+                raise BranchNotFound(f"branch {name!r} does not exist") \
+                    from None
+
+    def head(self, ref: str) -> Commit:
+        """Resolve a ref (branch, tag, or commit id) to its Commit."""
+        with self._lock:
+            if ref in self._branches:
+                return self._commits[self._branches[ref].head]
+            if ref in self._tags:
+                return self._commits[self._tags[ref]]
+            if ref in self._commits:
+                return self._commits[ref]
+            raise BranchNotFound(f"unknown ref {ref!r}")
+
+    def branches(self) -> list[str]:
+        with self._lock:
+            return sorted(self._branches)
+
+    def commit(self, cid: str) -> Commit:
+        with self._lock:
+            try:
+                return self._commits[cid]
+            except KeyError:
+                raise CatalogError(f"unknown commit {cid!r}") from None
+
+    # ------------------------------------------------------------------
+    # branch lifecycle
+    # ------------------------------------------------------------------
+    def create_branch(self, name: str, from_ref: str, *,
+                      visibility: Visibility = Visibility.USER,
+                      owner_run: str | None = None,
+                      allow_reuse: bool = False) -> BranchInfo:
+        """Zero-copy branch: only a new movable ref is created (paper §3.2).
+
+        Branching off an ABORTED branch is refused unless
+        ``allow_reuse=True``, in which case the new branch is QUARANTINED
+        (the Fig. 4 guardrail).
+        """
+        with self._lock:
+            if name in self._branches or name in self._tags:
+                raise BranchExists(f"ref {name!r} already exists")
+            src_vis = (self._branches[from_ref].visibility
+                       if from_ref in self._branches else Visibility.USER)
+            vis = visibility
+            # ABORTED: the paper's Fig. 4 counterexample. TXN: a SECOND
+            # counterexample our hypothesis search found (test_model_check):
+            # branching from a LIVE transactional branch and merging
+            # launders the uncommitted state of a still-running run into
+            # main. Both require allow_reuse and yield QUARANTINED.
+            if src_vis in (Visibility.ABORTED, Visibility.QUARANTINED,
+                           Visibility.TXN) and vis is not Visibility.TXN:
+                if not allow_reuse:
+                    raise VisibilityError(
+                        f"cannot branch from {src_vis.value} branch "
+                        f"{from_ref!r} without allow_reuse=True "
+                        f"(see DESIGN.md §6 / paper Fig. 4)")
+                vis = Visibility.QUARANTINED
+            head = self.head(from_ref)
+            info = BranchInfo(name=name, head=head.id, visibility=vis,
+                              owner_run=owner_run)
+            self._branches[name] = info
+            return dataclasses.replace(info)
+
+    def delete_branch(self, name: str) -> None:
+        with self._lock:
+            if name == self.main:
+                raise CatalogError("cannot delete the main branch")
+            if name not in self._branches:
+                raise BranchNotFound(name)
+            del self._branches[name]
+
+    def tag(self, name: str, ref: str) -> str:
+        with self._lock:
+            if name in self._tags or name in self._branches:
+                raise BranchExists(f"ref {name!r} already exists")
+            cid = self.head(ref).id
+            self._tags[name] = cid
+            return cid
+
+    def mark(self, name: str, visibility: Visibility, *,
+             verified: bool | None = None) -> None:
+        """System-internal: change a branch's visibility class."""
+        with self._lock:
+            info = self._branches.get(name)
+            if info is None:
+                raise BranchNotFound(name)
+            info.visibility = visibility
+            if verified is not None:
+                info.verified = verified
+
+    # ------------------------------------------------------------------
+    # the only state-changing write (paper Listing 8)
+    # ------------------------------------------------------------------
+    def write_table(self, branch: str, table: str, snapshot: str, *,
+                    message: str = "", author: str = "",
+                    run_id: str | None = None,
+                    expected_head: str | None = None,
+                    _system: bool = False) -> Commit:
+        """Commit a new snapshot of ``table`` and advance the branch head.
+
+        Atomic w.r.t. concurrent writers: if ``expected_head`` is given and
+        the branch has moved, raises :class:`RefConflict` (optimistic CAS —
+        the paper's "optimistic locks guaranteed by a relational database").
+        """
+        with self._lock:
+            info = self._branches.get(branch)
+            if info is None:
+                raise BranchNotFound(branch)
+            if info.visibility in (Visibility.ABORTED, Visibility.TAG):
+                raise VisibilityError(
+                    f"branch {branch!r} is {info.visibility.value}: "
+                    f"read-only")
+            if info.visibility is Visibility.TXN and not _system:
+                raise VisibilityError(
+                    f"branch {branch!r} is a live transactional branch "
+                    f"owned by run {info.owner_run!r}")
+            if expected_head is not None and info.head != expected_head:
+                raise RefConflict(
+                    f"branch {branch!r} moved: expected {expected_head[:8]} "
+                    f"found {info.head[:8]}")
+            parent = self._commits[info.head]
+            tables = dict(parent.tables)
+            tables[table] = snapshot
+            cid = _commit_id(tables, (parent.id,), message,
+                             str(next(self._counter)))
+            commit = Commit(id=cid, tables=tables, parents=(parent.id,),
+                            message=message or f"write {table}",
+                            author=author, run_id=run_id,
+                            timestamp=time.time())
+            self._commits[cid] = commit
+            info.head = cid
+            return commit
+
+    # ------------------------------------------------------------------
+    # reads
+    # ------------------------------------------------------------------
+    def read_table(self, ref: str, table: str) -> str:
+        snap = self.head(ref).snapshot_of(table)
+        if snap is None:
+            raise CatalogError(f"table {table!r} not found at ref {ref!r}")
+        return snap
+
+    def tables(self, ref: str) -> Mapping[str, str]:
+        return dict(self.head(ref).tables)
+
+    def log(self, ref: str, limit: int = 50) -> list[Commit]:
+        out, cur = [], self.head(ref)
+        while cur is not None and len(out) < limit:
+            out.append(cur)
+            cur = (self._commits[cur.parents[0]] if cur.parents else None)
+        return out
+
+    # ------------------------------------------------------------------
+    # merge (paper §3.2/§3.3: logical, atomic)
+    # ------------------------------------------------------------------
+    def _ancestors(self, cid: str) -> set[str]:
+        seen, stack = set(), [cid]
+        while stack:
+            c = stack.pop()
+            if c in seen:
+                continue
+            seen.add(c)
+            stack.extend(self._commits[c].parents)
+        return seen
+
+    def merge_base(self, a: str, b: str) -> Commit:
+        with self._lock:
+            anc_a = self._ancestors(self.head(a).id)
+            cur = [self.head(b).id]
+            seen = set()
+            while cur:
+                nxt = []
+                for cid in cur:
+                    if cid in seen:
+                        continue
+                    seen.add(cid)
+                    if cid in anc_a:
+                        return self._commits[cid]
+                    nxt.extend(self._commits[cid].parents)
+                cur = nxt
+        raise CatalogError(f"no common ancestor of {a!r} and {b!r}")
+
+    def merge(self, source: str, into: str, *,
+              message: str = "", run_id: str | None = None,
+              expected_head: str | None = None,
+              _system: bool = False) -> Commit:
+        """Atomically apply changes from ``source`` to ``into``.
+
+        Fast-forward when ``into`` has not moved since the merge base,
+        else a three-way merge creating a two-parent commit; conflicting
+        table updates (both sides changed the same table since base)
+        raise :class:`MergeConflict`. Merging is purely logical — no
+        snapshot (physical data) is copied.
+        """
+        with self._lock:
+            src_info = self._branches.get(source)
+            if src_info is not None:
+                if src_info.visibility is Visibility.ABORTED:
+                    raise VisibilityError(
+                        f"branch {source!r} was aborted by run "
+                        f"{src_info.owner_run!r}: merging an aborted "
+                        f"transactional branch would republish a partial "
+                        f"run (paper Fig. 4)")
+                if (src_info.visibility is Visibility.QUARANTINED
+                        and not src_info.verified):
+                    raise VisibilityError(
+                        f"branch {source!r} is quarantined (built on an "
+                        f"aborted run) and has not been re-verified")
+                if src_info.visibility is Visibility.TXN and not _system:
+                    raise VisibilityError(
+                        f"branch {source!r} is a live transactional branch")
+            dst_info = self._branches.get(into)
+            if dst_info is None:
+                raise BranchNotFound(into)
+            if dst_info.visibility in (Visibility.ABORTED, Visibility.TAG):
+                raise VisibilityError(f"branch {into!r} is read-only")
+            if expected_head is not None and dst_info.head != expected_head:
+                raise RefConflict(
+                    f"branch {into!r} moved: expected {expected_head[:8]}")
+
+            src_head = self.head(source)
+            dst_head = self.head(into)
+            base = self.merge_base(source, into)
+
+            if src_head.id == base.id:
+                return dst_head  # nothing to merge
+            if dst_head.id == base.id:
+                # fast-forward: move the ref (zero-copy)
+                dst_info.head = src_head.id
+                return src_head
+
+            # three-way: detect table-level conflicts
+            changed_src = {t for t in set(src_head.tables) | set(base.tables)
+                           if src_head.tables.get(t) != base.tables.get(t)}
+            changed_dst = {t for t in set(dst_head.tables) | set(base.tables)
+                           if dst_head.tables.get(t) != base.tables.get(t)}
+            conflicts = {
+                t for t in changed_src & changed_dst
+                if src_head.tables.get(t) != dst_head.tables.get(t)}
+            if conflicts:
+                raise MergeConflict(
+                    f"tables changed on both branches since base: "
+                    f"{sorted(conflicts)}")
+            tables = dict(dst_head.tables)
+            for t in changed_src:
+                if t in src_head.tables:
+                    tables[t] = src_head.tables[t]
+                else:
+                    tables.pop(t, None)
+            cid = _commit_id(tables, (dst_head.id, src_head.id),
+                             message, str(next(self._counter)))
+            commit = Commit(
+                id=cid, tables=tables, parents=(dst_head.id, src_head.id),
+                message=message or f"merge {source} into {into}",
+                run_id=run_id, timestamp=time.time())
+            self._commits[cid] = commit
+            dst_info.head = cid
+            return commit
+
+    # ------------------------------------------------------------------
+    # introspection for tests / tooling
+    # ------------------------------------------------------------------
+    def diff(self, a: str, b: str) -> dict[str, tuple[str | None, str | None]]:
+        """Table-level diff {table: (snap@a, snap@b)} where they differ."""
+        ta, tb = self.tables(a), self.tables(b)
+        out = {}
+        for t in set(ta) | set(tb):
+            if ta.get(t) != tb.get(t):
+                out[t] = (ta.get(t), tb.get(t))
+        return out
+
+    def with_retry(self, fn: Callable[[], Any], *, attempts: int = 5,
+                   backoff_s: float = 0.0) -> Any:
+        """Retry an optimistic operation on :class:`RefConflict`."""
+        last: Exception | None = None
+        for _ in range(attempts):
+            try:
+                return fn()
+            except RefConflict as e:
+                last = e
+                if backoff_s:
+                    time.sleep(backoff_s)
+        raise last  # type: ignore[misc]

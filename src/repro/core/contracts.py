@@ -1,0 +1,254 @@
+"""Contract composition and validation (paper §3.1 + Appendix A).
+
+Three checking *moments* (Figure 1):
+
+1. **Authoring** (:func:`check_wellformed`) — a schema must be internally
+   consistent; lineage references must resolve.
+2. **Control plane** (:func:`check_edge`, :func:`check_node`) — *before*
+   any distributed execution, every edge of the DAG must compose: each
+   column a consumer declares as inherited must exist upstream with a
+   compatible type; *narrowing* (float→int, nullable→not-null) is legal
+   only when the node explicitly declares the cast/filter.
+3. **Worker** (:func:`validate_table`) — the physical data must conform
+   to the declared output schema before any result is persisted.
+
+"Dafny-style" pre/post-condition propagation (Appendix A): the planner
+calls :func:`provable_postconditions` to decide which worker-side checks
+are statically discharged and can be elided.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping
+
+from repro.core import schema as S
+from repro.core.errors import (
+    ContractAuthoringError,
+    ContractCompositionError,
+    ContractRuntimeError,
+)
+
+__all__ = [
+    "CastDecl", "check_wellformed", "check_edge", "check_node",
+    "validate_table", "provable_postconditions", "EdgeReport",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class CastDecl:
+    """An explicit cast declared by a node (``arrow_cast`` in Listing 5)."""
+
+    column: str
+    to: S.DType
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeReport:
+    """Result of composing one (upstream → downstream) edge."""
+
+    upstream: str
+    downstream: str
+    inherited: tuple[str, ...]
+    narrowed: tuple[str, ...]
+    fresh: tuple[str, ...]
+
+    def describe(self) -> str:
+        return (f"{self.upstream} -> {self.downstream}: "
+                f"inherited={list(self.inherited)} "
+                f"narrowed={list(self.narrowed)} fresh={list(self.fresh)}")
+
+
+# ---------------------------------------------------------------------------
+# Moment 1: authoring
+# ---------------------------------------------------------------------------
+
+def check_wellformed(schema: type[S.Schema]) -> None:
+    """Raise :class:`ContractAuthoringError` if the schema is ill-formed."""
+    seen: set[str] = set()
+    for name, col in schema.columns().items():
+        if not name.isidentifier():
+            raise ContractAuthoringError(
+                f"{schema.__name__}.{name}: not a valid column identifier")
+        if name in seen:  # pragma: no cover - dict keys are unique
+            raise ContractAuthoringError(
+                f"{schema.__name__}: duplicate column {name}")
+        seen.add(name)
+        if col.inherited_from is not None and "." not in col.inherited_from:
+            raise ContractAuthoringError(
+                f"{schema.__name__}.{name}: malformed lineage "
+                f"{col.inherited_from!r}")
+
+
+# ---------------------------------------------------------------------------
+# Moment 2: control plane
+# ---------------------------------------------------------------------------
+
+def _resolve_upstream(
+    col: S.Column,
+    inputs: Mapping[str, type[S.Schema]],
+) -> tuple[str, S.Column] | None:
+    """Find the upstream column this output column flows from.
+
+    Resolution order: explicit lineage ("Schema.col"), then by-name match
+    across inputs (the paper's "col2 is propagated as-is" convention).
+    Returns (input schema name, column) or None for fresh columns.
+    """
+    if col.inherited_from is not None:
+        sname, cname = col.inherited_from.rsplit(".", 1)
+        for iname, ischema in inputs.items():
+            if ischema.__name__ == sname and cname in ischema.columns():
+                return iname, ischema.columns()[cname]
+        # lineage names a schema that is not an input: composition error.
+        raise ContractCompositionError(
+            f"column {col.name!r} declares lineage {col.inherited_from!r} "
+            f"but no input provides it (inputs: "
+            f"{[s.__name__ for s in inputs.values()]})")
+    for iname, ischema in inputs.items():
+        if col.name in ischema.columns():
+            return iname, ischema.columns()[col.name]
+    return None
+
+
+def check_edge(
+    upstream: type[S.Schema],
+    downstream: type[S.Schema],
+    casts: Iterable[CastDecl] = (),
+) -> EdgeReport:
+    """Check that a single edge composes (convenience over check_node)."""
+    return check_node({upstream.__name__: upstream}, downstream, casts)
+
+
+def check_node(
+    inputs: Mapping[str, type[S.Schema]],
+    output: type[S.Schema],
+    casts: Iterable[CastDecl] = (),
+) -> EdgeReport:
+    """Control-plane composition check for one DAG node.
+
+    For every output column that is inherited (explicitly via lineage, or
+    implicitly by name), the upstream type must flow into the declared
+    type: identical or widenable with no cast; narrowable only with an
+    explicit :class:`CastDecl`; anything else is a composition error.
+    Nullability may only be narrowed (nullable → not-null) when declared
+    via ``[NotNull]`` lineage or a cast — widening (not-null → nullable)
+    is always safe.
+    """
+    for s in (*inputs.values(), output):
+        check_wellformed(s)
+    cast_by_col = {c.column: c for c in casts}
+    inherited, narrowed, fresh = [], [], []
+
+    for name, col in output.columns().items():
+        src = _resolve_upstream(col, inputs)
+        if src is None:
+            fresh.append(name)
+            continue
+        _, upcol = src
+        inherited.append(name)
+        # --- type flow ---
+        if S.widenable(upcol.dtype, col.dtype):
+            pass  # identity or implicit widening: always legal
+        elif S.narrowable(upcol.dtype, col.dtype):
+            cast = cast_by_col.get(name)
+            if cast is None:
+                raise ContractCompositionError(
+                    f"{output.__name__}.{name}: narrows {upcol.dtype.name} "
+                    f"-> {col.dtype.name} without an explicit cast "
+                    f"(paper §3.1: narrowing requires a declared cast)")
+            if cast.to != col.dtype:
+                raise ContractCompositionError(
+                    f"{output.__name__}.{name}: cast target "
+                    f"{cast.to.name} != declared type {col.dtype.name}")
+            narrowed.append(name)
+        else:
+            raise ContractCompositionError(
+                f"{output.__name__}.{name}: incompatible types "
+                f"{upcol.dtype.name} -> {col.dtype.name}")
+        # --- nullability flow ---
+        if upcol.nullable and not col.nullable:
+            # legal only when declared: [NotNull] lineage (inherited_from
+            # set and nullability narrowed) or an explicit cast.
+            declared = (col.inherited_from is not None) or (name in cast_by_col)
+            if not declared:
+                raise ContractCompositionError(
+                    f"{output.__name__}.{name}: narrows nullability without "
+                    f"an explicit [NotNull] declaration")
+            if name not in narrowed:
+                narrowed.append(name)
+
+    return EdgeReport(
+        upstream="+".join(s.__name__ for s in inputs.values()),
+        downstream=output.__name__,
+        inherited=tuple(inherited),
+        narrowed=tuple(narrowed),
+        fresh=tuple(fresh),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Moment 3: worker
+# ---------------------------------------------------------------------------
+
+def validate_table(table, schema: type[S.Schema], *,
+                   elide: frozenset[str] = frozenset(),
+                   name: str = "<table>") -> None:
+    """Validate physical data against its declared schema (worker moment).
+
+    ``table`` is a :class:`repro.data.tables.Table`. ``elide`` contains
+    column names whose null-check was statically discharged by the planner
+    (:func:`provable_postconditions`) and can be skipped.
+    """
+    cols = schema.columns()
+    missing = set(cols) - set(table.column_names())
+    if missing:
+        raise ContractRuntimeError(
+            f"{name}: missing columns {sorted(missing)} required by "
+            f"{schema.__name__}")
+    for cname, col in cols.items():
+        physical = table.logical_dtype(cname)
+        if physical != col.dtype.name:
+            raise ContractRuntimeError(
+                f"{name}.{cname}: physical dtype {physical} != declared "
+                f"{col.dtype.name}")
+        if not col.nullable and cname not in elide:
+            if table.has_nulls(cname):
+                raise ContractRuntimeError(
+                    f"{name}.{cname}: contract declares NOT NULL but data "
+                    f"contains nulls (paper §3.1: unexpected nulls are "
+                    f"contract violations)")
+
+
+# ---------------------------------------------------------------------------
+# "Dafny-style" static discharge (Appendix A)
+# ---------------------------------------------------------------------------
+
+def provable_postconditions(
+    inputs: Mapping[str, type[S.Schema]],
+    output: type[S.Schema],
+    *,
+    inspectable: bool,
+    null_preserving: bool,
+) -> frozenset[str]:
+    """Columns of ``output`` whose NOT-NULL check is statically provable.
+
+    Per Appendix A, the worker-side null check for an output column can be
+    elided when (1) the output schema is trusted/defined, (2) the node's
+    transformation language is inspectable (e.g. declarative select), and
+    (3) the transformation provably maintains nullability — here summarised
+    by ``null_preserving`` (our declarative ``Table.select`` without outer
+    joins is null-preserving for inherited columns).
+    """
+    if not (inspectable and null_preserving):
+        return frozenset()
+    provable = set()
+    for name, col in output.columns().items():
+        if col.nullable:
+            continue
+        src = _resolve_upstream(col, inputs)
+        if src is None:
+            continue  # fresh column: must be checked physically
+        _, upcol = src
+        if not upcol.nullable:
+            # upstream guarantees not-null, transformation preserves it.
+            provable.add(name)
+    return frozenset(provable)

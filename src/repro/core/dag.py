@@ -1,0 +1,245 @@
+"""Pipeline DAGs: ``Table(s) -> Table`` nodes with typed contracts.
+
+Bauplan restricts DAG nodes to the signature *Table(s) -> Table* (paper
+§3.3) but is agnostic about what happens inside. We model two node kinds,
+mirroring the paper's SQL/Python split:
+
+- :class:`PythonNode` — an *imperative* transformation (arbitrary Python
+  over :class:`~repro.data.tables.Table`). Not inspectable: casts must be
+  declared, and no worker-side checks can be statically elided.
+- :class:`DeclarativeNode` — a *declarative* transformation (select /
+  filter / join expression trees). Inspectable: the planner extracts
+  casts from ``arrow_cast`` markers and determines null-preservation,
+  enabling Appendix-A-style static discharge of runtime checks.
+
+The paper's authoring syntax is preserved: a node's parameters are
+annotated with input schemas and default to the upstream table name, the
+return annotation is the output schema (Listing 5)::
+
+    @pipeline.node()
+    def child_table(df: ParentSchema = "parent_table") -> ChildSchema:
+        ...
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import inspect
+from typing import Any, Callable, Mapping, Sequence
+
+from repro.core import schema as S
+from repro.core.contracts import CastDecl
+from repro.core.errors import PlanError
+from repro.data.tables import Expr, Table
+
+__all__ = ["Node", "PythonNode", "DeclarativeNode", "Pipeline"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Node:
+    """Common node metadata."""
+
+    name: str                           # output table name
+    inputs: Mapping[str, str]           # param name -> upstream table name
+    input_schemas: Mapping[str, type[S.Schema]]
+    output_schema: type[S.Schema]
+    casts: tuple[CastDecl, ...] = ()
+    inspectable: bool = False
+    null_preserving: bool = False
+
+    def run(self, tables: Mapping[str, Table]) -> Table:
+        raise NotImplementedError
+
+    def source(self) -> str:
+        return f"<node {self.name}>"
+
+
+@dataclasses.dataclass(frozen=True)
+class PythonNode(Node):
+    fn: Callable[..., Table] = None  # type: ignore[assignment]
+
+    def run(self, tables: Mapping[str, Table]) -> Table:
+        kwargs = {param: tables[t] for param, t in self.inputs.items()}
+        out = self.fn(**kwargs)
+        if not isinstance(out, Table):
+            raise PlanError(
+                f"node {self.name!r} must return a Table, got "
+                f"{type(out).__name__} (DAG nodes are Table(s) -> Table)")
+        return out
+
+    def source(self) -> str:
+        try:
+            return inspect.getsource(self.fn)
+        except (OSError, TypeError):
+            return f"<python {self.name}>"
+
+
+@dataclasses.dataclass(frozen=True)
+class DeclarativeNode(Node):
+    """select(exprs) [after optional filter / join] — inspectable."""
+
+    exprs: tuple[Expr, ...] = ()
+    filter_expr: Expr | None = None
+    join_with: str | None = None        # second input table name
+    join_on: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        # extract casts from arrow_cast markers; mark inspectable.
+        casts = list(self.casts)
+        for e in self.exprs:
+            target = getattr(e, "cast_target", None)
+            if target is not None:
+                casts.append(CastDecl(e.output_name(),
+                                      S.as_dtype(target)))
+        object.__setattr__(self, "casts", tuple(casts))
+        object.__setattr__(self, "inspectable", True)
+        # select/filter/inner-join cannot introduce nulls into inherited
+        # columns -> null-preserving (Appendix A condition (2)+(3)).
+        object.__setattr__(self, "null_preserving", True)
+
+    def run(self, tables: Mapping[str, Table]) -> Table:
+        (first_param, first_table), *rest = list(self.inputs.items())
+        t = tables[first_table]
+        if self.join_with is not None:
+            t = t.join(tables[self.join_with], on=list(self.join_on))
+        if self.filter_expr is not None:
+            t = t.filter(self.filter_expr)
+        if self.exprs:
+            t = t.select(list(self.exprs))
+        return t
+
+    def source(self) -> str:
+        parts = [f"select {[e.output_name() for e in self.exprs]}"]
+        if self.filter_expr is not None:
+            parts.append(f"filter {self.filter_expr.output_name()}")
+        if self.join_with:
+            parts.append(f"join {self.join_with} on {list(self.join_on)}")
+        return f"<declarative {self.name}: {'; '.join(parts)}>"
+
+
+class Pipeline:
+    """A named collection of nodes forming a DAG."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._nodes: dict[str, Node] = {}
+        self._source_schemas: dict[str, type[S.Schema]] = {}
+
+    # -- source tables (exist in the lake already) ----------------------
+    def source(self, table: str, schema: type[S.Schema]) -> None:
+        self._source_schemas[table] = schema
+
+    # -- authoring API ---------------------------------------------------
+    def node(self, *, name: str | None = None,
+             casts: Sequence[CastDecl] = ()) -> Callable:
+        """Decorator for imperative (Python) nodes, paper Listing 5 style."""
+
+        def deco(fn: Callable[..., Table]) -> Callable[..., Table]:
+            sig = inspect.signature(fn)
+            hints = dict(fn.__annotations__)
+            if any(isinstance(v, str) for v in hints.values()):
+                # PEP 563 (`from __future__ import annotations`): resolve
+                # string annotations against the caller's frame so Schema
+                # classes defined in function scope still work.
+                frame = inspect.currentframe().f_back
+                ns = dict(fn.__globals__)
+                if frame is not None:
+                    ns.update(frame.f_locals)
+                hints = {k: (eval(v, ns) if isinstance(v, str) else v)  # noqa: S307
+                         for k, v in hints.items()}
+            inputs: dict[str, str] = {}
+            input_schemas: dict[str, type[S.Schema]] = {}
+            for param in sig.parameters.values():
+                ann = hints.get(param.name)
+                if ann is None or not (isinstance(ann, type)
+                                       and issubclass(ann, S.Schema)):
+                    raise PlanError(
+                        f"node {fn.__name__!r}: parameter {param.name!r} "
+                        f"must be annotated with a Schema")
+                upstream = (param.default
+                            if param.default is not inspect.Parameter.empty
+                            else param.name)
+                if callable(upstream) and hasattr(upstream, "_node_name_"):
+                    upstream = upstream._node_name_
+                inputs[param.name] = str(upstream)
+                input_schemas[param.name] = ann
+            ret = hints.get("return")
+            if ret is None or not (isinstance(ret, type)
+                                   and issubclass(ret, S.Schema)):
+                raise PlanError(
+                    f"node {fn.__name__!r}: missing Schema return annotation")
+            node = PythonNode(
+                name=name or fn.__name__, inputs=inputs,
+                input_schemas=input_schemas, output_schema=ret,
+                casts=tuple(casts), fn=fn)
+            self.add(node)
+            fn._node_name_ = node.name  # allow `= other_fn` defaults
+            return fn
+        return deco
+
+    def sql(self, *, name: str, inputs: Mapping[str, str],
+            input_schemas: Mapping[str, type[S.Schema]],
+            output_schema: type[S.Schema],
+            exprs: Sequence[Expr] = (),
+            filter_expr: Expr | None = None,
+            join_with: str | None = None,
+            join_on: Sequence[str] = ()) -> DeclarativeNode:
+        """Register a declarative node (paper Listing 4's annotated SQL)."""
+        node = DeclarativeNode(
+            name=name, inputs=dict(inputs),
+            input_schemas=dict(input_schemas), output_schema=output_schema,
+            exprs=tuple(exprs), filter_expr=filter_expr,
+            join_with=join_with, join_on=tuple(join_on))
+        self.add(node)
+        return node
+
+    def add(self, node: Node) -> None:
+        if node.name in self._nodes or node.name in self._source_schemas:
+            raise PlanError(f"duplicate table/node name {node.name!r}")
+        self._nodes[node.name] = node
+
+    # -- structure --------------------------------------------------------
+    @property
+    def nodes(self) -> Mapping[str, Node]:
+        return dict(self._nodes)
+
+    @property
+    def source_schemas(self) -> Mapping[str, type[S.Schema]]:
+        return dict(self._source_schemas)
+
+    def topo_order(self) -> list[Node]:
+        """Topologically sorted nodes; raises PlanError on cycle/missing."""
+        order: list[Node] = []
+        state: dict[str, int] = {}  # 0=unvisited 1=visiting 2=done
+
+        def visit(name: str, chain: tuple[str, ...]) -> None:
+            if name in self._source_schemas:
+                return
+            node = self._nodes.get(name)
+            if node is None:
+                raise PlanError(
+                    f"node {chain[-1]!r} reads table {name!r} which is "
+                    f"neither a node output nor a declared source")
+            st = state.get(name, 0)
+            if st == 1:
+                raise PlanError(
+                    f"cycle detected: {' -> '.join(chain + (name,))}")
+            if st == 2:
+                return
+            state[name] = 1
+            for upstream in node.inputs.values():
+                visit(upstream, chain + (name,))
+            state[name] = 2
+            order.append(node)
+
+        for name in self._nodes:
+            visit(name, ())
+        return order
+
+    def code_hash(self) -> str:
+        h = hashlib.sha256()
+        for node in sorted(self._nodes.values(), key=lambda n: n.name):
+            h.update(node.name.encode())
+            h.update(node.source().encode())
+            h.update(node.output_schema.fingerprint().encode())
+        return h.hexdigest()[:16]

@@ -1,0 +1,98 @@
+"""Error taxonomy for the correct-by-design pipeline core.
+
+The paper's central design principle (§3) is *fail fast*: "we should never
+fail at a later moment if we could have failed at a previous one". Every
+error therefore carries the ``Moment`` at which it was raised so tests can
+assert the ordering property mechanically.
+"""
+from __future__ import annotations
+
+import enum
+
+
+class Moment(enum.IntEnum):
+    """The three moments of a run's life-cycle (paper §3, Figure 1).
+
+    Ordered: AUTHORING < CONTROL_PLANE < WORKER. A correct system surfaces
+    each class of failure at the *smallest* moment able to detect it.
+    """
+
+    AUTHORING = 1      # local code environment, before a run is triggered
+    CONTROL_PLANE = 2  # plan validation, before any distributed execution
+    WORKER = 3         # runtime, after execution but before persisting data
+
+
+class ReproError(Exception):
+    """Base class for all framework errors."""
+
+    moment: Moment = Moment.WORKER
+
+
+class ContractError(ReproError):
+    """A schema/contract violation (paper §3.1)."""
+
+
+class ContractCompositionError(ContractError):
+    """Adjacent DAG nodes do not compose (control-plane static check)."""
+
+    moment = Moment.CONTROL_PLANE
+
+
+class ContractAuthoringError(ContractError):
+    """A schema is ill-formed at definition time (authoring check)."""
+
+    moment = Moment.AUTHORING
+
+
+class ContractRuntimeError(ContractError):
+    """Physical data does not conform to its declared schema (worker check)."""
+
+    moment = Moment.WORKER
+
+
+class CatalogError(ReproError):
+    """Versioning layer errors (paper §3.2)."""
+
+
+class BranchNotFound(CatalogError):
+    pass
+
+
+class BranchExists(CatalogError):
+    pass
+
+
+class RefConflict(CatalogError):
+    """Optimistic CAS on a branch head failed (concurrent writer)."""
+
+
+class MergeConflict(CatalogError):
+    """Both branches changed the same table since the merge base."""
+
+
+class VisibilityError(CatalogError):
+    """Operation violates branch visibility rules (the Fig. 4 guardrail)."""
+
+
+class TransactionError(ReproError):
+    """Transactional run protocol errors (paper §3.3)."""
+
+
+class TransactionAborted(TransactionError):
+    """The run failed; its transactional branch was preserved for debugging."""
+
+    def __init__(self, msg: str, branch: str | None = None,
+                 cause: BaseException | None = None):
+        super().__init__(msg)
+        self.branch = branch
+        self.cause = cause
+
+
+class PlanError(ReproError):
+    """DAG is structurally invalid (cycle, missing input, duplicate output)."""
+
+    moment = Moment.CONTROL_PLANE
+
+
+class QualityError(ContractRuntimeError):
+    """A data-quality verifier (expectation) failed on the worker."""

@@ -1,0 +1,157 @@
+"""Executable port of the paper's Alloy model (§4, Appendix B).
+
+The Alloy signatures map 1:1 onto the real implementation, so model
+checking here exercises the *actual* catalog code rather than a toy:
+
+=============  =====================================================
+Alloy          here
+=============  =====================================================
+``Table``      table name (str)
+``Snapshot``   snapshot id (str) — fresh per write, tagged by run
+``Commit``     :class:`repro.core.catalog.Commit` (tables, parents)
+``Branch``     catalog branch (movable head)
+``createTable``:meth:`Catalog.write_table` (the only mutating op)
+``Run``        :class:`ModelRun` (pipeline plan, idx, lastCommit)
+=============  =====================================================
+
+Two system variants:
+
+- ``guarded=True``  — the shipped system: aborted transactional branches
+  get :class:`Visibility.ABORTED` (not mergeable, reuse quarantined).
+- ``guarded=False`` — the pre-fix system of Fig. 4: an aborted branch is
+  left as an ordinary USER branch, so other actors can branch off it and
+  merge back.
+
+The **global consistency** predicate formalizes Fig. 3/4: a ref is *torn
+with respect to run r* iff it exposes a strict, non-empty subset of r's
+published tables (partial publication), or any table of an aborted run.
+Hypothesis stateful tests in ``tests/test_model_check.py`` search traces:
+the unguarded model reaches torn states (the paper's counterexample);
+the guarded model must never.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Literal, Sequence
+
+from repro.core.catalog import Catalog, Visibility
+from repro.core.errors import CatalogError, ReproError, VisibilityError
+
+__all__ = ["ModelRun", "LakehouseModel"]
+
+
+@dataclasses.dataclass
+class ModelRun:
+    """Alloy's ``Run``: a pipeline (seq Table) + progress counter."""
+
+    run_id: str
+    plan: tuple[str, ...]              # sequence of tables to write
+    mode: Literal["direct", "txn"]
+    target: str
+    idx: int = 0                       # next step to execute
+    status: str = "running"            # running | committed | aborted
+    branch: str | None = None          # txn branch (txn mode)
+    written: dict[str, str] = dataclasses.field(default_factory=dict)
+
+    @property
+    def done(self) -> bool:
+        return self.idx >= len(self.plan)
+
+
+class LakehouseModel:
+    """Driveable state machine over the real catalog."""
+
+    def __init__(self, *, guarded: bool = True):
+        self.catalog = Catalog()
+        self.guarded = guarded
+        self._runs: dict[str, ModelRun] = {}
+        self._fresh = itertools.count()
+        self._branch_counter = itertools.count()
+
+    # ------------------------------------------------------------------
+    # Run lifecycle (Alloy: begin / step / finish / fail)
+    # ------------------------------------------------------------------
+    def begin_run(self, plan: Sequence[str], *, target: str = "main",
+                  mode: Literal["direct", "txn"] = "txn") -> ModelRun:
+        rid = f"r{next(self._fresh)}"
+        run = ModelRun(run_id=rid, plan=tuple(plan), mode=mode,
+                       target=target)
+        if mode == "txn":
+            run.branch = f"txn/{rid}"
+            self.catalog.create_branch(run.branch, target,
+                                       visibility=Visibility.TXN,
+                                       owner_run=rid)
+        self._runs[rid] = run
+        return run
+
+    def step_run(self, run: ModelRun) -> None:
+        """Alloy: apply ``createTable`` to the next planned table."""
+        assert run.status == "running" and not run.done
+        table = run.plan[run.idx]
+        snap = f"{table}@{run.run_id}#{run.idx}"
+        branch = run.branch if run.mode == "txn" else run.target
+        self.catalog.write_table(branch, table, snap, run_id=run.run_id,
+                                 _system=(run.mode == "txn"))
+        run.written[table] = snap
+        run.idx += 1
+
+    def finish_run(self, run: ModelRun) -> None:
+        assert run.status == "running" and run.done
+        if run.mode == "txn":
+            self.catalog.merge(run.branch, into=run.target,
+                               run_id=run.run_id, _system=True)
+            self.catalog.delete_branch(run.branch)
+        run.status = "committed"
+
+    def fail_run(self, run: ModelRun) -> None:
+        """Mid-run failure. Direct mode just stops (torn!); txn aborts."""
+        assert run.status == "running"
+        run.status = "aborted"
+        if run.mode == "txn":
+            if self.guarded:
+                self.catalog.mark(run.branch, Visibility.ABORTED)
+            else:
+                # pre-fix system: the dangling branch looks like any other
+                # branch (the Fig. 4 hazard).
+                self.catalog.mark(run.branch, Visibility.USER)
+
+    # ------------------------------------------------------------------
+    # Arbitrary-actor operations (the agent in Fig. 4)
+    # ------------------------------------------------------------------
+    def actor_branch(self, from_ref: str, *,
+                     allow_reuse: bool = False) -> str:
+        name = f"b{next(self._branch_counter)}"
+        self.catalog.create_branch(name, from_ref, allow_reuse=allow_reuse)
+        return name
+
+    def actor_write(self, branch: str, table: str) -> str:
+        snap = f"{table}@actor#{next(self._fresh)}"
+        self.catalog.write_table(branch, table, snap)
+        return snap
+
+    def actor_merge(self, source: str, into: str = "main") -> None:
+        self.catalog.merge(source, into=into)
+
+    # ------------------------------------------------------------------
+    # Global consistency predicate (Fig. 3/4)
+    # ------------------------------------------------------------------
+    def torn_runs(self, ref: str = "main") -> list[str]:
+        """Runs w.r.t. which ``ref`` is globally inconsistent."""
+        tables = self.catalog.tables(ref)
+        torn = []
+        for run in self._runs.values():
+            if not run.written:
+                continue
+            visible = {t for t, s in run.written.items()
+                       if tables.get(t) == s}
+            if run.status == "committed":
+                continue  # committed runs may be partially overwritten later
+            # aborted / still-running runs: NO table of theirs may be
+            # visible on a published ref; partial visibility = torn.
+            if visible:
+                torn.append(run.run_id)
+        return torn
+
+    def is_consistent(self, ref: str = "main") -> bool:
+        return not self.torn_runs(ref)

@@ -1,0 +1,104 @@
+"""The control plane: validate a DAG *before* any distributed execution.
+
+Paper §3/Figure 1, moment (2): "before scheduling any distributed
+execution, the control plane can parse the DAG metadata and validate that
+adjacent nodes compose (every referenced column exists with a compatible
+type, and — if the transformation language allows inspection — casts are
+present when necessary)".
+
+:func:`plan` performs, in order:
+  1. structural validation (acyclicity, resolvable inputs, unique outputs);
+  2. per-node contract composition (:func:`repro.core.contracts.check_node`)
+     including cast/narrowing legality;
+  3. Appendix-A static discharge: computes, per node, the set of NOT-NULL
+     checks that are provable and can be elided at the worker.
+
+The result is an immutable :class:`Plan`; :mod:`repro.core.runner`
+executes plans, never raw pipelines — so an invalid DAG can never reach
+a worker ("ill-typed pipelines should not be planned").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+from repro.core import schema as S
+from repro.core.contracts import (EdgeReport, check_node,
+                                  provable_postconditions)
+from repro.core.dag import Node, Pipeline
+from repro.core.errors import PlanError
+
+__all__ = ["PlanStep", "Plan", "plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanStep:
+    node: Node
+    report: EdgeReport
+    elided_null_checks: frozenset[str]  # statically discharged (App. A)
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    pipeline_name: str
+    code_hash: str
+    steps: tuple[PlanStep, ...]
+    source_schemas: Mapping[str, type[S.Schema]]
+
+    @property
+    def output_tables(self) -> tuple[str, ...]:
+        return tuple(s.node.name for s in self.steps)
+
+    def describe(self) -> str:
+        lines = [f"plan {self.pipeline_name} (code={self.code_hash})"]
+        for s in self.steps:
+            el = (f" [elided null-checks: {sorted(s.elided_null_checks)}]"
+                  if s.elided_null_checks else "")
+            lines.append(f"  {s.report.describe()}{el}")
+        return "\n".join(lines)
+
+
+def plan(pipeline: Pipeline) -> Plan:
+    """Validate and compile a pipeline into an executable Plan.
+
+    Raises errors at Moment.CONTROL_PLANE; nothing here touches data.
+    """
+    # 1. structure: topo sort raises on cycles / missing inputs.
+    order = pipeline.topo_order()
+
+    # map table name -> schema as published by sources and earlier nodes
+    published: dict[str, type[S.Schema]] = dict(pipeline.source_schemas)
+
+    steps: list[PlanStep] = []
+    for node in order:
+        # 2. contract composition: inputs must exist with known schemas.
+        input_schemas: dict[str, type[S.Schema]] = {}
+        for param, table in node.inputs.items():
+            if table not in published:
+                raise PlanError(
+                    f"node {node.name!r}: input table {table!r} has no "
+                    f"published schema")
+            declared = node.input_schemas[param]
+            actual = published[table]
+            if declared.fingerprint() != actual.fingerprint():
+                raise PlanError(
+                    f"node {node.name!r}: declares input {param}: "
+                    f"{declared.__name__} but upstream {table!r} publishes "
+                    f"{actual.__name__} "
+                    f"(declared={declared.names()}, actual={actual.names()})")
+            input_schemas[table] = actual
+        report = check_node(input_schemas, node.output_schema,
+                            casts=node.casts)
+        # 3. static discharge (only for inspectable nodes).
+        elided = provable_postconditions(
+            input_schemas, node.output_schema,
+            inspectable=node.inspectable,
+            null_preserving=node.null_preserving)
+        steps.append(PlanStep(node=node, report=report,
+                              elided_null_checks=elided))
+        published[node.name] = node.output_schema
+
+    return Plan(pipeline_name=pipeline.name,
+                code_hash=pipeline.code_hash(),
+                steps=tuple(steps),
+                source_schemas=dict(pipeline.source_schemas))

@@ -1,0 +1,132 @@
+"""The worker: execute a validated Plan inside a transactional run.
+
+Paper Figure 1 moments (2)→(3): the control plane hands a :class:`Plan`
+to a worker; the worker reads source tables *from the pinned start
+commit* (snapshot reads), executes nodes, validates each output against
+its declared schema **before** persisting (moment 3), writes results to
+the transactional branch, runs user verifiers, and finally publishes
+atomically — all outputs of the run or none (§3.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+from repro.core.catalog import Catalog
+from repro.core.contracts import validate_table
+from repro.core.errors import TransactionAborted
+from repro.core.planner import Plan
+from repro.core.quality import Verifier
+from repro.core.transactions import RunRegistry, RunState, TransactionalRun
+from repro.data.tables import Table
+
+__all__ = ["RunResult", "Client"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RunResult:
+    state: RunState
+    tables: Mapping[str, str]  # table -> snapshot key written by this run
+
+
+class Client:
+    """The user-facing API of paper Listing 6.
+
+    Wraps a catalog + object store + run registry and exposes
+    ``create_branch`` / ``run`` / ``merge`` / ``get_run``.
+    """
+
+    def __init__(self, catalog: Catalog | None = None,
+                 registry: RunRegistry | None = None):
+        self.catalog = catalog if catalog is not None else Catalog()
+        self.registry = registry if registry is not None else RunRegistry()
+        self.store = self.catalog.store
+
+    # -- Git-for-data surface (Listing 6) --------------------------------
+    def create_branch(self, name: str, from_ref: str = "main", **kw):
+        return self.catalog.create_branch(name, from_ref, **kw)
+
+    def merge(self, source: str, into: str = "main", **kw):
+        return self.catalog.merge(source, into=into, **kw)
+
+    def get_run(self, run_id: str) -> RunState:
+        return self.registry.get_run(run_id)
+
+    def tag(self, name: str, ref: str) -> str:
+        return self.catalog.tag(name, ref)
+
+    # -- data access -------------------------------------------------------
+    def write_source_table(self, branch: str, name: str, table: Table,
+                           message: str = "") -> str:
+        snap = table.to_blobs(self.store)
+        self.catalog.write_table(branch, name, snap, message=message)
+        return snap
+
+    def read_table(self, ref: str, name: str) -> Table:
+        snap = self.catalog.read_table(ref, name)
+        return Table.from_blobs(self.store, snap)
+
+    # -- the run API (§3.3 protocol over a full DAG plan) --------------------
+    def run(self, plan: Plan, ref: str = "main", *,
+            verifiers: Mapping[str, Sequence[Verifier]] | None = None,
+            dry_run: bool = False,
+            fail_after: str | None = None) -> RunResult:
+        """Execute ``plan`` transactionally against branch ``ref``.
+
+        ``verifiers`` maps table name -> quality checks run at step (3).
+        ``fail_after`` (testing hook) injects a failure after the named
+        node completes, to exercise the abort path deterministically.
+        """
+        if dry_run:
+            # plan is already validated; nothing to execute.
+            return RunResult(
+                state=RunState(run_id="dry", ref=self.catalog.head(ref).id,
+                               code_hash=plan.code_hash, target_branch=ref,
+                               txn_branch="", status="dry"),
+                tables={})
+
+        verifiers = dict(verifiers or {})
+        written: dict[str, str] = {}
+        txn = TransactionalRun(self.catalog, ref, code=plan.code_hash,
+                               registry=self.registry)
+        txn.begin()
+        # snapshot reads: sources resolve against the txn branch head,
+        # which was forked from the start commit — reads are stable even
+        # if `ref` moves concurrently.
+        cache: dict[str, Table] = {}
+
+        def load(table: str) -> Table:
+            if table not in cache:
+                snap = self.catalog.read_table(txn.branch, table)
+                cache[table] = Table.from_blobs(self.store, snap)
+            return cache[table]
+
+        try:
+            for step in plan.steps:
+                node = step.node
+                inputs = {t: load(t) for t in node.inputs.values()}
+                out = node.run(inputs)
+                # moment (3): validate physical data BEFORE persisting.
+                validate_table(out, node.output_schema,
+                               elide=step.elided_null_checks,
+                               name=node.name)
+                for check in verifiers.get(node.name, ()):  # step (3)
+                    check(out)
+                snap = out.to_blobs(self.store)
+                txn.write_table(node.name, snap,
+                                message=f"{plan.pipeline_name}:{node.name}")
+                written[node.name] = snap
+                cache[node.name] = out
+                if fail_after == node.name:
+                    raise RuntimeError(
+                        f"injected failure after node {node.name!r}")
+            txn.commit()
+        except TransactionAborted:
+            raise
+        except Exception as e:
+            txn.abort(e)
+            raise TransactionAborted(
+                f"run {txn.run_id} aborted: {e}", branch=txn.branch,
+                cause=e) from e
+        return RunResult(state=self.registry.get_run(txn.run_id),
+                         tables=written)

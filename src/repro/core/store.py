@@ -1,0 +1,202 @@
+"""Content-addressed immutable object store (paper §3.2, physical layer).
+
+The paper's physical substrate is parquet + snapshot files immutably
+stored in object storage; branching and merging are purely *logical*
+(zero-copy). We reproduce that split: this module stores immutable,
+content-addressed blobs; :mod:`repro.core.catalog` stores only references.
+
+Two backends:
+
+- :class:`MemoryStore` — in-process dict, used by tests and the planner.
+- :class:`FileStore`   — a directory of ``objects/<aa>/<hash>`` files with
+  atomic single-blob put (write-temp + rename), the "S3 put" the paper
+  assumes. Used by checkpointing so restarts survive process death.
+
+Snapshots of structured artifacts (tables, pytrees) are serialized via
+:func:`put_pytree` / :func:`get_pytree`: leaves go in as raw array blobs,
+the tree-structure goes in as a JSON manifest — so two snapshots sharing
+leaves (e.g. a merge, or an unchanged optimizer slot) share physical blobs,
+which is exactly the paper's copy-on-write story.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+import tempfile
+import threading
+from typing import Any, Iterator, Mapping
+
+import numpy as np
+
+__all__ = ["ObjectStore", "MemoryStore", "FileStore", "put_pytree",
+           "get_pytree", "content_hash"]
+
+
+def content_hash(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+class ObjectStore:
+    """Abstract immutable blob store keyed by content hash."""
+
+    def put(self, data: bytes) -> str:
+        raise NotImplementedError
+
+    def get(self, key: str) -> bytes:
+        raise NotImplementedError
+
+    def __contains__(self, key: str) -> bool:
+        raise NotImplementedError
+
+    def keys(self) -> Iterator[str]:
+        raise NotImplementedError
+
+    # -- structured helpers -------------------------------------------
+    def put_json(self, obj: Any) -> str:
+        return self.put(json.dumps(obj, sort_keys=True).encode())
+
+    def get_json(self, key: str) -> Any:
+        return json.loads(self.get(key).decode())
+
+    def put_array(self, arr) -> str:
+        arr = np.asarray(arr)
+        # ml_dtypes (bfloat16 etc.) are not .npy-native: store the raw
+        # bits viewed as uint and a one-line dtype header.
+        dtype_name = arr.dtype.name
+        if arr.dtype.kind not in ("U", "S") and (
+                arr.dtype.kind == "V" or dtype_name not in np.sctypeDict):
+            raw = arr.view(np.uint8 if arr.dtype.itemsize == 1 else
+                           np.uint16 if arr.dtype.itemsize == 2 else
+                           np.uint32)
+        else:
+            raw = arr
+        buf = io.BytesIO()
+        buf.write(f"{dtype_name}\n".encode())
+        np.save(buf, raw, allow_pickle=False)
+        return self.put(buf.getvalue())
+
+    def get_array(self, key: str) -> np.ndarray:
+        buf = io.BytesIO(self.get(key))
+        dtype_name = buf.readline().decode().strip()
+        raw = np.load(buf, allow_pickle=False)
+        if raw.dtype.name != dtype_name:
+            import ml_dtypes  # shipped with jax
+            raw = raw.view(np.dtype(getattr(ml_dtypes, dtype_name)))
+        return raw
+
+
+class MemoryStore(ObjectStore):
+    def __init__(self):
+        self._blobs: dict[str, bytes] = {}
+        self._lock = threading.Lock()
+
+    def put(self, data: bytes) -> str:
+        key = content_hash(data)
+        with self._lock:
+            # immutable: put of existing key is a no-op (dedup)
+            self._blobs.setdefault(key, bytes(data))
+        return key
+
+    def get(self, key: str) -> bytes:
+        try:
+            return self._blobs[key]
+        except KeyError:
+            raise KeyError(f"object {key!r} not in store") from None
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._blobs
+
+    def keys(self) -> Iterator[str]:
+        return iter(list(self._blobs))
+
+    def __len__(self) -> int:
+        return len(self._blobs)
+
+
+class FileStore(ObjectStore):
+    """Filesystem-backed store with atomic single-blob put.
+
+    Layout: ``<root>/objects/<first2>/<hash>``. Put is write-to-temp then
+    ``os.replace`` (atomic on POSIX) — the single-object atomicity the
+    paper assumes of S3/Iceberg and builds on top of.
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(os.path.join(root, "objects"), exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, "objects", key[:2], key)
+
+    def put(self, data: bytes) -> str:
+        key = content_hash(data)
+        path = self._path(key)
+        if os.path.exists(path):
+            return key  # dedup
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path))
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)  # atomic publish
+        finally:
+            if os.path.exists(tmp):  # pragma: no cover - crash path
+                os.unlink(tmp)
+        return key
+
+    def get(self, key: str) -> bytes:
+        path = self._path(key)
+        if not os.path.exists(path):
+            raise KeyError(f"object {key!r} not in store")
+        with open(path, "rb") as f:
+            return f.read()
+
+    def __contains__(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def keys(self) -> Iterator[str]:
+        objdir = os.path.join(self.root, "objects")
+        for d in os.listdir(objdir):
+            for k in os.listdir(os.path.join(objdir, d)):
+                yield k
+
+
+# ---------------------------------------------------------------------------
+# Pytree snapshots (copy-on-write structured artifacts)
+# ---------------------------------------------------------------------------
+
+def put_pytree(store: ObjectStore, tree: Any) -> str:
+    """Store a pytree; returns the manifest key (the snapshot id).
+
+    Leaves are stored as individual array blobs, so snapshots that share
+    leaves share storage — logical copies are zero-copy, as in the paper.
+    """
+    import jax
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    leaf_keys = [store.put_array(leaf) for leaf in leaves]
+    manifest = {"treedef": str(treedef), "leaves": leaf_keys,
+                "kind": "pytree"}
+    return store.put_json(manifest)
+
+
+def get_pytree(store: ObjectStore, key: str, like: Any) -> Any:
+    """Load a pytree snapshot; ``like`` provides the tree structure."""
+    import jax
+
+    manifest = store.get_json(key)
+    leaves = [store.get_array(k) for k in manifest["leaves"]]
+    _, treedef = jax.tree_util.tree_flatten(like)
+    if str(treedef) != manifest["treedef"]:
+        raise ValueError(
+            "snapshot treedef mismatch: stored structure differs from "
+            "`like` structure (elastic reshard should go through "
+            "repro.distributed.elastic)")
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def get_pytree_leaves(store: ObjectStore, key: str) -> list[np.ndarray]:
+    manifest = store.get_json(key)
+    return [store.get_array(k) for k in manifest["leaves"]]

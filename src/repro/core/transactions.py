@@ -1,0 +1,224 @@
+"""Transactional pipeline runs (paper §3.3).
+
+The run protocol, verbatim from the paper — for target branch ``B``:
+
+1. automatically create a new transactional branch ``B'`` from ``B``;
+2. write the DAG tables into ``B'`` (each write an atomic commit);
+3. run data tests / user-defined verifiers on ``B'``;
+4. only if no code or data error is raised, merge ``B'`` back into ``B``
+   and delete it.
+
+On failure the transactional branch is marked ABORTED and **preserved**
+so the faulty intermediate assets can be queried for triage — but the
+catalog's visibility rules guarantee it can never be merged (Fig. 4).
+
+Every run is uniquely identified and pinned to the state of the lake
+(start commit) and of the code (a content hash), giving the paper's
+reproducibility story: ``registry.get_run(run_id)`` returns everything
+needed to replay the run (Listing 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import uuid
+from typing import Any, Callable, Mapping, Sequence
+
+from repro.core.catalog import Catalog, Commit, Visibility
+from repro.core.errors import TransactionAborted, TransactionError
+from repro.core.store import ObjectStore, content_hash
+
+__all__ = ["RunState", "RunRegistry", "TransactionalRun", "run_transaction"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RunState:
+    """Immutable record returned by a run (paper Listing 6)."""
+
+    run_id: str
+    ref: str                   # start commit id (the data state)
+    code_hash: str             # content hash of the DAG code
+    target_branch: str
+    txn_branch: str
+    status: str                # "running" | "committed" | "aborted"
+    final_commit: str | None = None
+    error: str | None = None
+    started_at: float = 0.0
+    finished_at: float | None = None
+
+
+class RunRegistry:
+    """run_id -> RunState bookkeeping (in the paper: control-plane DB)."""
+
+    def __init__(self):
+        self._runs: dict[str, RunState] = {}
+
+    def record(self, state: RunState) -> None:
+        self._runs[state.run_id] = state
+
+    def get_run(self, run_id: str) -> RunState:
+        try:
+            return self._runs[run_id]
+        except KeyError:
+            raise TransactionError(f"unknown run_id {run_id!r}") from None
+
+    def runs(self) -> list[RunState]:
+        return list(self._runs.values())
+
+
+class TransactionalRun:
+    """Context-managed implementation of the §3.3 protocol.
+
+    Usage::
+
+        with TransactionalRun(catalog, target="main", code=b"...") as txn:
+            txn.write_table("parent", snap_p)
+            txn.write_table("child", snap_c)
+            txn.verify(lambda read: check_quality(read("child")))
+        # exit: atomically merged into `main`; on exception: aborted,
+        # branch preserved as `txn.branch` with Visibility.ABORTED.
+    """
+
+    def __init__(self, catalog: Catalog, target: str, *,
+                 code: bytes | str = b"", registry: RunRegistry | None = None,
+                 run_id: str | None = None, author: str = "",
+                 keep_branch_on_success: bool = False):
+        self.catalog = catalog
+        self.target = target
+        self.registry = registry
+        self.author = author
+        self.keep_branch_on_success = keep_branch_on_success
+        self.run_id = run_id or f"run_{uuid.uuid4().hex[:12]}"
+        code_bytes = code.encode() if isinstance(code, str) else code
+        self.code_hash = content_hash(code_bytes)[:16]
+        self.branch: str | None = None
+        self._start_commit: str | None = None
+        self._verifiers: list[Callable[[Callable[[str], str]], Any]] = []
+        self._status = "created"
+        self._started_at = 0.0
+
+    # ------------------------------------------------------------------
+    def begin(self) -> "TransactionalRun":
+        if self._status != "created":
+            raise TransactionError(f"run {self.run_id} already begun")
+        self._started_at = time.time()
+        head = self.catalog.head(self.target)
+        self._start_commit = head.id
+        self.branch = f"txn/{self.run_id}"
+        # step 1: system-created transactional branch
+        self.catalog.create_branch(
+            self.branch, self.target, visibility=Visibility.TXN,
+            owner_run=self.run_id)
+        self._status = "running"
+        self._record()
+        return self
+
+    # step 2: writes — sandboxed on the transactional branch
+    def write_table(self, table: str, snapshot: str, *,
+                    message: str = "") -> Commit:
+        self._require_running()
+        return self.catalog.write_table(
+            self.branch, table, snapshot, message=message,
+            author=self.author, run_id=self.run_id, _system=True)
+
+    def read_table(self, table: str) -> str:
+        """Read within the transaction (sees own writes, snapshot reads)."""
+        self._require_running()
+        return self.catalog.read_table(self.branch, table)
+
+    # step 3: verifiers — run on B' before publication
+    def verify(self, fn: Callable[[Callable[[str], str]], Any]) -> None:
+        """Register (and immediately run) a verifier against B'.
+
+        ``fn`` receives a reader ``read(table) -> snapshot`` bound to the
+        transactional branch. Any exception aborts the run.
+        """
+        self._require_running()
+        self._verifiers.append(fn)
+        try:
+            fn(self.read_table)
+        except Exception as e:
+            self.abort(e)
+            raise TransactionAborted(
+                f"verifier failed: {e}", branch=self.branch, cause=e) from e
+
+    # step 4: atomic publication
+    def commit(self) -> Commit:
+        self._require_running()
+        try:
+            merged = self.catalog.merge(
+                self.branch, into=self.target, run_id=self.run_id,
+                message=f"txn commit {self.run_id}", _system=True)
+        except Exception as e:
+            self.abort(e)
+            raise TransactionAborted(
+                f"publication failed: {e}", branch=self.branch,
+                cause=e) from e
+        self._status = "committed"
+        if not self.keep_branch_on_success:
+            self.catalog.delete_branch(self.branch)
+        self._record(final_commit=merged.id)
+        return merged
+
+    def abort(self, error: BaseException | str | None = None) -> None:
+        """Mark the transactional branch ABORTED; keep it for triage."""
+        if self._status != "running":
+            return
+        self._status = "aborted"
+        # the branch stays: "reachable by any user for debugging and
+        # inspection" — but Visibility.ABORTED means it can never merge.
+        self.catalog.mark(self.branch, Visibility.ABORTED)
+        self._record(error=str(error) if error else None)
+
+    # ------------------------------------------------------------------
+    def __enter__(self) -> "TransactionalRun":
+        return self.begin()
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if exc_type is None:
+            self.commit()
+            return False
+        if not isinstance(exc, TransactionAborted):
+            self.abort(exc)
+        return False  # propagate
+
+    # ------------------------------------------------------------------
+    def _require_running(self) -> None:
+        if self._status != "running":
+            raise TransactionError(
+                f"run {self.run_id} is {self._status}, not running")
+
+    def _record(self, final_commit: str | None = None,
+                error: str | None = None) -> None:
+        if self.registry is None:
+            return
+        self.registry.record(RunState(
+            run_id=self.run_id, ref=self._start_commit or "",
+            code_hash=self.code_hash, target_branch=self.target,
+            txn_branch=self.branch or "", status=self._status,
+            final_commit=final_commit, error=error,
+            started_at=self._started_at,
+            finished_at=(time.time()
+                         if self._status in ("committed", "aborted")
+                         else None)))
+
+
+def run_transaction(
+    catalog: Catalog,
+    target: str,
+    writes: Mapping[str, str] | Sequence[tuple[str, str]],
+    *,
+    verifiers: Sequence[Callable[[Callable[[str], str]], Any]] = (),
+    code: bytes | str = b"",
+    registry: RunRegistry | None = None,
+) -> Commit:
+    """One-shot functional form of the protocol."""
+    items = writes.items() if isinstance(writes, Mapping) else writes
+    with TransactionalRun(catalog, target, code=code,
+                          registry=registry) as txn:
+        for table, snap in items:
+            txn.write_table(table, snap)
+        for v in verifiers:
+            txn.verify(v)
+    head = catalog.head(target)
+    return head

@@ -1,0 +1,373 @@
+"""Columnar tables and the expression language of the paper's listings.
+
+A :class:`Table` is an immutable set of named columns (numpy-backed, with
+validity masks for nullability) — the in-memory stand-in for an Iceberg
+table snapshot. The expression API mirrors the paper's nodes::
+
+    df.select([col('col2'),
+               lit(0.5).alias('col4'),
+               arrow_cast(col('col4'), str_lit('Int64')).alias('col4')])
+    df.filter(col('col5').is_not_null() & ((col('a') - col('b')) < 0.5))
+    df.join(other, on=['col2'], how='inner')
+
+Logical dtypes follow :mod:`repro.core.schema` so worker-side contract
+validation (:func:`repro.core.contracts.validate_table`) checks *physical*
+data against declared schemas, including nullability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+import numpy as np
+
+__all__ = ["Table", "col", "lit", "str_lit", "arrow_cast", "Expr"]
+
+_NP_TO_LOGICAL = {
+    "int8": "int8", "int16": "int16", "int32": "int32", "int64": "int64",
+    "float16": "float16", "float32": "float32", "float64": "float64",
+    "bool": "bool", "object": "str", "str": "str",
+    "datetime64[ns]": "datetime", "<M8[ns]": "datetime",
+}
+
+_LOGICAL_TO_NP = {
+    "int8": np.int8, "int16": np.int16, "int32": np.int32,
+    "int64": np.int64, "float16": np.float16, "float32": np.float32,
+    "float64": np.float64, "bool": np.bool_, "str": object,
+    "datetime": "datetime64[ns]",
+    # arrow-style names accepted by arrow_cast (paper Listing 5)
+    "Int8": np.int8, "Int16": np.int16, "Int32": np.int32,
+    "Int64": np.int64, "Float32": np.float32, "Float64": np.float64,
+}
+
+_ARROW_TO_LOGICAL = {
+    "Int8": "int8", "Int16": "int16", "Int32": "int32", "Int64": "int64",
+    "Float32": "float32", "Float64": "float64",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class _ColumnData:
+    values: np.ndarray
+    valid: np.ndarray | None = None  # None = no nulls
+
+    def __post_init__(self):
+        if self.valid is not None and not self.valid.all():
+            return
+        if self.valid is not None:
+            object.__setattr__(self, "valid", None)
+
+    @property
+    def has_nulls(self) -> bool:
+        return self.valid is not None and bool((~self.valid).any())
+
+
+class Table:
+    """Immutable columnar table."""
+
+    def __init__(self, columns: Mapping[str, Any] | None = None,
+                 _data: dict[str, _ColumnData] | None = None):
+        if _data is not None:
+            self._data = _data
+        else:
+            self._data = {}
+            for name, v in (columns or {}).items():
+                if isinstance(v, _ColumnData):
+                    self._data[name] = v
+                    continue
+                arr = np.asarray(v)
+                valid = None
+                if arr.dtype == object:
+                    valid = np.array([x is not None for x in arr])
+                    if valid.all():
+                        valid = None
+                self._data[name] = _ColumnData(arr, valid)
+        lens = {len(c.values) for c in self._data.values()}
+        if len(lens) > 1:
+            raise ValueError(f"ragged columns: lengths {sorted(lens)}")
+
+    # -- introspection -------------------------------------------------
+    def column_names(self) -> list[str]:
+        return list(self._data)
+
+    def __len__(self) -> int:
+        if not self._data:
+            return 0
+        return len(next(iter(self._data.values())).values)
+
+    @property
+    def num_rows(self) -> int:
+        return len(self)
+
+    def column(self, name: str) -> np.ndarray:
+        return self._data[name].values
+
+    def validity(self, name: str) -> np.ndarray:
+        c = self._data[name]
+        return (c.valid if c.valid is not None
+                else np.ones(len(c.values), dtype=bool))
+
+    def logical_dtype(self, name: str) -> str:
+        arr = self._data[name].values
+        key = str(arr.dtype)
+        if key in _NP_TO_LOGICAL:
+            return _NP_TO_LOGICAL[key]
+        if np.issubdtype(arr.dtype, np.datetime64):
+            return "datetime"
+        raise TypeError(f"column {name!r}: unmapped dtype {arr.dtype}")
+
+    def has_nulls(self, name: str) -> bool:
+        return self._data[name].has_nulls
+
+    def to_pydict(self) -> dict[str, list]:
+        out = {}
+        for name, c in self._data.items():
+            vals = c.values.tolist()
+            if c.valid is not None:
+                vals = [v if ok else None
+                        for v, ok in zip(vals, c.valid)]
+            out[name] = vals
+        return out
+
+    def fingerprint(self) -> str:
+        import hashlib
+        h = hashlib.sha256()
+        for name in sorted(self._data):
+            c = self._data[name]
+            h.update(name.encode())
+            if c.values.dtype == object:
+                # canonical repr: plain str / None (np.str_ etc. vary
+                # by construction path but compare equal)
+                canon = [None if v is None else str(v)
+                         for v in c.values.tolist()]
+                h.update(str(canon).encode())
+            else:
+                h.update(np.ascontiguousarray(c.values).tobytes())
+            if c.valid is not None:
+                h.update(c.valid.tobytes())
+        return h.hexdigest()[:24]
+
+    # -- serialization (object-store snapshots) -------------------------
+    def to_blobs(self, store) -> str:
+        """Persist as a content-addressed snapshot; returns manifest key."""
+        manifest = {"kind": "table", "columns": {}}
+        for name, c in self._data.items():
+            vals = c.values
+            if vals.dtype == object:
+                enc = np.array([("" if v is None else str(v))
+                                for v in vals])
+                key = store.put_array(enc.astype("U"))
+                kind = "str"
+            elif np.issubdtype(vals.dtype, np.datetime64):
+                key = store.put_array(vals.astype("int64"))
+                kind = "datetime"
+            else:
+                key = store.put_array(vals)
+                kind = "plain"
+            vkey = (store.put_array(c.valid)
+                    if c.valid is not None else None)
+            manifest["columns"][name] = {"values": key, "valid": vkey,
+                                         "kind": kind}
+        return store.put_json(manifest)
+
+    @classmethod
+    def from_blobs(cls, store, key: str) -> "Table":
+        manifest = store.get_json(key)
+        data: dict[str, _ColumnData] = {}
+        for name, m in manifest["columns"].items():
+            vals = store.get_array(m["values"])
+            valid = (store.get_array(m["valid"])
+                     if m["valid"] is not None else None)
+            if m["kind"] == "str":
+                vals = np.array(list(vals), dtype=object)
+                if valid is not None:   # true roundtrip: restore None
+                    vals[~valid.astype(bool)] = None
+            elif m["kind"] == "datetime":
+                vals = vals.astype("datetime64[ns]")
+            data[name] = _ColumnData(vals, valid)
+        return cls(_data=data)
+
+    # -- relational ops (paper's node bodies) ----------------------------
+    def select(self, exprs: Sequence["Expr"]) -> "Table":
+        data: dict[str, _ColumnData] = {}
+        for e in exprs:
+            name = e.output_name()
+            vals, valid = e.evaluate(self)
+            data[name] = _ColumnData(vals, valid)
+        return Table(_data=data)
+
+    def filter(self, pred: "Expr") -> "Table":
+        mask, valid = pred.evaluate(self)
+        mask = np.asarray(mask, dtype=bool)
+        if valid is not None:
+            mask = mask & valid  # SQL semantics: NULL predicate = drop row
+        data = {
+            n: _ColumnData(c.values[mask],
+                           None if c.valid is None else c.valid[mask])
+            for n, c in self._data.items()}
+        return Table(_data=data)
+
+    def join(self, other: "Table", on: Sequence[str],
+             how: str = "inner") -> "Table":
+        if how != "inner":
+            raise NotImplementedError("only inner joins are supported")
+        lkeys = list(zip(*(self.column(k) for k in on)))
+        rindex: dict[tuple, list[int]] = {}
+        rkeys = list(zip(*(other.column(k) for k in on)))
+        for i, k in enumerate(rkeys):
+            rindex.setdefault(k, []).append(i)
+        li, ri = [], []
+        for i, k in enumerate(lkeys):
+            for j in rindex.get(k, ()):
+                li.append(i)
+                ri.append(j)
+        li_arr, ri_arr = np.array(li, dtype=int), np.array(ri, dtype=int)
+        data: dict[str, _ColumnData] = {}
+        for n, c in self._data.items():
+            data[n] = _ColumnData(
+                c.values[li_arr] if len(li_arr) else c.values[:0],
+                None if c.valid is None else c.valid[li_arr])
+        for n, c in other._data.items():
+            if n in data:  # join keys: keep left copy
+                continue
+            data[n] = _ColumnData(
+                c.values[ri_arr] if len(ri_arr) else c.values[:0],
+                None if c.valid is None else c.valid[ri_arr])
+        return Table(_data=data)
+
+    def group_by_sum(self, keys: Sequence[str], value: str,
+                     out: str | None = None) -> "Table":
+        """GROUP BY keys, SUM(value) — the paper's Listing 1 aggregate."""
+        out = out or f"_S"
+        kcols = [self.column(k) for k in keys]
+        vals = self.column(value)
+        groups: dict[tuple, Any] = {}
+        order: list[tuple] = []
+        for i in range(len(self)):
+            k = tuple(c[i] for c in kcols)
+            if k not in groups:
+                groups[k] = vals[i]
+                order.append(k)
+            else:
+                groups[k] = groups[k] + vals[i]
+        data: dict[str, _ColumnData] = {}
+        for j, kname in enumerate(keys):
+            colvals = np.array([k[j] for k in order],
+                               dtype=self.column(kname).dtype)
+            data[kname] = _ColumnData(colvals)
+        data[out] = _ColumnData(np.array([groups[k] for k in order],
+                                         dtype=vals.dtype))
+        return Table(_data=data)
+
+    def concat(self, other: "Table") -> "Table":
+        if set(self._data) != set(other._data):
+            raise ValueError("column sets differ")
+        data = {}
+        for n, c in self._data.items():
+            oc = other._data[n]
+            vals = np.concatenate([c.values, oc.values])
+            if c.valid is None and oc.valid is None:
+                valid = None
+            else:
+                lv = (c.valid if c.valid is not None
+                      else np.ones(len(c.values), bool))
+                rv = (oc.valid if oc.valid is not None
+                      else np.ones(len(oc.values), bool))
+                valid = np.concatenate([lv, rv])
+            data[n] = _ColumnData(vals, valid)
+        return Table(_data=data)
+
+
+# ---------------------------------------------------------------------------
+# Expressions
+# ---------------------------------------------------------------------------
+
+class Expr:
+    def __init__(self, fn: Callable[[Table], tuple[np.ndarray, np.ndarray | None]],
+                 name: str):
+        self._fn = fn
+        self._name = name
+
+    def evaluate(self, t: Table) -> tuple[np.ndarray, np.ndarray | None]:
+        return self._fn(t)
+
+    def output_name(self) -> str:
+        return self._name
+
+    def alias(self, name: str) -> "Expr":
+        return Expr(self._fn, name)
+
+    def is_not_null(self) -> "Expr":
+        def fn(t: Table):
+            _, valid = self._fn(t)
+            n = len(t)
+            out = (valid.copy() if valid is not None
+                   else np.ones(n, dtype=bool))
+            return out, None
+        return Expr(fn, f"{self._name}_is_not_null")
+
+    def _binop(self, other: Any, op, sym: str) -> "Expr":
+        other_e = other if isinstance(other, Expr) else lit(other)
+
+        def fn(t: Table):
+            lv, lva = self._fn(t)
+            rv, rva = other_e._fn(t)
+            vals = op(lv, rv)
+            if lva is None and rva is None:
+                valid = None
+            else:
+                la = lva if lva is not None else np.ones(len(t), bool)
+                ra = rva if rva is not None else np.ones(len(t), bool)
+                valid = la & ra
+            return vals, valid
+        return Expr(fn, f"({self._name}{sym}{other_e._name})")
+
+    def __add__(self, o): return self._binop(o, np.add, "+")
+    def __sub__(self, o): return self._binop(o, np.subtract, "-")
+    def __mul__(self, o): return self._binop(o, np.multiply, "*")
+    def __lt__(self, o): return self._binop(o, np.less, "<")
+    def __le__(self, o): return self._binop(o, np.less_equal, "<=")
+    def __gt__(self, o): return self._binop(o, np.greater, ">")
+    def __ge__(self, o): return self._binop(o, np.greater_equal, ">=")
+    def __eq__(self, o): return self._binop(o, np.equal, "==")  # type: ignore
+    def __ne__(self, o): return self._binop(o, np.not_equal, "!=")  # type: ignore
+    def __and__(self, o): return self._binop(o, np.logical_and, "&")
+    def __or__(self, o): return self._binop(o, np.logical_or, "|")
+    __hash__ = None  # type: ignore
+
+
+def col(name: str) -> Expr:
+    def fn(t: Table):
+        c = t._data[name]
+        return c.values, c.valid
+    return Expr(fn, name)
+
+
+def lit(value: Any) -> Expr:
+    def fn(t: Table):
+        n = len(t)
+        if value is None:
+            return (np.zeros(n, dtype=object),
+                    np.zeros(n, dtype=bool))
+        arr = np.full(n, value)
+        return arr, None
+    return Expr(fn, repr(value))
+
+
+def str_lit(value: str) -> str:
+    """Paper Listing 5: the cast-target literal of ``arrow_cast``."""
+    return value
+
+
+def arrow_cast(expr: Expr, target: str) -> Expr:
+    """Explicit cast (paper Listing 5) — required to legally narrow."""
+    np_t = _LOGICAL_TO_NP.get(target)
+    if np_t is None:
+        raise TypeError(f"arrow_cast: unknown target type {target!r}")
+
+    def fn(t: Table):
+        vals, valid = expr.evaluate(t)
+        return vals.astype(np_t), valid
+    e = Expr(fn, expr.output_name())
+    e.cast_target = _ARROW_TO_LOGICAL.get(target, target)  # type: ignore
+    return e

@@ -1,0 +1,131 @@
+"""Flash attention Pallas TPU kernel (GQA / causal / sliding-window).
+
+Tiling (DESIGN.md §7): grid = (B·H, n_q, n_kv); BlockSpecs stage one
+(block_q × hd) q tile and one (block_kv × hd) k/v tile in VMEM per grid
+step; the online-softmax accumulators (o, m, l) live in VMEM scratch and
+are carried across the n_kv (minor, sequential) grid dimension. Default
+block sizes are 128/256 — multiples of the 128-lane MXU tiles.
+
+Causal / windowed tiles that are fully masked are skipped via ``pl.when``
+(no MXU work issued), matching the trace-time tile skipping of the
+pure-XLA reference path (`repro.models.layers.blockwise_attention`).
+
+VMEM budget at (block_q=128, block_kv=256, hd=128), bf16 in / f32 acc:
+q 32KB + k/v 128KB + s/p 128KB + acc 64KB ≈ 0.4MB « 16MB VMEM — leaves
+room for double-buffered HBM→VMEM prefetch of the next k/v tiles.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _fa_body(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+             block_q, block_kv, causal, window, scale, n_kv, sq, skv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+
+    # tile-level skip predicate (mirrors _tile_pairs in the XLA path)
+    live = k_start < skv
+    if causal:
+        live &= k_start <= q_start + block_q - 1
+    if window is not None:
+        live &= k_start + block_kv - 1 > q_start - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)            # (block_q, hd)
+        k = k_ref[...].astype(jnp.float32)            # (block_kv, hd)
+        v = v_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_kv), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_kv), 1)
+        mask = kpos < skv
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        s = jnp.where(mask, s, _NEG_INF)
+        m_t = jnp.max(s, axis=1)                       # (bq,)
+        m_old = m_ref[...]
+        m_new = jnp.maximum(m_old, m_t)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_old - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[...] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True,
+                           window: int | None = None,
+                           block_q: int = 128, block_kv: int = 256,
+                           interpret: bool = True) -> jax.Array:
+    """q,k,v: (BH, S, hd) with identical head counts (GQA folded by ops).
+
+    Pads S to block multiples; masks padding inside the kernel.
+    """
+    BH, sq, hd = q.shape
+    skv = k.shape[1]
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    pad_q = (-sq) % block_q
+    pad_kv = (-skv) % block_kv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0)))
+    n_q = q.shape[1] // block_q
+    n_kv = k.shape[1] // block_kv
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _fa_body, block_q=block_q, block_kv=block_kv, causal=causal,
+        window=window, scale=scale, n_kv=n_kv, sq=sq, skv=skv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((None, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((None, block_kv, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((None, block_kv, hd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, hd),
+                               lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq, :]

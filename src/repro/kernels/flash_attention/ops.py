@@ -1,0 +1,40 @@
+"""Jit'd public wrapper: GQA folding + dispatch to kernel or XLA path."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_kv", "use_pallas", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None,
+                    block_q: int = 128, block_kv: int = 256,
+                    use_pallas: bool = True,
+                    interpret: bool = True) -> jax.Array:
+    """Multi-head attention. q: (B,H,Sq,hd); k/v: (B,K,Skv,hd), K | H.
+
+    GQA is handled by broadcasting kv heads before folding (B,H) into the
+    kernel's batch-of-heads dimension.
+    """
+    B, H, Sq, hd = q.shape
+    K = k.shape[1]
+    if K != H:
+        rep = H // K
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    Skv = k.shape[2]
+    if not use_pallas:
+        return flash_attention_ref(q, k, v, causal=causal, window=window)
+    qf = q.reshape(B * H, Sq, hd)
+    kf = k.reshape(B * H, Skv, hd)
+    vf = v.reshape(B * H, Skv, hd)
+    out = flash_attention_kernel(qf, kf, vf, causal=causal, window=window,
+                                 block_q=block_q, block_kv=block_kv,
+                                 interpret=interpret)
+    return out.reshape(B, H, Sq, hd)

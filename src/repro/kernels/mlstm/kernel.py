@@ -1,0 +1,110 @@
+"""mLSTM chunkwise-parallel Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md §7): instead of CUDA's per-warp sequential
+recurrence, chunks of L timesteps are processed in parallel on the MXU
+(two (L×hd)·(hd×L)/(L×L)·(L×hd) matmuls per chunk) while the matrix
+memory C (hd×hd), normalizer n (hd) and stabilizer m are carried across
+chunks in VMEM scratch.
+
+Grid: (B·H, n_chunks) — chunks minor ⇒ sequential state carry.
+BlockSpecs stage (L, hd) q/k/v tiles and (1, L) gate rows in VMEM.
+VMEM at L=256, hd=256: qkv 0.8MB + C 0.26MB + intra L×L 0.26MB ≈ 1.6MB.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mlstm_body(q_ref, k_ref, v_ref, li_ref, lf_ref, o_ref,
+                c_ref, n_ref, m_ref, *, chunk, hd):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    scale = 1.0 / math.sqrt(hd)
+    q = q_ref[...].astype(jnp.float32) * scale     # (L, hd)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    log_i = li_ref[...].reshape(chunk)             # (L,)
+    log_f = lf_ref[...].reshape(chunk)
+
+    C0 = c_ref[...]                                # (hd, hd)
+    n0 = n_ref[...].reshape(hd)
+    m0 = m_ref[0, 0]
+
+    F = jnp.cumsum(log_f)                          # (L,)
+    m_intra = F[:, None] - F[None, :] + log_i[None, :]
+    causal = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    m_intra = jnp.where(causal, m_intra, -1e30)
+    m_state = F + m0                               # (L,)
+    m_new = jnp.maximum(jnp.max(m_intra, axis=1), m_state)
+    m_new = jnp.maximum(m_new, -1e30)
+    d_intra = jnp.exp(m_intra - m_new[:, None])
+    d_state = jnp.exp(m_state - m_new)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L,L)
+    sd = s * d_intra
+    intra = jax.lax.dot_general(sd, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    inter = jax.lax.dot_general(q, C0, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32) \
+        * d_state[:, None]
+    num = intra + inter
+    qn = (q @ n0) * d_state                        # (L,)
+    den = jnp.abs(jnp.sum(sd, axis=1) + qn)
+    den = jnp.maximum(den, jnp.exp(-m_new))
+    o_ref[...] = (num / den[:, None]).astype(o_ref.dtype)
+
+    # ---- carry state to end of chunk ----
+    F_tot = F[chunk - 1]
+    m1 = jnp.maximum(F_tot + m0, jnp.max(F_tot - F + log_i))
+    w_state = jnp.exp(F_tot + m0 - m1)
+    w_in = jnp.exp(F_tot - F + log_i - m1)         # (L,)
+    kw = k * w_in[:, None]
+    c_ref[...] = C0 * w_state + jax.lax.dot_general(
+        kw, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_ref[...] = (n0 * w_state + jnp.sum(kw, axis=0)).reshape(1, hd)
+    m_ref[...] = m1.reshape(1, 1)
+
+
+def mlstm_chunkwise_kernel(q, k, v, log_i, log_f, *, chunk: int = 256,
+                           interpret: bool = True) -> jax.Array:
+    """q,k,v: (BH, S, hd); log_i/log_f: (BH, S) -> h (BH, S, hd)."""
+    BH, S, hd = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    out = pl.pallas_call(
+        functools.partial(_mlstm_body, chunk=chunk, hd=hd),
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((None, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((None, chunk), lambda b, c: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((None, chunk, hd), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((hd, hd), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, log_i, log_f)
+    return out

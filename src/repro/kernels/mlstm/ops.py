@@ -1,0 +1,19 @@
+"""Jit'd wrapper for the mLSTM chunkwise kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mlstm.kernel import mlstm_chunkwise_kernel
+from repro.kernels.mlstm.ref import mlstm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas",
+                                             "interpret"))
+def mlstm(q, k, v, log_i, log_f, *, chunk: int = 256,
+          use_pallas: bool = True, interpret: bool = True):
+    if not use_pallas:
+        return mlstm_ref(q, k, v, log_i, log_f)
+    return mlstm_chunkwise_kernel(q, k, v, log_i, log_f, chunk=chunk,
+                                  interpret=interpret)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the mLSTM kernel: exact sequential recurrence.
+
+From arXiv:2405.04517, per head:
+    m_t = max(log f_t + m_{t-1}, log i_t)
+    i'  = exp(log i_t - m_t);  f' = exp(log f_t + m_{t-1} - m_t)
+    C_t = f' C_{t-1} + i' k_t v_t^T
+    n_t = f' n_{t-1} + i' k_t
+    h_t = (C_t^T q_t) / max(|n_t . q_t|, exp(-m_t))
+with q scaled by 1/sqrt(hd).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_ref(q, k, v, log_i, log_f):
+    """q,k,v: (BH, S, hd); log_i/log_f: (BH, S). Returns (BH, S, hd)."""
+    BH, S, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    q = q.astype(jnp.float32) * scale
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+
+    def step(carry, inp):
+        C, n, m = carry
+        q_t, k_t, v_t, li, lf = inp
+        m_new = jnp.maximum(lf + m, li)
+        i_p = jnp.exp(li - m_new)
+        f_p = jnp.exp(lf + m - m_new)
+        C = f_p[:, None, None] * C + i_p[:, None, None] \
+            * k_t[:, :, None] * v_t[:, None, :]
+        n = f_p[:, None] * n + i_p[:, None] * k_t
+        num = jnp.einsum("bde,bd->be", C, q_t)
+        den = jnp.abs(jnp.einsum("bd,bd->b", n, q_t))
+        den = jnp.maximum(den, jnp.exp(-m_new))
+        h = num / den[:, None]
+        return (C, n, m_new), h
+
+    C0 = jnp.zeros((BH, hd, hd), jnp.float32)
+    n0 = jnp.zeros((BH, hd), jnp.float32)
+    m0 = jnp.zeros((BH,), jnp.float32)
+    _, hs = jax.lax.scan(step, (C0, n0, m0),
+                         (q.transpose(1, 0, 2), k.transpose(1, 0, 2),
+                          v.transpose(1, 0, 2), log_i.T, log_f.T))
+    return hs.transpose(1, 0, 2)

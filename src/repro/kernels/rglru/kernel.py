@@ -1,0 +1,80 @@
+"""RG-LRU linear-recurrence Pallas TPU kernel.
+
+The recurrence h_t = a_t ⊙ h_{t-1} + b_t is element-wise over the width
+W, so the TPU adaptation (DESIGN.md §7) blocks W across the *parallel*
+grid dimension (8×128 VPU lanes) and runs the sequence dimension as the
+*sequential* minor grid dimension, carrying the running state h in VMEM
+scratch. Within a (block_s × block_w) tile we do a **log-depth blocked
+associative scan** (Blelloch-style up-sweep on (a,b) pairs) rather than a
+per-element loop — O(log block_s) VPU sweeps instead of O(block_s).
+
+Grid: (n_w, n_s) — n_s minor ⇒ state carried tile-to-tile.
+BlockSpec tiles: a/b (B, block_s, block_w) staged HBM→VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_body(a_ref, b_ref, h_ref, carry_ref, *, block_s):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    a = a_ref[...]            # (B, block_s, block_w)
+    b = b_ref[...]
+
+    # log-depth inclusive scan of the affine maps (a, b) over axis 1:
+    # compose (a2,b2)∘(a1,b1) = (a1*a2, a2*b1 + b2)
+    n = 1
+    while n < block_s:
+        a_shift = jnp.pad(a, ((0, 0), (n, 0), (0, 0)),
+                          constant_values=1.0)[:, :-n, :]
+        b_shift = jnp.pad(b, ((0, 0), (n, 0), (0, 0)))[:, :-n, :]
+        b = a * b_shift + b
+        a = a * a_shift
+        n *= 2
+
+    # fold in carried state: h_t = A_t * h_in + B_t
+    h_in = carry_ref[...]                     # (B, block_w)
+    h = a * h_in[:, None, :] + b
+    h_ref[...] = h
+    carry_ref[...] = h[:, -1, :]
+
+
+def rglru_scan_kernel(a: jax.Array, b: jax.Array, *,
+                      block_s: int = 256, block_w: int = 128,
+                      interpret: bool = True) -> jax.Array:
+    """a, b: (B, S, W) float32 -> h (B, S, W)."""
+    B, S, W = a.shape
+    block_s = min(block_s, S)
+    block_w = min(block_w, W)
+    pad_s = (-S) % block_s
+    pad_w = (-W) % block_w
+    if pad_s or pad_w:
+        a = jnp.pad(a, ((0, 0), (0, pad_s), (0, pad_w)))
+        b = jnp.pad(b, ((0, 0), (0, pad_s), (0, pad_w)))
+    n_s = a.shape[1] // block_s
+    n_w = a.shape[2] // block_w
+
+    out = pl.pallas_call(
+        functools.partial(_rglru_body, block_s=block_s),
+        grid=(n_w, n_s),
+        in_specs=[
+            pl.BlockSpec((B, block_s, block_w), lambda wi, si: (0, si, wi)),
+            pl.BlockSpec((B, block_s, block_w), lambda wi, si: (0, si, wi)),
+        ],
+        out_specs=pl.BlockSpec((B, block_s, block_w),
+                               lambda wi, si: (0, si, wi)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        scratch_shapes=[pltpu.VMEM((B, block_w), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:, :S, :W]

@@ -1,0 +1,19 @@
+"""Jit'd wrapper for the RG-LRU recurrence kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rglru.kernel import rglru_scan_kernel
+from repro.kernels.rglru.ref import rglru_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_w",
+                                             "use_pallas", "interpret"))
+def rglru_scan(a, b, *, block_s: int = 256, block_w: int = 128,
+               use_pallas: bool = True, interpret: bool = True):
+    if not use_pallas:
+        return rglru_scan_ref(a, b)
+    return rglru_scan_kernel(a, b, block_s=block_s, block_w=block_w,
+                             interpret=interpret)

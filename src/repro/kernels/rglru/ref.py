@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the RG-LRU recurrence kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array,
+                   h0: jax.Array | None = None) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t, sequential oracle.
+
+    a, b: (B, S, W) float32; h0: (B, W) or None.
+    """
+    B, S, W = a.shape
+    h = h0 if h0 is not None else jnp.zeros((B, W), a.dtype)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (a.transpose(1, 0, 2),
+                                   b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

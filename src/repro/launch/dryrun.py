@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks device count on first init.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh — (16,16) single-pod or (2,16,16) multi-pod;
+  2. builds the cell program (train/prefill/serve step) with abstract
+     ``ShapeDtypeStruct`` inputs and explicit NamedShardings;
+  3. ``jax.jit(...).lower(*args).compile()`` — a sharding mismatch, an
+     unsupported collective or a compile-time OOM is a *bug in the
+     framework* and fails the cell;
+  4. prints ``compiled.memory_analysis()`` / ``cost_analysis()`` and runs
+     the loop-aware HLO analyzer for the roofline terms;
+  5. writes one JSON row per cell under ``results/dryrun/``.
+
+Usage:
+  python -m repro.launch.dryrun --arch xlstm_350m --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (DryrunKnobs, arch_dryrun_defaults,
+                                build_cell, skip_reason)
+from repro.roofline import hw
+from repro.roofline.analysis import analyze_hlo, roofline_terms
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             knobs: DryrunKnobs | None = None,
+             save_hlo: str | None = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    knobs = knobs or arch_dryrun_defaults(cfg)
+    t0 = time.perf_counter()
+    plan = build_cell(cfg, shape, mesh, knobs)
+
+    with mesh:
+        jitted = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                         donate_argnums=plan.donate_argnums)
+        lowered = jitted.lower(*plan.args)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    mem_row = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            mem_row[k] = int(v)
+    # proves-it-fits: arguments + temp per device (donation dedups aliases)
+    bytes_per_device = (mem_row.get("argument_size_in_bytes", 0)
+                        + mem_row.get("temp_size_in_bytes", 0)
+                        - mem_row.get("alias_size_in_bytes", 0))
+
+    hlo = compiled.as_text()
+    if save_hlo:
+        pathlib.Path(save_hlo).write_text(hlo)
+    hc = analyze_hlo(hlo)  # per-partition (per-chip) figures
+
+    rl = roofline_terms(
+        arch=arch, shape=shape_name, mesh=mesh_kind, chips=chips,
+        hlo_flops=hc.flops * chips, model_flops=plan.model_flops,
+        hbm_bytes=hc.hbm_bytes * chips,
+        collective_bytes=hc.collective_bytes * chips,
+        bytes_per_device=bytes_per_device)
+
+    dom_s = {"compute": rl.compute_s, "memory": rl.memory_s,
+             "collective": rl.collective_s}[rl.bottleneck]
+    step_s = max(rl.compute_s, rl.memory_s, rl.collective_s)
+    row = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok", "chips": chips,
+        "knobs": dataclasses.asdict(knobs),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_row,
+        "bytes_per_device": bytes_per_device,
+        "hbm_ok": bytes_per_device < hw.HBM_BYTES,
+        "xla_cost_analysis": {k: cost.get(k) for k in
+                              ("flops", "bytes accessed")
+                              if k in cost},
+        "hlo_flops": rl.hlo_flops,
+        "model_flops": rl.model_flops,
+        "useful_ratio": round(rl.useful_ratio, 4),
+        "hbm_bytes": rl.hbm_bytes,
+        "collective_bytes": rl.collective_bytes,
+        "collective_ops": hc.collective_ops,
+        "compute_s": rl.compute_s, "memory_s": rl.memory_s,
+        "collective_s": rl.collective_s,
+        "bottleneck": rl.bottleneck,
+        "roofline_fraction": (rl.compute_s / step_s) if step_s else 0.0,
+        "while_trips": hc.while_trips,
+    }
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) cell")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--fsdp", action="store_true", default=None)
+    ap.add_argument("--no-seq-parallel", dest="seq_parallel",
+                    action="store_false", default=None)
+    ap.add_argument("--remat", default=None,
+                    choices=["full", "dots", "none"])
+    ap.add_argument("--block-q", type=int, default=None)
+    ap.add_argument("--block-kv", type=int, default=None)
+    ap.add_argument("--accum", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    archs = ARCHS if args.all else [args.arch]
+    shapes = list(SHAPES) if args.all else (
+        [args.shape] if args.shape else list(SHAPES))
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if not archs[0]:
+        ap.error("need --arch or --all")
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                knobs = arch_dryrun_defaults(get_config(arch))
+                over = {}
+                if args.fsdp is not None:
+                    over["fsdp"] = args.fsdp
+                if args.seq_parallel is not None:
+                    over["seq_parallel"] = args.seq_parallel
+                if args.remat is not None:
+                    over["remat"] = (None if args.remat == "none"
+                                     else args.remat)
+                if args.block_q is not None:
+                    over["block_q"] = args.block_q
+                if args.block_kv is not None:
+                    over["block_kv"] = args.block_kv
+                if args.accum is not None:
+                    over["accum"] = args.accum
+                if over:
+                    knobs = dataclasses.replace(knobs, **over)
+                tag = f"{arch}.{shape}.{mesh_kind}"
+                try:
+                    row = run_cell(arch, shape, mesh_kind, knobs=knobs,
+                                   save_hlo=args.save_hlo)
+                except Exception as e:  # a failed cell is a framework bug
+                    traceback.print_exc()
+                    row = {"arch": arch, "shape": shape,
+                           "mesh": mesh_kind, "status": "failed",
+                           "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                (outdir / f"{tag}.json").write_text(json.dumps(row,
+                                                               indent=1))
+                if row["status"] == "ok":
+                    print(f"[dryrun] {tag}: OK  "
+                          f"compile={row['compile_s']:.1f}s  "
+                          f"bytes/dev={row['bytes_per_device']/2**30:.2f}GiB"
+                          f"  bottleneck={row['bottleneck']}  "
+                          f"roofline={row['roofline_fraction']:.2f}")
+                elif row["status"] == "skipped":
+                    print(f"[dryrun] {tag}: SKIP ({row['reason']})")
+                else:
+                    print(f"[dryrun] {tag}: FAILED {row['error']}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

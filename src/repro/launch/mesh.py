@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — required because the dry-run
+must set XLA_FLAGS *before* the first jax device query, while smoke
+tests and benchmarks must keep seeing 1 CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) single-pod (256 chips) or (2, 16, 16) two-pod (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,313 @@
+"""Per-cell (arch × shape × mesh) program builders for the dry-run.
+
+Everything here works on ``jax.ShapeDtypeStruct`` stand-ins: no device
+allocation ever happens on this path (the control-plane "moment 2" of
+the paper — we must be able to reject a plan before any worker spends a
+byte of HBM).
+
+For each shape kind we build:
+  train_4k      -> ``train_step``   (fwd + bwd + AdamW update)
+  prefill_32k   -> ``prefill_step`` (fwd, last-position logits + KV out)
+  decode_32k    -> ``serve_step``   (1 token against a seq_len KV cache)
+  long_500k     -> ``serve_step``   (sub-quadratic archs only)
+
+plus the matching input avals and NamedShardings (via the logical axis
+rules in :mod:`repro.distributed.sharding`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.elastic import params_sharding
+from repro.distributed.sharding import (AxisRules, make_rules, safe_spec,
+                                         use_rules)
+from repro.models import model as MDL
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.train_loop import TrainConfig, make_train_step
+
+__all__ = ["CellPlan", "build_cell", "cell_is_skipped", "skip_reason",
+           "arch_dryrun_defaults"]
+
+
+# ---------------------------------------------------------------------------
+# skips (documented in DESIGN.md §Arch-applicability)
+# ---------------------------------------------------------------------------
+
+def cell_is_skipped(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    return shape.name == "long_500k" and not cfg.sub_quadratic
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str | None:
+    if cell_is_skipped(cfg, shape):
+        return (f"{cfg.name}: pure full-attention stack — 512k-token decode "
+                "needs sub-quadratic mixing (run for ssm/hybrid only)")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# per-arch dry-run defaults (chosen by napkin math; see EXPERIMENTS.md)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DryrunKnobs:
+    fsdp: bool = False
+    seq_parallel: bool = True
+    remat: str | None = "full"
+    block_q: int = 512
+    block_kv: int = 512
+    loss_chunk: int = 512
+    accum: int = 1
+    dp_only: bool = False      # pure DP (small archs): batch on all axes
+    kv_dtype: str = "float8_e4m3fn"   # decode cache storage (§Perf E)
+
+
+_BIG = {"recurrentgemma_9b", "llama4_scout_17b", "minitron_8b",
+        "phi3_medium_14b", "command_r_plus_104b"}
+
+
+# microbatch counts chosen by napkin math: live activations must fit
+# 16 GiB HBM next to params+opt (see EXPERIMENTS.md §Perf A3).
+_ACCUM = {"command_r_plus_104b": 16, "llama4_scout_17b": 8,
+          "phi3_medium_14b": 4, "minitron_8b": 4, "granite_moe_3b": 4,
+          "phi4_mini_3b": 4, "phi3_vision_4b": 4, "whisper_medium": 4,
+          "recurrentgemma_9b": 4}
+
+
+# small archs where 16-way TP is pure overhead: replicate params, DP the
+# batch across all 256/512 chips (params+opt fit trivially).
+_DP_ONLY = {"xlstm_350m", "whisper_medium"}
+
+
+def arch_dryrun_defaults(cfg: ModelConfig) -> DryrunKnobs:
+    from repro.configs import _ALIASES
+    # config .name carries the published id ("granite-moe-3b-a800m");
+    # resolve to the registry arch id the knob tables are keyed by.
+    name = _ALIASES.get(cfg.name, cfg.name.replace("-", "_"))
+    return DryrunKnobs(fsdp=name in _BIG, accum=_ACCUM.get(name, 1),
+                       dp_only=name in _DP_ONLY)
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: MDL.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def extra_inputs(cfg: ModelConfig, batch: int) -> dict[str, Any]:
+    """Frontend STUB inputs (precomputed frame/patch embeddings)."""
+    extra: dict[str, Any] = {}
+    if cfg.encoder_layers:                       # audio (whisper)
+        extra["audio_embeds"] = _sds(
+            (batch, cfg.num_source_positions, cfg.d_model), cfg.dtype)
+    elif cfg.family == "vlm":                    # early-fusion patches
+        extra["vision_embeds"] = _sds(
+            (batch, cfg.num_source_positions, cfg.d_model), cfg.dtype)
+    return extra
+
+
+# ---------------------------------------------------------------------------
+# cache / state sharding heuristics
+# ---------------------------------------------------------------------------
+
+def _path_name(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+def _cache_spec(path, leaf, rules: AxisRules) -> P:
+    name = _path_name(path)
+    nd = leaf.ndim
+    if name.endswith("/k") or name.endswith("/v"):
+        # (B,K,S,hd) or stacked (n,B,K,S,hd): seq over `model` (flash-
+        # decode partial softmax), batch over (pod,data)
+        base = ["batch", "kv_heads", "kv_seq", "head_dim"]
+        pad = [None] * (nd - 4)
+        return rules.resolve(*pad, *base)
+    if "rec" in name and nd >= 2:
+        # recurrent state: batch-major, feature dims local
+        pad = [None] * (nd - 2) if nd > 2 else []
+        if nd == 1:
+            return rules.resolve(None)
+        # stacked layer dim first when present (heuristic: >2 dims)
+        if nd >= 3:
+            return rules.resolve(None, "batch", *([None] * (nd - 2)))
+        return rules.resolve("batch", None)
+    return rules.resolve(*([None] * nd))
+
+
+def cache_sharding(caches, mesh: Mesh, rules: AxisRules):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(
+            mesh, safe_spec(_cache_spec(p, l, rules), l.shape, mesh)),
+        caches)
+
+
+def safe_params_sharding(params, mesh: Mesh, rules: AxisRules):
+    sh = params_sharding(params, mesh, rules)
+    return jax.tree.map(
+        lambda s, l: NamedSharding(mesh, safe_spec(s.spec, l.shape, mesh)),
+        sh, params)
+
+
+def _batched_spec(leaf, rules: AxisRules) -> P:
+    """batch-leading activations: (B, ...)."""
+    return rules.resolve("batch", *([None] * (leaf.ndim - 1)))
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, knobs: DryrunKnobs,
+                      extra_spec: tuple[str, ...]) -> Callable:
+    def prefill_step(params, inputs, *extra_args):
+        extra = dict(zip(extra_spec, extra_args))
+        out, _aux, kv = MDL.forward(
+            params, cfg, inputs, mode="last_logits", return_kv=True,
+            remat=None, block_q=knobs.block_q, block_kv=knobs.block_kv,
+            **extra)
+        return out, kv
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, tokens, caches):
+        return MDL.decode_step(params, cfg, tokens, caches)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# the cell plan
+# ---------------------------------------------------------------------------
+
+def _with_rules(fn, rules):
+    """Activate the logical-axis rules DURING TRACING: the model's
+    internal ``lshard`` constraints resolve against the thread-local
+    rules, so they must be live when jit traces the function (not just
+    while specs are built) — otherwise every internal
+    with_sharding_constraint silently becomes a no-op and GSPMD invents
+    its own (usually seq-unsharded) layouts."""
+    import functools as _ft
+
+    @_ft.wraps(fn)
+    def wrapped(*args, **kw):
+        with use_rules(rules):
+            return fn(*args, **kw)
+    return wrapped
+
+
+@dataclasses.dataclass
+class CellPlan:
+    """Everything jit needs: fn, abstract args, in/out shardings."""
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: tuple           # ShapeDtypeStructs (pytrees)
+    in_shardings: tuple
+    donate_argnums: tuple[int, ...]
+    rules: AxisRules
+    model_flops: float    # 6·N·D train / 2·N_active·tokens prefill/decode
+
+
+def _model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n_act = cfg.num_active_params()
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.seq_len * shape.global_batch
+    return 2.0 * n_act * shape.global_batch          # decode: 1 tok/seq
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               knobs: DryrunKnobs | None = None) -> CellPlan:
+    knobs = knobs or arch_dryrun_defaults(cfg)
+    kind = shape.kind
+    B, S = shape.global_batch, shape.seq_len
+    # pure DP only when the batch divides the whole mesh (train_4k);
+    # otherwise fall back to the standard TP(+SP) rules.
+    dp_only = knobs.dp_only and B % mesh.devices.size == 0
+    rules = make_rules("train" if kind == "train" else
+                       ("prefill" if kind == "prefill" else "decode"),
+                       mesh, fsdp=knobs.fsdp,
+                       seq_parallel=knobs.seq_parallel and kind != "decode",
+                       dp_only=dp_only)
+
+    # long_500k runs a single sequence: batch cannot shard over the DP
+    # axes — replicate batch, parallelism comes from TP + kv_seq shards.
+    dp = 1
+    entry = rules.rules.get("batch")
+    for ax in (entry if isinstance(entry, tuple) else (entry,)):
+        if ax in mesh.shape:
+            dp *= mesh.shape[ax]
+    if B % dp != 0:
+        rules = AxisRules(dict(rules.rules, batch=None), mesh)
+
+    with use_rules(rules):
+        params = abstract_params(cfg)
+        p_shard = safe_params_sharding(params, mesh, rules)
+        extra = extra_inputs(cfg, B)
+        extra_names = tuple(extra)
+        extra_avals = tuple(extra.values())
+        extra_shard = tuple(
+            NamedSharding(mesh, _batched_spec(a, rules))
+            for a in extra_avals)
+        tok_shard = NamedSharding(mesh, rules.resolve("batch", None))
+
+        if kind == "train":
+            tc = TrainConfig(remat=knobs.remat, block_q=knobs.block_q,
+                             block_kv=knobs.block_kv, accum=knobs.accum)
+            fn = make_train_step(cfg, AdamWConfig(), tc,
+                                 extra_spec=dict.fromkeys(extra_names)
+                                 if extra_names else None)
+            opt = jax.eval_shape(adamw_init, params)
+            o_shard = safe_params_sharding(opt, mesh, rules)
+            args = (params, opt,
+                    _sds((B, S), "int32"), _sds((B, S), "int32"),
+                    *extra_avals)
+            in_sh = (p_shard, o_shard, tok_shard, tok_shard, *extra_shard)
+            return CellPlan(cfg.name, shape.name, kind,
+                            _with_rules(fn, rules), args, in_sh,
+                            donate_argnums=(0, 1), rules=rules,
+                            model_flops=_model_flops(cfg, shape))
+
+        if kind == "prefill":
+            fn = make_prefill_step(cfg, knobs, extra_names)
+            args = (params, _sds((B, S), "int32"), *extra_avals)
+            in_sh = (p_shard, tok_shard, *extra_shard)
+            return CellPlan(cfg.name, shape.name, kind,
+                            _with_rules(fn, rules), args, in_sh,
+                            donate_argnums=(), rules=rules,
+                            model_flops=_model_flops(cfg, shape))
+
+        # decode: 1 new token against a seq_len cache (fp8 storage)
+        cfg = dataclasses.replace(cfg, kv_dtype=knobs.kv_dtype)
+        fn_cfg = cfg
+        enc_aval = None
+        if cfg.encoder_layers:
+            enc_aval = _sds((B, cfg.num_source_positions, cfg.d_model),
+                            cfg.dtype)
+        caches = jax.eval_shape(
+            functools.partial(MDL.init_cache, cfg, B, S), enc_out=enc_aval)
+        c_shard = cache_sharding(caches, mesh, rules)
+        fn = make_serve_step(cfg)
+        args = (params, _sds((B, 1), "int32"), caches)
+        in_sh = (p_shard, tok_shard, c_shard)
+        return CellPlan(cfg.name, shape.name, kind,
+                        _with_rules(fn, rules), args, in_sh,
+                        donate_argnums=(2,), rules=rules,
+                        model_flops=_model_flops(cfg, shape))

@@ -1,0 +1,387 @@
+"""Unified model: one definition covering all 10 assigned architectures.
+
+A model is (embedding) + N decoder blocks + (final norm, LM head), where
+each block's *mixing* sublayer is chosen by ``cfg.block_pattern`` (cycled
+over layers): full attention, sliding-window attention, RG-LRU, mLSTM or
+sLSTM — followed by an (optionally MoE) FFN sublayer when ``d_ff > 0``.
+Audio (whisper) adds a bidirectional encoder over stub frame embeddings +
+per-block cross-attention; VLM does early fusion of stub patch embeddings.
+
+Layers are executed as a ``lax.scan`` over *super-blocks* (one repeat of
+the pattern, parameters stacked) so the HLO stays compact for the 40-cell
+dry-run; `L % len(pattern)` remainder layers are unrolled.
+
+Three entry points:
+  - :func:`init_params`  (works under ``jax.eval_shape`` — no allocation)
+  - :func:`forward`      (train / prefill; optional remat)
+  - :func:`decode_step`  (one token against per-layer caches/states)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import lshard
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import xlstm as X
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, kind: str) -> Params:
+    ks = L.split_keys(key, 4)
+    p: Params = {"norm1": L.rmsnorm_init(cfg)}
+    if kind in ("attn", "local"):
+        p["mix"] = L.attention_init(ks[0], cfg)
+    elif kind == "rglru":
+        p["mix"] = R.rglru_init(ks[0], cfg)
+    elif kind == "mlstm":
+        p["mix"] = X.mlstm_init(ks[0], cfg)
+    elif kind == "slstm":
+        p["mix"] = X.slstm_init(ks[0], cfg)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    if cfg.encoder_layers:  # whisper-style decoder: cross-attention
+        p["norm_x"] = L.rmsnorm_init(cfg)
+        p["cross"] = L.attention_init(ks[1], cfg, cross=True)
+    if cfg.d_ff > 0:
+        p["norm2"] = L.rmsnorm_init(cfg)
+        if cfg.moe is not None:
+            p["ffn"] = M.moe_init(ks[2], cfg)
+        else:
+            p["ffn"] = L.mlp_init(ks[2], cfg)
+    return p
+
+
+def _encoder_layer_init(key, cfg: ModelConfig) -> Params:
+    ks = L.split_keys(key, 2)
+    return {
+        "norm1": L.rmsnorm_init(cfg),
+        "attn": L.attention_init(ks[0], cfg),
+        "norm2": L.rmsnorm_init(cfg),
+        "ffn": L.mlp_init(ks[1], cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    ks = L.split_keys(key, 6 + cfg.num_layers + cfg.encoder_layers)
+    dt = jnp.dtype(cfg.param_dtype)
+    P_len = cfg.pattern_len
+    n_scan = cfg.n_scan_blocks
+
+    params: Params = {
+        "embed": (jax.random.normal(ks[0], (cfg.padded_vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dt),
+        "final_norm": L.rmsnorm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (
+            jax.random.normal(ks[1], (cfg.d_model, cfg.padded_vocab),
+                              jnp.float32) * 0.02).astype(dt)
+
+    # scanned super-blocks: per pattern-slot, stack params over n_scan
+    slots = []
+    for j, kind in enumerate(cfg.block_pattern):
+        per_block = [
+            _block_init(ks[6 + b * P_len + j], cfg, kind)
+            for b in range(n_scan)
+        ]
+        slots.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_block)
+                     if n_scan > 1 else
+                     jax.tree.map(lambda x: x[None], per_block[0]))
+    params["slots"] = slots
+
+    # unrolled tail layers
+    tail = []
+    for t in range(cfg.n_tail_layers):
+        kind = cfg.block_pattern[t % P_len]
+        tail.append(_block_init(ks[6 + n_scan * P_len + t], cfg, kind))
+    params["tail"] = tail
+
+    if cfg.encoder_layers:
+        enc = [_encoder_layer_init(ks[2 + i], cfg)
+               for i in range(cfg.encoder_layers)]
+        params["encoder"] = {
+            "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *enc),
+            "final_norm": L.rmsnorm_init(cfg),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _apply_block(p: Params, x, cfg: ModelConfig, kind: str, *,
+                 enc_out=None, cache=None, decode: bool = False,
+                 block_q: int = 512, block_kv: int = 512,
+                 collect_kv: bool = False):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if kind in ("attn", "local"):
+        if decode:
+            mixed, cache_attn = L.attention_decode(
+                p["mix"], h, cache["attn"], cfg, kind=kind)
+            new_cache = dict(cache, attn=cache_attn)
+        else:
+            out = L.attention_forward(p["mix"], h, cfg, kind=kind,
+                                      block_q=block_q, block_kv=block_kv,
+                                      return_kv=collect_kv)
+            if collect_kv:
+                mixed, (k_new, v_new) = out
+                new_cache = {"k": k_new, "v": v_new}
+            else:
+                mixed = out
+                new_cache = cache
+    elif kind == "rglru":
+        mixed, st = R.rglru_forward(p["mix"], h, cfg,
+                                    cache["rec"] if decode else None)
+        new_cache = dict(cache, rec=st) if decode else cache
+    elif kind == "mlstm":
+        mixed, st = X.mlstm_forward(p["mix"], h, cfg,
+                                    cache["rec"] if decode else None)
+        new_cache = dict(cache, rec=st) if decode else cache
+    elif kind == "slstm":
+        mixed, st = X.slstm_forward(p["mix"], h, cfg,
+                                    cache["rec"] if decode else None)
+        new_cache = dict(cache, rec=st) if decode else cache
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    x = x + mixed
+
+    if "cross" in p:
+        h = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        if decode:
+            # cross K/V are static during decode: cached once at prefill
+            mixed, _ = _cross_decode(p["cross"], h, cache["cross"], cfg)
+        else:
+            mixed = L.attention_forward(p["cross"], h, cfg, kind="cross",
+                                        encoder_out=enc_out,
+                                        block_q=block_q, block_kv=block_kv)
+        x = x + mixed
+
+    if "ffn" in p:
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            f, aux = M.moe_forward(p["ffn"], h, cfg)
+        else:
+            f = L.mlp_forward(p["ffn"], h, cfg)
+        x = x + f
+    return lshard(x, "batch", "seq", "embed"), new_cache, aux
+
+
+def _cross_decode(p, x, kv, cfg: ModelConfig):
+    """Decode-time cross attention against precomputed encoder K/V."""
+    B, _, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, 1, H, hd).transpose(0, 2, 1, 3)
+    out = L.full_attention(q, kv["k"], kv["v"], causal=False)
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, H * hd)
+    return out @ p["wo"], kv
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper stub frontend -> bidirectional stack)
+# ---------------------------------------------------------------------------
+
+def encode(params: Params, cfg: ModelConfig, audio_embeds: jax.Array,
+           block_q: int = 512, block_kv: int = 512) -> jax.Array:
+    enc = params["encoder"]
+    x = audio_embeds
+
+    def body(x, p):
+        h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        h = L.attention_forward(p["attn"], h, cfg, kind="cross",
+                                encoder_out=h,  # self, bidirectional
+                                block_q=block_q, block_kv=block_kv)
+        x = x + h
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        x = x + L.mlp_forward(p["ffn"], h, cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, enc["layers"])
+    return L.rmsnorm(enc["final_norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            vision_embeds=None, audio_embeds=None,
+            remat: str | None = None,
+            block_q: int = 512, block_kv: int = 512,
+            mode: str = "logits",        # logits | last_logits | hidden
+            return_kv: bool = False):
+    """tokens: (B, S) int32 -> (output, aux[, kv_caches]).
+
+    ``mode="last_logits"`` returns only the final position's logits (the
+    serving prefill shape); ``return_kv=True`` additionally returns the
+    per-layer K/V tensors produced by attention blocks (the prefill
+    cache output — recurrent blocks contribute None slots here; their
+    decode state is built by the serving loop's teacher-forced steps).
+    """
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.dtype))
+    if vision_embeds is not None:  # VLM early fusion
+        x = jax.lax.dynamic_update_slice(
+            x, vision_embeds.astype(x.dtype), (0, 0, 0))
+    x = lshard(x, "batch", "seq", "embed")
+
+    enc_out = None
+    if cfg.encoder_layers:
+        assert audio_embeds is not None
+        enc_out = encode(params, cfg, audio_embeds, block_q, block_kv)
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def superblock(x, slot_params):
+        aux_sb = jnp.zeros((), jnp.float32)
+        kvs = []
+        for j, kind in enumerate(cfg.block_pattern):
+            x, kv, aux = _apply_block(slot_params[j], x, cfg, kind,
+                                      enc_out=enc_out,
+                                      block_q=block_q, block_kv=block_kv,
+                                      collect_kv=return_kv)
+            aux_sb = aux_sb + aux
+            kvs.append(kv if (return_kv and kind in ("attn", "local"))
+                       else jnp.zeros((), jnp.float32))
+        return x, aux_sb, kvs
+
+    if remat == "full":
+        superblock = jax.checkpoint(superblock)
+    elif remat == "dots":
+        superblock = jax.checkpoint(
+            superblock,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    def scan_body(x, slot_params):
+        # Pin the carry's sharding INSIDE the loop body: without this
+        # GSPMD legalizes the carry to seq-unsharded (dropping the
+        # sequence-parallel reduce-scatter), and remat then saves a
+        # full-seq residual per layer — 192 GiB/dev on command-r
+        # train_4k (EXPERIMENTS.md §Perf A2).
+        x = lshard(x, "batch", "seq", "embed")
+        x, aux, kvs = superblock(x, slot_params)
+        return x, (aux, kvs)
+
+    x, (auxs, kv_scan) = jax.lax.scan(scan_body, x, params["slots"])
+    aux_total = aux_total + jnp.sum(auxs)
+
+    kv_tail = []
+    for t, p in enumerate(params["tail"]):
+        kind = cfg.block_pattern[t % cfg.pattern_len]
+        x, kv, aux = _apply_block(p, x, cfg, kind, enc_out=enc_out,
+                                  block_q=block_q, block_kv=block_kv,
+                                  collect_kv=return_kv)
+        aux_total = aux_total + aux
+        if return_kv and kind in ("attn", "local"):
+            kv_tail.append(kv)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if mode == "hidden":
+        out = x
+    else:
+        if mode == "last_logits":
+            x = x[:, -1:, :]
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = jnp.einsum("bsd,dv->bsv", x, head,
+                            preferred_element_type=jnp.float32)
+        # vocab FIRST: under SP the seq dim (often 1 for last_logits)
+        # would consume the `model` axis and force an 11.7 GiB f32
+        # all-gather of the LM head (measured, EXPERIMENTS.md §Perf B4)
+        out = lshard(logits, "batch", None, "vocab")
+    if return_kv:
+        return out, aux_total, (kv_scan, kv_tail)
+    return out, aux_total
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_out: jax.Array | None = None) -> list:
+    """Per-slot stacked caches for scan + tail caches (appended flat)."""
+    def one(kind):
+        c: dict[str, Any] = {}
+        if kind in ("attn", "local"):
+            size = (min(max_len, cfg.local_window) if kind == "local"
+                    else max_len)
+            c["attn"] = L.attention_cache_init(
+                cfg, batch, size, dtype=jnp.dtype(cfg.kv_dtype))
+        elif kind == "rglru":
+            c["rec"] = R.rglru_state_init(cfg, batch)
+        elif kind == "mlstm":
+            c["rec"] = X.mlstm_state_init(cfg, batch)
+        elif kind == "slstm":
+            c["rec"] = X.slstm_state_init(cfg, batch)
+        if cfg.encoder_layers and enc_out is not None:
+            K, hd = cfg.num_kv_heads, cfg.head_dim
+            # precomputed cross K/V placeholder (filled at prefill)
+            Senc = enc_out.shape[1]
+            c["cross"] = {
+                "k": jnp.zeros((batch, K, Senc, hd), jnp.bfloat16),
+                "v": jnp.zeros((batch, K, Senc, hd), jnp.bfloat16),
+            }
+        return c
+
+    slots = []
+    for j, kind in enumerate(cfg.block_pattern):
+        per = [one(kind) for _ in range(cfg.n_scan_blocks)]
+        slots.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+                     if cfg.n_scan_blocks > 1
+                     else jax.tree.map(lambda x: x[None], per[0]))
+    tail = [one(cfg.block_pattern[t % cfg.pattern_len])
+            for t in range(cfg.n_tail_layers)]
+    return [slots, tail]
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                caches: list):
+    """One decode step. tokens: (B, 1) -> (logits (B,1,V), new caches)."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.dtype))
+    x = lshard(x, "batch", "seq", "embed")
+    slot_caches, tail_caches = caches
+
+    def scan_body(x, inp):
+        slot_params, slot_cache = inp
+        new_cache = []
+        for j, kind in enumerate(cfg.block_pattern):
+            x, nc, _ = _apply_block(slot_params[j], x, cfg, kind,
+                                    cache=slot_cache[j], decode=True)
+            new_cache.append(nc)
+        return x, new_cache
+
+    x, new_slot_caches = jax.lax.scan(
+        scan_body, x, (params["slots"], slot_caches))
+
+    new_tail = []
+    for t, p in enumerate(params["tail"]):
+        kind = cfg.block_pattern[t % cfg.pattern_len]
+        x, nc, _ = _apply_block(p, x, cfg, kind,
+                                cache=tail_caches[t], decode=True)
+        new_tail.append(nc)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head,
+                        preferred_element_type=jnp.float32)
+    logits = lshard(logits, "batch", None, "vocab")
+    return logits, [new_slot_caches, new_tail]

@@ -1,0 +1,181 @@
+"""Mixture-of-Experts layer: GShard-style grouped top-k routing.
+
+TPU-native design notes (DESIGN.md §7):
+
+- Experts are sharded over the ``model`` mesh axis (EP); tokens stay
+  sharded over ``data``. Dispatch/combine are dense einsums against a
+  one-hot (group, expert, capacity) tensor — deterministic, jit-friendly
+  (no ragged ops) and GSPMD-shardable.
+- Tokens are processed in fixed-size *groups* (``cfg.moe.group_size``):
+  the dispatch tensor is O(g · E · c) per group instead of O(T · E · C),
+  and the group loop is a ``lax.scan`` so live memory is bounded.
+- Capacity per group c = ceil(g · top_k / E · capacity_factor); tokens
+  overflowing an expert's capacity are dropped (standard GShard
+  semantics), gates renormalized over surviving experts.
+- Router runs in float32 (numerics), includes the load-balancing
+  auxiliary loss of Shazeer et al.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import current_rules, lshard
+from repro.models.layers import Params, _dense_init, mlp_forward, mlp_init, split_keys
+
+
+def _expert_axis_tag(E: int) -> str | None:
+    """EP activation tag only when the expert count divides the mesh's
+    expert axis; otherwise the weights fall back to intra-expert TP
+    (see elastic.param_spec) and the activations must stay E-local —
+    mismatched layouts make GSPMD reshard the dispatch/combine gathers
+    every group (measured +70% collective on granite, EXPERIMENTS.md)."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return "experts"
+    ent = r.rules.get("experts")
+    size = 1
+    for ax in (ent if isinstance(ent, tuple) else (ent,)):
+        if ax in r.mesh.shape:
+            size *= r.mesh.shape[ax]
+    return "experts" if size and E % size == 0 else None
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    m = cfg.moe
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = split_keys(key, 3)
+    E = m.num_experts
+    # stacked expert weights: (E, d, f) / (E, f, d)
+    if cfg.act == "swiglu":
+        expert = {
+            "w_gate": _dense_init(ks[0], (E, d, f), dt, scale=1 / math.sqrt(d)),
+            "w_up": _dense_init(ks[1], (E, d, f), dt, scale=1 / math.sqrt(d)),
+            "w_down": _dense_init(ks[2], (E, f, d), dt, scale=1 / math.sqrt(f)),
+        }
+    else:
+        expert = {
+            "w_up": _dense_init(ks[0], (E, d, f), dt, scale=1 / math.sqrt(d)),
+            "w_down": _dense_init(ks[1], (E, f, d), dt, scale=1 / math.sqrt(f)),
+        }
+    p: Params = {
+        "router": _dense_init(jax.random.fold_in(key, 7), (d, E),
+                              jnp.float32, scale=0.02),
+        "experts": expert,
+    }
+    if m.shared_expert:
+        p["shared"] = mlp_init(jax.random.fold_in(key, 11), cfg)
+    return p
+
+
+def _capacity(cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(math.ceil(m.group_size * m.experts_per_token / m.num_experts
+                      * m.capacity_factor))
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def _route_group(p: Params, xg: jax.Array, cfg: ModelConfig):
+    """Route one token group per batch row.
+
+    xg: (B, g, d) -> (out (B, g, d), aux_loss). B is sharded over `data`,
+    experts over `model`; the dispatch einsum is the point where GSPMD
+    inserts the token-to-expert reshard (all-to-all equivalent).
+    """
+    m = cfg.moe
+    B, g, d = xg.shape
+    E, k, c = m.num_experts, m.experts_per_token, _capacity(cfg)
+    logits = jnp.einsum("bgd,de->bge", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)            # (B, g, k)
+    # position of each (token, slot) within its expert's capacity:
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)    # (B, g, k, E)
+    flat = onehot.reshape(B, g * k, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat)          # (B, g*k, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(B, g, k)
+    keep = pos < c
+    gate_vals = gate_vals * keep
+    # renormalize surviving gates
+    denom = jnp.maximum(jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    gate_vals = gate_vals / denom
+    # ---- gather-based dispatch (TPU adaptation, EXPERIMENTS.md §Perf) --
+    # The GShard dense dispatch einsum (bgke,bgkc->bgec then bgec,bgd->
+    # becd) costs B·g·E·c·d MACs of pure bookkeeping — for granite
+    # (E=40, c=128) that is ~10× the EXPERT compute and shows up as
+    # useful_ratio≈0.1 in the roofline. Instead scatter the token index
+    # of each surviving (expert, slot) pair and GATHER activations:
+    # zero matmul FLOPs, same drop semantics, vjp = scatter-add.
+    b_ix = jnp.arange(B, dtype=jnp.int32)[:, None, None]
+    g_ix = jnp.broadcast_to(jnp.arange(g, dtype=jnp.int32)[None, :, None],
+                            (B, g, k))
+    slot = jnp.where(keep, pos, c)            # c = out-of-bounds → drop
+    src = jnp.full((B, E, c), g, jnp.int32)   # g = "empty slot" sentinel
+    src = src.at[b_ix, expert_idx, slot].set(g_ix, mode="drop")
+    # gather tokens (append a zero row as the empty-slot source)
+    xg_pad = jnp.concatenate(
+        [xg.astype(jnp.bfloat16),
+         jnp.zeros((B, 1, d), jnp.bfloat16)], axis=1)
+    xin = jnp.take_along_axis(xg_pad[:, :, None, :],
+                              src.reshape(B, E * c)[:, :, None, None],
+                              axis=1).reshape(B, E, c, d)
+    etag = _expert_axis_tag(E)
+    xin = lshard(xin, "batch", etag, "expert_cap", "embed")
+    # expert FFN (batched over B, E)
+    ew = p["experts"]
+    if "w_gate" in ew:
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", xin, ew["w_gate"])) \
+            * jnp.einsum("becd,edf->becf", xin, ew["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", xin, ew["w_up"]))
+    h = lshard(h, "batch", etag, "expert_cap", "ff")
+    eout = jnp.einsum("becf,efd->becd", h, ew["w_down"])
+    eout = lshard(eout, "batch", etag, "expert_cap", "embed")
+    # combine: gather each token's k expert outputs and gate-sum them
+    # (B·g·k·d FLOPs instead of B·g·E·c·d)
+    flat_idx = (expert_idx * c + jnp.minimum(slot, c - 1)
+                ).reshape(B, g * k)            # (B, g*k) into (E*c)
+    eflat = eout.reshape(B, E * c, d).astype(jnp.float32)
+    picked = jnp.take_along_axis(
+        eflat, flat_idx[:, :, None], axis=1).reshape(B, g, k, d)
+    picked = picked * keep[..., None]          # dropped slots contribute 0
+    out = jnp.einsum("bgkd,bgk->bgd", picked, gate_vals)
+    # load-balance aux loss (Shazeer): E * sum_e f_e * P_e
+    f_e = jnp.mean(jnp.sum(onehot, axis=2).astype(jnp.float32), axis=(0, 1))
+    P_e = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(f_e * P_e) / k
+    return out.astype(xg.dtype), aux
+
+
+def moe_forward(p: Params, x: jax.Array, cfg: ModelConfig
+                ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss). Groups = contiguous token chunks.
+
+    The group loop scans over the *sequence* chunks (unsharded axis) and
+    vmaps over batch (sharded over ``data``), so each scan step is a
+    fully data-parallel (B, g, d) routing problem and live dispatch
+    memory is O(B_local · g · E · c).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    # group size: the largest divisor of S not exceeding the configured
+    # size (a perf knob, not semantics — routing is per-token).
+    g = min(m.group_size, S)
+    while S % g != 0:
+        g -= 1
+    n = S // g
+    xg = x.reshape(B, n, g, d).transpose(1, 0, 2, 3)   # (n, B, g, d)
+
+    def body(_, xgi):
+        out, aux = _route_group(p, xgi, cfg)
+        return None, (out, aux)
+
+    _, (out, aux) = jax.lax.scan(body, None, xg)       # out: (n, B, g, d)
+    out = out.transpose(1, 0, 2, 3).reshape(B, S, d)
+    if "shared" in p:
+        out = out + mlp_forward(p["shared"], x, cfg)
+    return lshard(out, "batch", "seq", "embed"), jnp.mean(aux)

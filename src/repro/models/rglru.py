@@ -1,0 +1,120 @@
+"""RecurrentGemma's recurrent block: causal conv + RG-LRU (arXiv:2402.19427).
+
+The RG-LRU is an element-wise gated linear recurrence
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(c * softplus(Λ) * r_t * log a_base)   — here parameterized as
+    a_t = exp(-c * softplus(Λ) * r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+TPU adaptation (DESIGN.md §7): training uses a *blocked associative scan*
+(`jax.lax.associative_scan` — log-depth, MXU-free but VPU-friendly)
+instead of the GPU per-thread sequential recurrence; decode carries h as
+O(d) state. The full recurrent block is:
+
+    x ──ln──┬── proj_gate ── gelu ──────────────┐
+            └── proj_rec ── conv1d ── RG-LRU ──⊙── proj_out ── (+residual)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import lshard
+from repro.models.layers import Params, _dense_init, split_keys
+
+_C = 8.0  # recurrence sharpness constant from the paper
+
+
+def rglru_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    w = d  # lru width = d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = split_keys(key, 6)
+    return {
+        "proj_gate": _dense_init(ks[0], (d, w), dt),
+        "proj_rec": _dense_init(ks[1], (d, w), dt),
+        "proj_out": _dense_init(ks[2], (w, d), dt),
+        "conv_w": _dense_init(ks[3], (cfg.conv_kernel, w), dt, scale=0.1),
+        "w_a": _dense_init(ks[4], (w, w), jnp.float32, scale=0.01),
+        "w_x": _dense_init(ks[5], (w, w), jnp.float32, scale=0.01),
+        # Λ init so that a ∈ (0.9, 0.999) at r=1 (paper's init range)
+        "lam": jnp.linspace(2.0, 6.0, w).astype(jnp.float32),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv. x: (B,S,w), w: (k,w). Returns (out, tail)."""
+    k = w.shape[0]
+    if state is None:
+        x_pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state, x], axis=1)
+    out = sum(x_pad[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    tail = x_pad[:, -(k - 1):, :] if k > 1 else None
+    return out.astype(x.dtype), tail
+
+
+def _lru_scan(a: jax.Array, b: jax.Array,
+              h0: jax.Array | None = None) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t via associative scan over axis 1 (S)."""
+    if h0 is not None:
+        # fold initial state into the first step
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_gates(p: Params, xr: jax.Array):
+    """Compute (a, b) for the recurrence, in float32."""
+    xf = xr.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"])
+    i = jax.nn.sigmoid(xf @ p["w_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * xf)
+    return a, b
+
+
+def rglru_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                  state: dict | None = None,
+                  ) -> tuple[jax.Array, dict | None]:
+    """x: (B,S,d). state: {"conv": (B,k-1,w), "h": (B,w)} for decode."""
+    gate = jax.nn.gelu(x @ p["proj_gate"])
+    xr = x @ p["proj_rec"]
+    conv_state = state["conv"] if state is not None else None
+    xr, conv_tail = _causal_conv(xr, p["conv_w"], conv_state)
+    xr = lshard(xr, "batch", "seq", "ff")
+    a, b = rglru_gates(p, xr)
+    h0 = state["h"] if state is not None else None
+    if x.shape[1] == 1 and state is not None:
+        # decode: one sequential step, no scan
+        h = (a[:, 0] * state["h"] + b[:, 0])[:, None, :]
+    else:
+        h = _lru_scan(a, b, h0)
+    out = (gate.astype(jnp.float32) * h).astype(x.dtype) @ p["proj_out"]
+    out = lshard(out, "batch", "seq", "embed")
+    new_state = None
+    if state is not None:
+        new_state = {"conv": conv_tail, "h": h[:, -1, :]}
+    return out, new_state
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int) -> dict:
+    w = cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, w), jnp.bfloat16),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }

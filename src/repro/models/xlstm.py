@@ -1,0 +1,235 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+From arXiv:2405.04517. TPU adaptation (DESIGN.md §7):
+
+- **mLSTM** uses the *chunkwise-parallel* formulation: within a chunk the
+  contribution is a (masked, gated) attention-like matmul on the MXU;
+  across chunks the matrix memory C (B,H,hd,hd) and normalizer n (B,H,hd)
+  are carried by a `lax.scan`. Decode is the O(1) recurrent update. This
+  replaces the CUDA per-warp recurrence with MXU-shaped tiles.
+- **sLSTM** has hidden-to-hidden recurrence (block-diagonal per head), so
+  it is inherently sequential: a `lax.scan` over time with exponential
+  gating and the (m, n) stabilizer state. Heads are block-diagonal, so
+  the per-step matmul is (B, H, hd) x (H, hd, hd).
+
+Both use exponential gating with the max-state stabilizer from the paper.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import lshard
+from repro.models.layers import Params, _dense_init, split_keys
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig) -> Params:
+    d, hd, H = cfg.d_model, cfg.head_dim, cfg.num_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = split_keys(key, 6)
+    return {
+        "wq": _dense_init(ks[0], (d, H * hd), dt),
+        "wk": _dense_init(ks[1], (d, H * hd), dt),
+        "wv": _dense_init(ks[2], (d, H * hd), dt),
+        "wo": _dense_init(ks[3], (H * hd, d), dt),
+        "w_if": _dense_init(ks[4], (d, 2 * H), jnp.float32, scale=0.01),
+        "b_if": jnp.concatenate([jnp.zeros((H,), jnp.float32),
+                                 jnp.full((H,), 3.0, jnp.float32)]),
+    }
+
+
+def _mlstm_chunk(q, k, v, log_i, log_f, C0, n0, m0):
+    """One chunk, parallel-within / recurrent-across.
+
+    q,k,v: (B,H,L,hd); log_i/log_f: (B,H,L); state C0 (B,H,hd,hd),
+    n0 (B,H,hd), m0 (B,H). Returns (out, C1, n1, m1).
+    """
+    B, H, L, hd = q.shape
+    # cumulative log forget within the chunk: F_t = sum_{s<=t} log f_s
+    F = jnp.cumsum(log_f, axis=-1)                       # (B,H,L)
+    # decay from chunk start to t (inclusive of f_t):
+    #   state contribution uses  exp(F_t)
+    # intra-chunk (j -> t, j<=t): exp(F_t - F_j) * i_j
+    m_intra = F[..., :, None] - F[..., None, :] + log_i[..., None, :]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    m_intra = jnp.where(causal, m_intra, -jnp.inf)       # (B,H,L,L)
+    m_state = F + m0[..., None]                          # (B,H,L)
+    # stabilizer: per-step max over both sources
+    m_new = jnp.maximum(jnp.max(m_intra, axis=-1), m_state)  # (B,H,L)
+    m_new = jnp.maximum(m_new, -1e30)
+    d_intra = jnp.exp(m_intra - m_new[..., None])        # (B,H,L,L)
+    d_state = jnp.exp(m_state - m_new)                   # (B,H,L)
+
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bhld,bhjd->bhlj", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    intra = jnp.einsum("bhlj,bhjd->bhld", s * d_intra,
+                       v.astype(jnp.float32))
+    inter = jnp.einsum("bhld,bhde->bhle", q.astype(jnp.float32) * scale,
+                       C0) * d_state[..., None]
+    num = intra + inter
+    # normalizer
+    n_intra = jnp.einsum("bhlj,bhjd->bhld", s * d_intra,
+                         jnp.ones_like(v, jnp.float32))
+    qn = jnp.einsum("bhld,bhd->bhl", q.astype(jnp.float32) * scale, n0)
+    denom = jnp.abs(jnp.sum(s * d_intra, axis=-1) + qn * d_state)
+    denom = jnp.maximum(denom, jnp.exp(-m_new))          # lower bound
+    out = num / denom[..., None]
+
+    # ---- state update to end of chunk ----
+    F_tot = F[..., -1]                                   # (B,H)
+    m1 = jnp.maximum(F_tot + m0, jnp.max(F_tot[..., None] - F + log_i,
+                                         axis=-1))
+    w_state = jnp.exp(F_tot + m0 - m1)                   # (B,H)
+    w_in = jnp.exp(F_tot[..., None] - F + log_i - m1[..., None])  # (B,H,L)
+    C1 = C0 * w_state[..., None, None] + jnp.einsum(
+        "bhld,bhle,bhl->bhde", k.astype(jnp.float32),
+        v.astype(jnp.float32), w_in)
+    n1 = n0 * w_state[..., None] + jnp.einsum(
+        "bhld,bhl->bhd", k.astype(jnp.float32), w_in)
+    return out, C1, n1, m1
+
+
+def mlstm_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                  state: dict | None = None, chunk: int = 256,
+                  ) -> tuple[jax.Array, dict | None]:
+    B, S, d = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    q = lshard(q, "batch", "heads", "seq", "head_dim")
+    k = lshard(k, "batch", "heads", "seq", "head_dim")
+    v = lshard(v, "batch", "heads", "seq", "head_dim")
+    gates = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32), p["w_if"]) \
+        + p["b_if"]
+    log_i = gates[..., :H].transpose(0, 2, 1)            # (B,H,S) pre-act
+    log_f = jax.nn.log_sigmoid(gates[..., H:]).transpose(0, 2, 1)
+
+    if state is not None and S == 1:
+        # O(1) decode step
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+        out, C1, n1, m1 = _mlstm_chunk(q, k, v, log_i, log_f, C0, n0, m0)
+        out = out[:, :, 0, :].reshape(B, 1, H * hd).astype(x.dtype)
+        y = out @ p["wo"]
+        return y, {"C": C1, "n": n1, "m": m1}
+
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    def to_chunks(t):
+        return t.reshape(B, H, nc, chunk, -1).transpose(2, 0, 1, 3, 4)
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    gic = log_i.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3)
+    gfc = log_f.reshape(B, H, nc, chunk).transpose(2, 0, 1, 3)
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.zeros((B, H), jnp.float32)
+    if state is not None:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def body(carry, inp):
+        C, n, m = carry
+        qi, ki, vi, gi, gf = inp
+        out, C, n, m = _mlstm_chunk(qi, ki, vi, gi, gf, C, n, m)
+        return (C, n, m), out
+
+    (C1, n1, m1), outs = jax.lax.scan(body, (C0, n0, m0),
+                                      (qc, kc, vc, gic, gfc))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd).astype(x.dtype)
+    y = out @ p["wo"]
+    y = lshard(y, "batch", "seq", "embed")
+    new_state = ({"C": C1, "n": n1, "m": m1}
+                 if state is not None else None)
+    return y, new_state
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int) -> dict:
+    H, hd = cfg.num_heads, cfg.head_dim
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.zeros((batch, H), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig) -> Params:
+    d, H = cfg.d_model, cfg.num_heads
+    hd = d // H
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = split_keys(key, 3)
+    return {
+        # input projections for gates i, f, z, o: (d, 4d)
+        "w_in": _dense_init(ks[0], (d, 4 * d), dt),
+        # block-diagonal recurrent weights per head: (4, H, hd, hd)
+        "r": _dense_init(ks[1], (4, H, hd, hd), jnp.float32, scale=0.05),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "w_out": _dense_init(ks[2], (d, d), dt),
+    }
+
+
+def slstm_forward(p: Params, x: jax.Array, cfg: ModelConfig,
+                  state: dict | None = None,
+                  ) -> tuple[jax.Array, dict | None]:
+    B, S, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    zx = (x @ p["w_in"]).astype(jnp.float32) + p["b"]    # (B,S,4d)
+    zx = zx.reshape(B, S, 4, H, hd)
+
+    if state is None:
+        st = slstm_state_init(cfg, B)
+    else:
+        st = state
+
+    # Batch-broadcast the recurrent weights BEFORE the scan: R used
+    # directly inside the step makes its scan-transposed cotangent a
+    # batch-CONTRACTED tensor, which GSPMD all-reduces over the DP axes
+    # at every timestep (measured 206 GB/chip/step — 4.2 MB × S × L,
+    # EXPERIMENTS.md §Perf C2). With a per-batch copy the dR carry stays
+    # batch-sharded through the scan and the broadcast's transpose sums
+    # it ONCE at the end (a single small all-reduce).
+    r_b = lshard(jnp.broadcast_to(p["r"][None], (B,) + p["r"].shape),
+                 "batch", None, None, None, None)
+
+    def step(carry, z_t):
+        c, n, m, h = carry                                # (B,H,hd) each
+        rec = jnp.einsum("bhd,bghde->bghe", h, r_b)       # (B,4,H,hd)
+        z = z_t + rec
+        i_t, f_t, z_in, o_t = (z[:, 0], z[:, 1], z[:, 2], z[:, 3])
+        m_new = jnp.maximum(jax.nn.log_sigmoid(f_t) + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(jax.nn.log_sigmoid(f_t) + m - m_new)
+        c_new = f_p * c + i_p * jnp.tanh(z_in)
+        n_new = f_p * n + i_p
+        h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    zx_t = zx.transpose(1, 0, 2, 3, 4)                    # (S,B,4,H,hd)
+    carry0 = (st["c"], st["n"], st["m"], st["h"])
+    (c1, n1, m1, h1), hs = jax.lax.scan(step, carry0, zx_t)
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    y = hs @ p["w_out"]
+    y = lshard(y, "batch", "seq", "embed")
+    new_state = ({"c": c1, "n": n1, "m": m1, "h": h1}
+                 if state is not None else None)
+    return y, new_state
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int) -> dict:
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    z = lambda: jnp.zeros((batch, H, hd), jnp.float32)
+    return {"c": z(), "n": z(), "m": z(), "h": z()}

@@ -1,0 +1,400 @@
+"""Loop-aware HLO analysis: FLOPs, collective bytes, roofline terms.
+
+Why not ``compiled.cost_analysis()`` alone? XLA's cost analysis counts a
+``while`` body **once**, not × trip-count (verified experimentally — see
+EXPERIMENTS.md §Roofline notes). Our models scan over layers and over
+attention tiles, so raw cost_analysis under-reports FLOPs by ~L× and
+misses every collective inside the layer loop. This module parses the
+optimized HLO text instead:
+
+- builds the computation call graph (while bodies, fusions, calls);
+- recovers each while loop's **trip count** from the comparison constant
+  in its condition computation (validated against known trip counts in
+  ``tests/test_roofline.py``);
+- multiplies per-computation costs by the product of enclosing trip
+  counts;
+- FLOPs: every ``dot`` contributes 2 · |out| · |contracted dims| (and
+  ``convolution`` 2 · |out| · |kernel|); elementwise FLOPs are ignored
+  (sub-1% for these models);
+- collective bytes: operand payload of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (+ ``-start``
+  async variants), loop-multiplied.
+
+Roofline terms (seconds, per step, whole mesh):
+    compute    = FLOPs_total   / (chips · PEAK_FLOPS)
+    memory     = HBM bytes     / (chips · HBM_BW)   [analytic model]
+    collective = coll bytes    / (chips · ICI_BW)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Mapping
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# Tensors smaller than this inside loop bodies are assumed VMEM-resident
+# (v5e VMEM = 128 MiB; double-buffered 32 MiB loop carries / tiles never
+# round-trip HBM between scan iterations).
+_VMEM_RESIDENT_BYTES = 32 * 2**20
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+
+
+def _parse_type(t: str) -> list[tuple[str, tuple[int, ...]]]:
+    """'f32[2,3]{1,0}' or '(f32[2], s32[])' -> [(dtype, shape), ...]."""
+    out = []
+    for m in _SHAPE_RE.finditer(t):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(x) for x in dims.split(",") if x) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _nbytes(t: str) -> int:
+    total = 0
+    for dt, shape in _parse_type(t):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: list[_Op]
+    text: str
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _parse_computations(hlo: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    buf: list[str] = []
+    for line in hlo.splitlines():
+        # tuple types embed /*index=N*/ comments whose '=' breaks the
+        # lazy type matcher — strip all comments first.
+        line = _COMMENT_RE.sub("", line)
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = _Computation(m.group(1), [], "")
+                buf = [line]
+            continue
+        buf.append(line)
+        if line.strip() == "}":
+            cur.text = "\n".join(buf)
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            cur.ops.append(_Op(m.group(1), m.group(2), m.group(3), line))
+    return comps
+
+
+_KNOWN_TRIPS_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _trip_count(cond: _Computation) -> int:
+    """Max integer constant in the condition computation ≈ loop bound."""
+    consts = [int(x) for x in
+              re.findall(r"constant\((\d+)\)", cond.text)]
+    return max(consts) if consts else 1
+
+
+def _op_trip_count(op: _Op, comps: dict[str, _Computation]) -> int:
+    """Trip count of a `while` op: exact backend_config annotation when
+    present (XLA loop analysis), else the condition-constant heuristic."""
+    m = _KNOWN_TRIPS_RE.search(op.line)
+    if m:
+        return int(m.group(1))
+    condm = re.search(r"condition=%?([\w\.\-]+)", op.line)
+    if condm and condm.group(1) in comps:
+        return _trip_count(comps[condm.group(1)])
+    return 1
+
+
+def _callees(op: _Op) -> list[tuple[str, str]]:
+    """[(kind, computation name)] referenced by this op."""
+    out = []
+    for attr in ("condition", "body", "calls", "to_apply",
+                 "true_computation", "false_computation"):
+        m = re.search(rf"{attr}=%?([\w\.\-]+)", op.line)
+        if m:
+            out.append((attr, m.group(1)))
+    m = re.search(r"branch_computations=\{([^}]*)\}", op.line)
+    if m:
+        for name in m.group(1).split(","):
+            out.append(("branch", name.strip().lstrip("%")))
+    return out
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float
+    collective_bytes: float
+    collective_ops: dict[str, float]
+    dot_count: int
+    while_trips: dict[str, int]
+    unparsed_dots: int = 0
+    hbm_bytes: float = 0.0
+
+
+def analyze_hlo(hlo: str) -> HLOCost:
+    comps = _parse_computations(hlo)
+    # entry = the computation whose name contains "main" or the last ENTRY
+    entry = None
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+    if m:
+        entry = m.group(1)
+    if entry not in comps:  # fallback: largest computation
+        entry = max(comps, key=lambda c: len(comps[c].ops))
+
+    # propagate multipliers through the call graph
+    mult: dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = {entry}
+    while order:
+        cname = order.pop(0)
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            for kind, callee in _callees(op):
+                if callee not in comps:
+                    continue
+                factor = 1.0
+                if kind == "body":
+                    factor = float(max(_op_trip_count(op, comps), 1))
+                child_mult = mult[cname] * factor
+                if callee in mult:
+                    mult[callee] = max(mult[callee], child_mult)
+                else:
+                    mult[callee] = child_mult
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    # fusion bodies: their internal ops are not HBM traffic (the fusion
+    # op's own output/operands are) — mark computations referenced by a
+    # `fusion` op's `calls=`.
+    fusion_bodies: set[str] = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                for kind, callee in _callees(op):
+                    if kind == "calls":
+                        fusion_bodies.add(callee)
+
+    # HBM-traffic proxy (documented in EXPERIMENTS.md §Roofline notes):
+    # every materialized tensor is written once and read ~once, so
+    # traffic ≈ 2 · Σ output-bytes of top-level ops (loop-multiplied),
+    # skipping metadata-only opcodes. Fusion internals are skipped.
+    # In-place updates (dynamic-update-slice, incl. as a fusion root)
+    # only touch the update slice — counting the full buffer would
+    # overcount a KV-cache append or scan accumulation by trip-count ×
+    # buffer/slice. `while`/`call`/`conditional` are skipped: their
+    # bodies are traversed with the loop multiplier already.
+    _NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "while", "call", "conditional"}
+
+    def _dus_update_bytes(comp: _Computation, op: _Op) -> float | None:
+        """If op is (a fusion rooted in) dynamic-update-slice, bytes of
+        the update operand; else None."""
+        if op.opcode == "dynamic-update-slice":
+            target = (comp, op)
+        elif op.opcode == "fusion":
+            body_name = next((c for k, c in _callees(op) if k == "calls"),
+                             None)
+            body = comps.get(body_name)
+            if body is None:
+                return None
+            root = next((o for o in body.ops
+                         if "ROOT" in o.line.split("=")[0]
+                         or o is body.ops[-1]), None)
+            if root is None or root.opcode != "dynamic-update-slice":
+                return None
+            target = (body, root)
+        else:
+            return None
+        bcomp, bop = target
+        btypes = {o.name: o.type_str for o in bcomp.ops}
+        names = re.findall(r"%([\w\.\-]+)",
+                           bop.line.split("(", 1)[1])
+        if len(names) >= 2 and names[1] in btypes:
+            return float(_nbytes(btypes[names[1]]))
+        return None
+
+    # name -> type map (per computation, for operand shape lookup)
+    flops = 0.0
+    coll_bytes = 0.0
+    coll_ops: dict[str, float] = {}
+    dot_count = 0
+    unparsed = 0
+    trips_out: dict[str, int] = {}
+    hbm = 0.0
+
+    for cname, comp in comps.items():
+        m_c = mult.get(cname, 0.0)
+        if m_c == 0.0:
+            continue
+        types = {op.name: op.type_str for op in comp.ops}
+        is_body = cname in fusion_bodies
+        # parameters: "%p = f32[..] parameter(0)" are ops too (covered)
+        for op in comp.ops:
+            if not is_body:
+                if op.opcode == "parameter" and cname == entry:
+                    hbm += _nbytes(op.type_str)  # weights read once/step
+                elif op.opcode not in _NO_TRAFFIC:
+                    dus = _dus_update_bytes(comp, op)
+                    if dus is not None:
+                        # in-place append: slice traffic per trip, but the
+                        # buffer is materialized at least once
+                        hbm += max(2.0 * dus * m_c,
+                                   float(_nbytes(op.type_str)))
+                    else:
+                        b = _nbytes(op.type_str)
+                        # TPU adaptation: per-iteration tensors below the
+                        # VMEM-residency threshold never hit HBM (loop
+                        # carries / double-buffered tiles stay on-chip)
+                        if not (m_c > 1.0 and b < _VMEM_RESIDENT_BYTES):
+                            hbm += 2.0 * b * m_c
+            if op.opcode == "dot":
+                out_t = _parse_type(op.type_str)
+                if not out_t:
+                    unparsed += 1
+                    continue
+                _, out_shape = out_t[0]
+                out_elems = 1
+                for d in out_shape:
+                    out_elems *= d
+                mdim = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                                 op.line)
+                ops_m = re.findall(r"%([\w\.\-]+)", op.line.split("(", 1)[1])
+                contracted = 1
+                if mdim and ops_m:
+                    lhs_t = types.get(ops_m[0])
+                    if lhs_t:
+                        parsed = _parse_type(lhs_t)
+                        if parsed:
+                            _, lhs_shape = parsed[0]
+                            for idx in mdim.group(1).split(","):
+                                if idx and int(idx) < len(lhs_shape):
+                                    contracted *= lhs_shape[int(idx)]
+                if contracted == 1:
+                    unparsed += 1
+                flops += 2.0 * out_elems * contracted * m_c
+                dot_count += 1
+            elif op.opcode == "convolution":
+                out_t = _parse_type(op.type_str)
+                if out_t:
+                    _, out_shape = out_t[0]
+                    out_elems = 1
+                    for d in out_shape:
+                        out_elems *= d
+                    # kernel size from rhs operand
+                    ops_m = re.findall(r"%([\w\.\-]+)",
+                                       op.line.split("(", 1)[1])
+                    kelems = 1
+                    if len(ops_m) > 1 and ops_m[1] in types:
+                        parsed = _parse_type(types[ops_m[1]])
+                        if parsed:
+                            _, kshape = parsed[0]
+                            for d in kshape[:-1]:
+                                kelems *= d
+                    flops += 2.0 * out_elems * kelems * m_c
+            else:
+                base = op.opcode.replace("-start", "")
+                if base in _COLLECTIVES:
+                    # payload: operand bytes (names after '(')
+                    args = op.line.split("(", 1)[1].split(")", 1)[0]
+                    b = 0
+                    for nm in re.findall(r"%([\w\.\-]+)", args):
+                        if nm in types:
+                            b += _nbytes(types[nm])
+                    if b == 0:  # fallback: output bytes
+                        b = _nbytes(op.type_str)
+                    coll_bytes += b * m_c
+                    coll_ops[base] = coll_ops.get(base, 0.0) + b * m_c
+                elif op.opcode == "while":
+                    trips_out[op.name] = _op_trip_count(op, comps)
+
+    return HLOCost(flops=flops, collective_bytes=coll_bytes,
+                   collective_ops=coll_ops, dot_count=dot_count,
+                   while_trips=trips_out, unparsed_dots=unparsed,
+                   hbm_bytes=hbm)
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    model_flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    useful_ratio: float
+    bytes_per_device: float
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline_terms(*, arch: str, shape: str, mesh: str, chips: int,
+                   hlo_flops: float, model_flops: float,
+                   hbm_bytes: float, collective_bytes: float,
+                   bytes_per_device: float = 0.0) -> Roofline:
+    compute_s = hlo_flops / (chips * hw.PEAK_FLOPS_BF16)
+    memory_s = hbm_bytes / (chips * hw.HBM_BW)
+    collective_s = collective_bytes / (chips * hw.ICI_BW_PER_LINK)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        hlo_flops=hlo_flops, model_flops=model_flops,
+        hbm_bytes=hbm_bytes, collective_bytes=collective_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck,
+        useful_ratio=(model_flops / hlo_flops if hlo_flops else 0.0),
+        bytes_per_device=bytes_per_device)

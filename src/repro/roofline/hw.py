@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants for the roofline model (per chip)."""
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW_PER_LINK = 50e9        # bytes/s per link
+HBM_BYTES = 16 * 2**30        # capacity per chip
+VMEM_BYTES = 128 * 2**20      # ~128MB vector memory (v5e)
+MXU_TILE = 128

@@ -1,0 +1,103 @@
+"""AdamW + LR schedules + global-norm clipping, implemented in-repo.
+
+Optimizer states are plain pytrees (shardable alongside params by the
+same rules), updates are pure functions — pjit-friendly and trivially
+checkpointable via the versioned store.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # ()
+    mu: Any                  # pytree like params
+    nu: Any                  # pytree like params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    schedule: str = "cosine"       # "cosine" | "linear" | "constant"
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - t
+    else:
+        decay = jnp.ones_like(t)
+    decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * decay
+    return cfg.lr * warm * decay
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=zeros(params), nu=zeros(params))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float
+                        ) -> tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, grads: Any, state: AdamWState,
+                 params: Any) -> tuple[Any, AdamWState, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, m, v, p):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / (1 - b1 ** step.astype(jnp.float32))
+        vh = v / (1 - b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        p2, m2, v2 = upd(g, m, v, p)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    new_params = jax.tree.unflatten(treedef, new_p)
+    new_state = AdamWState(step=step,
+                           mu=jax.tree.unflatten(treedef, new_m),
+                           nu=jax.tree.unflatten(treedef, new_v))
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,240 @@
+"""Training loop: contracts at every boundary, transactional publication.
+
+The loop is itself a pipeline in the paper's sense:
+
+    data batch --(TensorContract)--> train_step --(finite check)-->
+    checkpoint tables --(TransactionalRun)--> branch commit
+
+- the batch contract is validated before the step (worker moment);
+- train_step is a pure jit'd function: loss (z-loss + CE) + AdamW;
+- every ``ckpt_every`` steps the manager atomically publishes
+  {params, opt_state, data_state, metrics} (paper §3.3);
+- on restart, :func:`train` resumes from the branch head — bitwise
+  identical stream thanks to the committed pipeline cursor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoints.checkpointing import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.core.schema import TensorContract
+from repro.data.pipeline import DataPipeline
+from repro.models import model as MDL
+from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_init,
+                                      adamw_update)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    remat: str | None = None
+    z_loss: float = 1e-4
+    aux_weight: float = 1e-2
+    block_q: int = 512
+    block_kv: int = 512
+    seed: int = 0
+    # microbatch gradient accumulation: the global batch is split into
+    # `accum` microbatches scanned sequentially; live activation memory
+    # shrinks ~accum× while grads accumulate in f32 sharded like params
+    # (the standard big-model memory lever; see EXPERIMENTS.md §Perf A3).
+    accum: int = 1
+
+
+def batch_contract(cfg: ModelConfig, batch: int, seq: int
+                   ) -> dict[str, TensorContract]:
+    return {
+        "inputs": TensorContract((batch, seq), "int32"),
+        "targets": TensorContract((batch, seq), "int32"),
+    }
+
+
+@jax.custom_vjp
+def _bf16_grad_barrier(x):
+    """Identity whose COTANGENT is cast to bf16.
+
+    The chunked-CE einsum runs with preferred_element_type=f32 (numerics),
+    so the cotangent flowing back into the model is f32 — which would ride
+    the whole residual stream in f32 and double every TP activation-grad
+    all-reduce (measured 2× on command-r train_4k, EXPERIMENTS.md §Perf
+    A5). Activations are bf16; their grads can be too.
+    """
+    return x
+
+
+def _bgb_fwd(x):
+    return x, None
+
+
+def _bgb_bwd(_, g):
+    import jax.numpy as _jnp
+    return (g.astype(_jnp.bfloat16),)
+
+
+_bf16_grad_barrier.defvjp(_bgb_fwd, _bgb_bwd)
+
+
+def loss_fn(params, cfg: ModelConfig, inputs, targets, *,
+            z_loss: float, aux_weight: float, remat=None,
+            block_q=512, block_kv=512, extra=None,
+            loss_chunk: int = 512):
+    """Chunked cross-entropy: the (B, S, V) logits tensor is never
+    materialized — the LM head + CE are computed per seq-chunk inside a
+    rematerialized scan (e.g. command-r train_4k would need 4.2 GB/chip
+    for full logits; chunked it is ~0.5 GB live)."""
+    hidden, aux = MDL.forward(params, cfg, inputs, remat=remat,
+                              block_q=block_q, block_kv=block_kv,
+                              mode="hidden", **(extra or {}))
+    hidden = _bf16_grad_barrier(hidden)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    B, S, D = hidden.shape
+    chunk = min(loss_chunk, S)
+    assert S % chunk == 0
+    hc = hidden.reshape(B, S // chunk, chunk, D).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, S // chunk, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_ce(h, t):
+        logits = jnp.einsum("bsd,dv->bsv", h, head,
+                            preferred_element_type=jnp.float32)
+        if cfg.padded_vocab != cfg.vocab_size:  # mask vocab-padding cols
+            pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+            logits = jnp.where(pad_mask, -1e30, logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - tgt), jnp.sum(jnp.square(logz))
+
+    def body(acc, inp):
+        h, t = inp
+        ce_c, z_c = chunk_ce(h, t)
+        return (acc[0] + ce_c, acc[1] + z_c), None
+
+    (ce_sum, z_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, tc))
+    n = B * S
+    ce = ce_sum / n
+    zl = z_loss * z_sum / n
+    total = ce + zl + aux_weight * aux
+    return total, {"ce": ce, "z": zl, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    tc: TrainConfig, extra_spec: dict | None = None
+                    ) -> Callable:
+    """Builds the pure train_step; caller jits with in/out shardings."""
+
+    def grad_fn(params, inputs, targets, extra):
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, inputs, targets,
+                              z_loss=tc.z_loss, aux_weight=tc.aux_weight,
+                              remat=tc.remat, block_q=tc.block_q,
+                              block_kv=tc.block_kv, extra=extra),
+            has_aux=True)(params)
+
+    def train_step(params, opt_state: AdamWState, inputs, targets,
+                   *extra_args):
+        extra = None
+        if extra_spec:
+            extra = dict(zip(extra_spec, extra_args))
+        M = tc.accum
+        if M <= 1:
+            (loss, parts), grads = grad_fn(params, inputs, targets, extra)
+        else:
+            B = inputs.shape[0]
+            assert B % M == 0, (B, M)
+
+            def split(x):
+                return x.reshape(M, B // M, *x.shape[1:])
+
+            mb_in, mb_tg = split(inputs), split(targets)
+            mb_extra = (jax.tree.map(split, extra) if extra else None)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                from repro.distributed.sharding import lshard
+                g_acc, loss_acc, parts_acc = carry
+                xin, tgt, ex = mb
+                # keep microbatch slices batch-sharded (the reshape
+                # confuses GSPMD into involuntary full remat otherwise)
+                xin = lshard(xin, "batch", None)
+                tgt = lshard(tgt, "batch", None)
+                (loss, parts), g = grad_fn(params, xin, tgt, ex)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                parts_acc = jax.tree.map(jnp.add, parts_acc, parts)
+                return (g_acc, loss_acc + loss, parts_acc), None
+
+            zero_parts = {"ce": jnp.zeros((), jnp.float32),
+                          "z": jnp.zeros((), jnp.float32),
+                          "aux": jnp.zeros((), jnp.float32)}
+            (grads, loss, parts), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32), zero_parts),
+                (mb_in, mb_tg, mb_extra) if mb_extra is not None
+                else (mb_in, mb_tg, None))
+            grads = jax.tree.map(lambda g: g / M, grads)
+            loss = loss / M
+            parts = jax.tree.map(lambda x: x / M, parts)
+        new_params, new_opt, om = adamw_update(opt_cfg, grads, opt_state,
+                                               params)
+        metrics = {"loss": loss, **parts, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def train(cfg: ModelConfig, *, pipeline: DataPipeline,
+          opt_cfg: AdamWConfig, tc: TrainConfig,
+          ckpt: CheckpointManager | None = None,
+          params=None, opt_state=None,
+          jit_fn: Callable | None = None,
+          on_step: Callable[[int, dict], None] | None = None) -> dict:
+    """Run the loop; resumes from ``ckpt``'s branch head when present."""
+    key = jax.random.PRNGKey(tc.seed)
+    if params is None:
+        params = MDL.init_params(key, cfg)
+    if opt_state is None:
+        opt_state = adamw_init(params)
+
+    start_step = 0
+    if ckpt is not None:
+        restored = ckpt.restore(params, opt_state)
+        if restored is not None:
+            params, opt_state, data_state, _ = restored
+            start_step = int(data_state["step"])
+            pipeline.state = type(pipeline.state).from_json(
+                {k: data_state[k] for k in
+                 ("shard_order_seed", "epoch", "step")})
+
+    step_fn = jit_fn or jax.jit(make_train_step(cfg, opt_cfg, tc))
+    contracts = batch_contract(cfg, pipeline.batch, pipeline.seq_len)
+
+    history = []
+    for step in range(start_step, tc.steps):
+        inputs, targets = pipeline.next_batch()
+        # worker-moment contract check on the physical batch
+        contracts["inputs"].validate_concrete(inputs, "inputs")
+        contracts["targets"].validate_concrete(targets, "targets")
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(
+            params, opt_state, jnp.asarray(inputs), jnp.asarray(targets))
+        metrics = {k: float(v) for k, v in metrics.items()}
+        metrics["step_time_s"] = time.perf_counter() - t0
+        history.append({"step": step, **metrics})
+        if on_step:
+            on_step(step, metrics)
+        if ckpt is not None and (step + 1) % tc.ckpt_every == 0:
+            ckpt.save(step=step + 1, params=params, opt_state=opt_state,
+                      data_state=pipeline.state.to_json(),
+                      metrics=metrics, code=f"{cfg.name}@{step + 1}")
+    return {"params": params, "opt_state": opt_state, "history": history}

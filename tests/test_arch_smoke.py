@@ -1,0 +1,153 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family
+configs, one forward + one decode step + one train step on CPU, asserting
+shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.configs.base import SHAPES
+from repro.models import model as MDL
+
+
+def _extras(cfg, B, dtype=jnp.bfloat16):
+    ex = {}
+    if cfg.encoder_layers:
+        ex["audio_embeds"] = jnp.zeros(
+            (B, cfg.num_source_positions, cfg.d_model), dtype)
+    elif cfg.family == "vlm":
+        ex["vision_embeds"] = jnp.zeros(
+            (B, cfg.num_source_positions, cfg.d_model), dtype)
+    return ex
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_finite(arch, rng):
+    cfg = get_smoke_config(arch)
+    params = MDL.init_params(rng, cfg)
+    B, S = 2, 24
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    logits, aux = MDL.forward(params, cfg, toks, **_extras(cfg, B))
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_shapes_finite(arch, rng):
+    cfg = get_smoke_config(arch)
+    params = MDL.init_params(rng, cfg)
+    B = 2
+    enc = None
+    ex = _extras(cfg, B)
+    if cfg.encoder_layers:
+        enc = MDL.encode(params, cfg, ex["audio_embeds"])
+    caches = MDL.init_cache(cfg, B, 32, enc_out=enc)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for _ in range(3):
+        logits, caches = MDL.decode_step(params, cfg, tok, caches)
+        tok = jnp.argmax(logits[:, :, :cfg.vocab_size], axis=-1
+                         ).astype(jnp.int32)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch, rng):
+    from repro.training.optimizer import AdamWConfig, adamw_init
+    from repro.training.train_loop import TrainConfig, make_train_step
+
+    cfg = get_smoke_config(arch)
+    params = MDL.init_params(rng, cfg)
+    opt = adamw_init(params)
+    B, S = 2, 16
+    toks = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (B, S)).astype(np.int32)
+    ex = _extras(cfg, B)
+    tc = TrainConfig(remat=None, block_q=8, block_kv=8)
+    step = make_train_step(cfg, AdamWConfig(lr=1e-3), tc,
+                           extra_spec=dict.fromkeys(ex) if ex else None)
+    new_params, new_opt, metrics = jax.jit(step)(
+        params, opt, jnp.asarray(toks), jnp.asarray(toks), *ex.values())
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually moved
+    moved = jax.tree.reduce(
+        lambda a, b: a or b,
+        jax.tree.map(lambda a, b: bool(jnp.any(a != b)),
+                     params, new_params))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """Full (dry-run) configs carry the exact published dimensions."""
+    expected = {
+        "whisper_medium": (24, 1024, 16, 16, 4096, 51865),
+        "phi3_vision_4b": (32, 3072, 32, 32, 8192, 32064),
+        "recurrentgemma_9b": (38, 4096, 16, 1, 12288, 256000),
+        "llama4_scout_17b": (48, 5120, 40, 8, 8192, 202048),
+        "granite_moe_3b": (32, 1536, 24, 8, 512, 49155),
+        "minitron_8b": (32, 4096, 32, 8, 16384, 256000),
+        "phi3_medium_14b": (40, 5120, 40, 10, 17920, 100352),
+        "command_r_plus_104b": (64, 12288, 96, 8, 33792, 256000),
+        "phi4_mini_3b": (32, 3072, 24, 8, 8192, 200064),
+        "xlstm_350m": (24, 1024, 4, 4, 0, 50304),
+    }
+    cfg = get_config(arch)
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected[arch]
+
+
+def test_moe_configs():
+    l4 = get_config("llama4_scout_17b")
+    assert l4.moe.num_experts == 16 and l4.moe.experts_per_token == 1
+    gr = get_config("granite_moe_3b")
+    assert gr.moe.num_experts == 40 and gr.moe.experts_per_token == 8
+
+
+def test_family_properties():
+    assert get_config("recurrentgemma_9b").sub_quadratic
+    assert get_config("xlstm_350m").sub_quadratic
+    for a in ("minitron_8b", "whisper_medium", "phi3_vision_4b",
+              "llama4_scout_17b", "granite_moe_3b", "phi3_medium_14b",
+              "command_r_plus_104b", "phi4_mini_3b"):
+        assert not get_config(a).sub_quadratic, a
+
+
+def test_param_counts_sane():
+    """Analytic N within the published ballpark (loose: ±40%)."""
+    approx = {
+        "phi4_mini_3b": 3.8e9, "minitron_8b": 8e9,
+        "phi3_medium_14b": 14e9, "command_r_plus_104b": 104e9,
+        "recurrentgemma_9b": 9e9,
+        # xlstm-350m: the ASSIGNED dims (24L, d=1024, d_ff=0) give ~150M
+        # analytically — the published 350M includes mLSTM expansion
+        # factors the assignment does not specify.
+        "xlstm_350m": 0.15e9,
+        "llama4_scout_17b": 17e9 * 6,    # 16 experts: total, not active
+        "whisper_medium": 0.77e9, "phi3_vision_4b": 4.2e9,
+        "granite_moe_3b": 3.3e9,
+    }
+    for a, n in approx.items():
+        got = get_config(a).num_params()
+        assert 0.5 * n < got < 1.9 * n, (a, got, n)
+
+
+def test_active_params_moe():
+    l4 = get_config("llama4_scout_17b")
+    assert l4.num_active_params() < 0.3 * l4.num_params()
+
+
+def test_shapes_assignment():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524_288

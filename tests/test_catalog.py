@@ -1,0 +1,194 @@
+"""Git-for-data semantics (paper §3.2, Listings 6–8) + visibility fix."""
+import pytest
+
+from repro.core.catalog import Catalog, Visibility
+from repro.core.errors import (BranchExists, BranchNotFound, CatalogError,
+                               MergeConflict, RefConflict, VisibilityError)
+
+
+@pytest.fixture
+def cat():
+    return Catalog()
+
+
+def test_initial_state_single_branch_root_commit(cat):
+    assert cat.branches() == ["main"]
+    head = cat.head("main")
+    assert head.tables == {}
+    assert head.parents == ()
+
+
+def test_write_table_advances_head_and_links_parent(cat):
+    before = cat.head("main")
+    c = cat.write_table("main", "parent_table", "snap1")
+    assert cat.head("main").id == c.id
+    assert c.parents == (before.id,)
+    assert c.tables == {"parent_table": "snap1"}
+
+
+def test_zero_copy_branch_shares_commits(cat):
+    cat.write_table("main", "t", "s1")
+    cat.create_branch("feature", "main")
+    assert cat.head("feature").id == cat.head("main").id
+    # writing to the branch does not move main (logical isolation)
+    cat.write_table("feature", "t", "s2")
+    assert cat.read_table("main", "t") == "s1"
+    assert cat.read_table("feature", "t") == "s2"
+
+
+def test_branch_name_collision(cat):
+    cat.create_branch("dev", "main")
+    with pytest.raises(BranchExists):
+        cat.create_branch("dev", "main")
+
+
+def test_tag_is_immutable_pin(cat):
+    cat.write_table("main", "t", "s1")
+    cid = cat.tag("v1", "main")
+    cat.write_table("main", "t", "s2")
+    assert cat.head("v1").id == cid
+    assert cat.read_table("v1", "t") == "s1"      # pinned
+    assert cat.read_table("main", "t") == "s2"
+
+
+def test_fast_forward_merge(cat):
+    cat.write_table("main", "t", "s1")
+    cat.create_branch("f", "main")
+    cat.write_table("f", "t", "s2")
+    merged = cat.merge("f", into="main")
+    assert cat.head("main").id == merged.id
+    assert cat.read_table("main", "t") == "s2"
+    # fast-forward: no new commit object created (head == f's head)
+    assert cat.head("f").id == merged.id
+
+
+def test_three_way_merge_disjoint_tables(cat):
+    cat.write_table("main", "a", "a0")
+    cat.write_table("main", "b", "b0")
+    cat.create_branch("f", "main")
+    cat.write_table("f", "a", "a1")
+    cat.write_table("main", "b", "b1")     # main moved: not a FF
+    m = cat.merge("f", into="main")
+    assert len(m.parents) == 2
+    assert cat.read_table("main", "a") == "a1"
+    assert cat.read_table("main", "b") == "b1"
+
+
+def test_merge_conflict_same_table(cat):
+    cat.write_table("main", "t", "s0")
+    cat.create_branch("f", "main")
+    cat.write_table("f", "t", "left")
+    cat.write_table("main", "t", "right")
+    with pytest.raises(MergeConflict):
+        cat.merge("f", into="main")
+
+
+def test_merge_noop_when_source_behind(cat):
+    cat.write_table("main", "t", "s0")
+    cat.create_branch("f", "main")
+    cat.write_table("main", "t", "s1")
+    head = cat.head("main")
+    assert cat.merge("f", into="main").id == head.id
+
+
+def test_optimistic_cas_on_write(cat):
+    h = cat.head("main").id
+    cat.write_table("main", "t", "s1")     # another writer wins the race
+    with pytest.raises(RefConflict):
+        cat.write_table("main", "t", "s2", expected_head=h)
+
+
+def test_with_retry_recovers_from_conflict(cat):
+    attempts = []
+
+    def op():
+        attempts.append(1)
+        if len(attempts) < 3:
+            raise RefConflict("simulated")
+        return cat.write_table("main", "t", "s")
+
+    c = cat.with_retry(op)
+    assert c.tables["t"] == "s"
+    assert len(attempts) == 3
+
+
+def test_log_and_diff(cat):
+    cat.write_table("main", "a", "a0")
+    cat.write_table("main", "b", "b0")
+    log = cat.log("main")
+    assert [c.message for c in log[:2]] == ["write b", "write a"]
+    cat.create_branch("f", "main")
+    cat.write_table("f", "a", "a1")
+    assert cat.diff("main", "f") == {"a": ("a0", "a1")}
+
+
+def test_delete_branch_guards(cat):
+    with pytest.raises(CatalogError):
+        cat.delete_branch("main")
+    with pytest.raises(BranchNotFound):
+        cat.delete_branch("ghost")
+
+
+def test_read_missing_table(cat):
+    with pytest.raises(CatalogError):
+        cat.read_table("main", "nope")
+
+
+# ---------------------------------------------------------------------------
+# Visibility classes — the Fig. 4 guardrail (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def _aborted_branch(cat):
+    cat.write_table("main", "P", "p0")
+    cat.create_branch("txn/r1", "main", visibility=Visibility.TXN,
+                      owner_run="r1")
+    cat.write_table("txn/r1", "P", "p1", _system=True)
+    cat.mark("txn/r1", Visibility.ABORTED)
+    return "txn/r1"
+
+
+def test_user_cannot_write_live_txn_branch(cat):
+    cat.create_branch("txn/r9", "main", visibility=Visibility.TXN,
+                      owner_run="r9")
+    with pytest.raises(VisibilityError):
+        cat.write_table("txn/r9", "t", "s")          # not _system
+    cat.write_table("txn/r9", "t", "s", _system=True)
+
+
+def test_aborted_branch_is_readable_not_mergeable(cat):
+    b = _aborted_branch(cat)
+    assert cat.read_table(b, "P") == "p1"            # debugging read OK
+    with pytest.raises(VisibilityError, match="aborted"):
+        cat.merge(b, into="main")                    # Fig. 4 prevented
+    with pytest.raises(VisibilityError):
+        cat.write_table(b, "P", "p2")                # frozen
+
+
+def test_branch_from_aborted_requires_allow_reuse(cat):
+    b = _aborted_branch(cat)
+    with pytest.raises(VisibilityError, match="allow_reuse"):
+        cat.create_branch("retry", b)
+    cat.create_branch("retry", b, allow_reuse=True)
+    assert cat.branch_info("retry").visibility is Visibility.QUARANTINED
+
+
+def test_quarantined_merge_blocked_until_verified(cat):
+    b = _aborted_branch(cat)
+    cat.create_branch("retry", b, allow_reuse=True)
+    cat.write_table("retry", "C", "c-fixed")
+    with pytest.raises(VisibilityError, match="quarantined"):
+        cat.merge("retry", into="main")
+    # after re-verification the idempotent-re-run optimization is legal
+    cat.mark("retry", Visibility.QUARANTINED, verified=True)
+    cat.merge("retry", into="main")
+    assert cat.read_table("main", "C") == "c-fixed"
+    assert cat.read_table("main", "P") == "p1"       # reused parent
+
+
+def test_quarantine_is_contagious(cat):
+    b = _aborted_branch(cat)
+    cat.create_branch("retry", b, allow_reuse=True)
+    with pytest.raises(VisibilityError):
+        cat.create_branch("retry2", "retry")         # still quarantined
+    cat.create_branch("retry2", "retry", allow_reuse=True)
+    assert cat.branch_info("retry2").visibility is Visibility.QUARANTINED

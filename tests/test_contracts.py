@@ -1,0 +1,199 @@
+"""Contract composition — the paper's three checking moments (§3.1)."""
+import datetime
+
+import numpy as np
+import pytest
+
+from repro.core import schema as S
+from repro.core.contracts import (CastDecl, check_edge, check_node,
+                                  check_wellformed, provable_postconditions,
+                                  validate_table)
+from repro.core.errors import ContractCompositionError, ContractRuntimeError
+from repro.data.tables import Table
+
+
+class ParentSchema(S.Schema):
+    col1: str
+    col2: datetime.datetime
+    _S: int
+
+
+class ChildSchema(S.Schema):
+    col2: datetime.datetime
+    col4: float
+    col5: S.Nullable[str]
+
+
+class Grand(S.Schema):
+    col2: datetime.datetime
+    col4: int
+
+
+def test_listing3_inherit_fresh_narrow():
+    """Paper Listing 3: col2 as-is, col4/col5 fresh, then col4 narrowed."""
+    r1 = check_edge(ParentSchema, ChildSchema)
+    assert set(r1.inherited) == {"col2"}
+    assert set(r1.fresh) == {"col4", "col5"}
+
+    # Grand narrows col4 float->int: requires the Listing-5 arrow_cast.
+    with pytest.raises(ContractCompositionError, match="without an explicit cast"):
+        check_edge(ChildSchema, Grand)
+    r2 = check_edge(ChildSchema, Grand,
+                    casts=[CastDecl("col4", S.INT)])
+    assert "col4" in r2.narrowed
+
+
+def test_cast_target_must_match_declared_type():
+    with pytest.raises(ContractCompositionError, match="cast target"):
+        check_edge(ChildSchema, Grand, casts=[CastDecl("col4", S.INT32)])
+
+
+def test_incompatible_types_rejected():
+    Up = S.Schema.of("Up", a=str)
+    Down = S.Schema.of("Down", a=int)
+    with pytest.raises(ContractCompositionError, match="incompatible"):
+        check_edge(Up, Down)
+
+
+def test_widening_needs_no_cast():
+    Up = S.Schema.of("Up", a=int)
+    Down = S.Schema.of("Down", a=float)
+    r = check_edge(Up, Down)
+    assert "a" in r.inherited and "a" not in r.narrowed
+
+
+def test_schema_type_change_breaks_downstream():
+    """Paper §2 failure mode 1: col3 becomes float upstream — the child
+    contract that assumed int now fails at the CONTROL PLANE, not at
+    runtime."""
+    RawV1 = S.Schema.of("Raw", col3=int)
+    RawV2 = S.Schema.of("Raw", col3=str)       # semantic shift
+    Consumer = S.Schema.of("Consumer", col3=int)
+    check_edge(RawV1, Consumer)                # composes
+    with pytest.raises(ContractCompositionError):
+        check_edge(RawV2, Consumer)            # caught before any run
+
+
+def test_nullability_narrowing_requires_declaration():
+    Up = S.Schema.of("Up", a=S.Nullable[str])
+    # fresh declaration of NOT NULL `a` downstream without [NotNull]:
+    Down = S.Schema.of("Down", a=str)
+    with pytest.raises(ContractCompositionError, match="nullability"):
+        check_edge(Up, Down)
+    # with explicit [NotNull] lineage it composes (Appendix A)
+    DownOk = S.Schema.of("DownOk", a=Up.a[S.NotNull])
+    r = check_edge(Up, DownOk)
+    assert "a" in r.narrowed
+
+
+def test_nullability_widening_always_safe():
+    Up = S.Schema.of("Up", a=str)
+    Down = S.Schema.of("Down", a=S.Nullable[str])
+    check_edge(Up, Down)
+
+
+def test_appendix_a_binary_node():
+    class FriendSchema(S.Schema):
+        col2 = ChildSchema.col2
+        col4 = Grand.col4
+        col5 = ChildSchema.col5[S.NotNull]
+
+    r = check_node({"child_table": ChildSchema, "grand_child": Grand},
+                   FriendSchema)
+    assert set(r.inherited) == {"col2", "col4", "col5"}
+    assert "col5" in r.narrowed     # null-ness narrowed, declared
+
+
+def test_lineage_to_missing_input_rejected():
+    class Lonely(S.Schema):
+        col4 = Grand.col4
+
+    with pytest.raises(ContractCompositionError, match="lineage"):
+        check_node({"child": ChildSchema}, Lonely)   # Grand not an input
+
+
+def test_wellformed_rejects_bad_lineage():
+    bad = S.Schema.of("Bad", a=int)
+    bad._columns_["a"] = S.Column("a", S.INT, inherited_from="noDotHere")
+    with pytest.raises(Exception):
+        check_wellformed(bad)
+
+
+# ---------------------------------------------------------------------------
+# Moment 3: worker-side physical validation
+# ---------------------------------------------------------------------------
+
+def _child_table(with_null_col4=False):
+    col4 = np.array([1.5, 2.5, np.nan]) if with_null_col4 else \
+        np.array([1.5, 2.5, 3.5])
+    return Table({
+        "col2": np.array(["2026-01-01", "2026-01-02", "2026-01-03"],
+                         dtype="datetime64[ns]"),
+        "col4": col4,
+        "col5": np.array(["a", None, "c"], dtype=object),  # nullable
+    })
+
+
+def test_validate_table_happy():
+    validate_table(_child_table(), ChildSchema)
+
+
+def test_validate_table_missing_column():
+    t = Table({"col2": np.array([], dtype="datetime64[ns]")})
+    with pytest.raises(ContractRuntimeError, match="missing columns"):
+        validate_table(t, ChildSchema)
+
+
+class ChildStrict(S.Schema):
+    """Like ChildSchema but col5 is declared NOT NULL."""
+    col2: datetime.datetime
+    col4: float
+    col5: str
+
+
+def test_validate_table_nulls_in_notnull_column():
+    t = _child_table()   # col5 contains a None
+    with pytest.raises(ContractRuntimeError, match="NOT NULL"):
+        validate_table(t, ChildStrict)
+
+
+def test_validate_table_elision_skips_check():
+    t = _child_table()
+    validate_table(t, ChildStrict, elide=frozenset({"col5"}))
+
+
+def test_validate_table_wrong_physical_dtype():
+    t = Table({
+        "col2": np.array(["2026-01-01"], dtype="datetime64[ns]"),
+        "col4": np.array([1], dtype=np.int64),   # declared float
+        "col5": np.array(["x"], dtype=object),
+    })
+    with pytest.raises(ContractRuntimeError, match="physical dtype"):
+        validate_table(t, ChildSchema)
+
+
+# ---------------------------------------------------------------------------
+# "Dafny-style" static discharge (Appendix A)
+# ---------------------------------------------------------------------------
+
+def test_provable_postconditions_inspectable_preserving():
+    Up = S.Schema.of("Up", a=str, b=S.Nullable[str])
+    Down = S.Schema.of("Down", a=str, c=int)
+    prov = provable_postconditions({"up": Up}, Down, inspectable=True,
+                                   null_preserving=True)
+    assert prov == frozenset({"a"})   # inherited not-null; c is fresh
+
+
+def test_provable_postconditions_opaque_node_discharges_nothing():
+    Up = S.Schema.of("Up", a=str)
+    Down = S.Schema.of("Down", a=str)
+    assert provable_postconditions({"up": Up}, Down, inspectable=False,
+                                   null_preserving=True) == frozenset()
+
+
+def test_provable_postconditions_nullable_upstream_not_provable():
+    Up = S.Schema.of("Up", a=S.Nullable[str])
+    Down = S.Schema.of("Down", a=Up.a[S.NotNull])
+    # upstream nullable: the filter must be physically checked
+    assert provable_postconditions({"up": Up}, Down, inspectable=True,
+                                   null_preserving=True) == frozenset()

@@ -1,0 +1,249 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles.
+
+Kernels execute in ``interpret=True`` mode (CPU container; TPU is the
+compile target). Tolerances: bf16 inputs accumulate in f32 inside both
+kernel and oracle, so 1e-2/atol covers rounding differences.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.mlstm.ops import mlstm
+from repro.kernels.mlstm.ref import mlstm_ref
+from repro.kernels.rglru.ops import rglru_scan
+from repro.kernels.rglru.ref import rglru_scan_ref
+
+
+def _qkv(key, B, H, K, Sq, Skv, hd, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, H, Sq, hd), dtype)
+    k = jax.random.normal(kk, (B, K, Skv, hd), dtype)
+    v = jax.random.normal(kv, (B, K, Skv, hd), dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,K,Sq,Skv,hd", [
+    (1, 2, 2, 128, 128, 64),       # square causal
+    (2, 4, 1, 128, 128, 32),       # MQA
+    (1, 4, 2, 256, 256, 64),       # GQA 2:1
+    (1, 2, 2, 96, 160, 64),        # ragged: needs padding
+    (1, 1, 1, 64, 512, 128),       # long kv (prefill-like)
+])
+def test_flash_vs_ref_shapes(B, H, K, Sq, Skv, hd, dtype):
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, H, K, Sq, Skv, hd, dtype)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = flash_attention_ref(
+        q, jnp.repeat(k, H // K, 1), jnp.repeat(v, H // K, 1), causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 128, 511])
+def test_flash_sliding_window(window):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 2, 2, 256, 256, 64,
+                   jnp.float32)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_noncausal():
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 2, 2, 128, 128, 64,
+                   jnp.float32)
+    got = flash_attention(q, k, v, causal=False, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("block_q,block_kv", [(64, 64), (128, 256),
+                                              (256, 128)])
+def test_flash_block_shape_invariance(block_q, block_kv):
+    """Output must not depend on the tiling (a pure perf knob)."""
+    q, k, v = _qkv(jax.random.PRNGKey(3), 1, 2, 2, 256, 256, 64,
+                   jnp.float32)
+    got = flash_attention(q, k, v, causal=True, block_q=block_q,
+                          block_kv=block_kv, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_matches_model_attention_path():
+    """The model's pure-XLA blockwise path and the Pallas kernel share
+    semantics (same tile structure): cross-validate them."""
+    from repro.models.layers import blockwise_attention
+    q, k, v = _qkv(jax.random.PRNGKey(4), 2, 4, 2, 192, 192, 32,
+                   jnp.float32)
+    a = flash_attention(q, k, v, causal=True, interpret=True)
+    b = blockwise_attention(q, k, v, causal=True, block_q=64, block_kv=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("B,S,W", [(1, 128, 128), (2, 256, 256),
+                                   (1, 384, 128), (3, 64, 512)])
+def test_rglru_vs_ref(B, S, W, dtype):
+    key = jax.random.PRNGKey(0)
+    # a in (0,1): decay; b: input — the RG-LRU linear recurrence
+    a = jax.nn.sigmoid(jax.random.normal(key, (B, S, W), dtype))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (B, S, W), dtype)
+    got = rglru_scan(a, b, interpret=True)
+    want = rglru_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.integers(2, 7), w=st.integers(1, 4), seed=st.integers(0, 99))
+def test_rglru_property_linear_recurrence(s, w, seed):
+    """Property: h_t = a_t * h_{t-1} + b_t exactly (vs numpy loop)."""
+    S, W = s * 32, w * 128
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(0.1, 0.99, (1, S, W)).astype(np.float32)
+    b = rng.normal(size=(1, S, W)).astype(np.float32)
+    got = np.asarray(rglru_scan(jnp.asarray(a), jnp.asarray(b),
+                                interpret=True))
+    h = np.zeros((1, W), np.float32)
+    want = np.zeros_like(b)
+    for t in range(S):
+        h = a[:, t] * h + b[:, t]
+        want[:, t] = h
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_rglru_block_invariance():
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(5),
+                                         (1, 256, 128)))
+    b = jax.random.normal(jax.random.PRNGKey(6), (1, 256, 128))
+    x1 = rglru_scan(a, b, block_s=64, interpret=True)
+    x2 = rglru_scan(a, b, block_s=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM chunkwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,hd", [(1, 128, 64), (2, 256, 32),
+                                    (1, 512, 64)])
+def test_mlstm_vs_ref(B, S, hd):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, hd)) / np.sqrt(hd)
+    k = jax.random.normal(ks[1], (B, S, hd)) / np.sqrt(hd)
+    v = jax.random.normal(ks[2], (B, S, hd))
+    log_i = -jax.nn.softplus(-jax.random.normal(ks[3], (B, S)))   # <= 0
+    log_f = -jax.nn.softplus(-jax.random.normal(ks[4], (B, S)) - 2.0)
+    got = mlstm(q, k, v, log_i, log_f, chunk=64, interpret=True)
+    want = mlstm_ref(q, k, v, log_i, log_f)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mlstm_chunk_invariance():
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 5)
+    B, S, hd = 1, 256, 32
+    q = jax.random.normal(ks[0], (B, S, hd)) / np.sqrt(hd)
+    k = jax.random.normal(ks[1], (B, S, hd)) / np.sqrt(hd)
+    v = jax.random.normal(ks[2], (B, S, hd))
+    log_i = -jax.nn.softplus(-jax.random.normal(ks[3], (B, S)))
+    log_f = -jax.nn.softplus(-jax.random.normal(ks[4], (B, S)) - 2.0)
+    x1 = mlstm(q, k, v, log_i, log_f, chunk=32, interpret=True)
+    x2 = mlstm(q, k, v, log_i, log_f, chunk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash custom-VJP (the training-path backward; EXPERIMENTS.md §Perf A)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,K,S,hd,causal,window", [
+    (1, 2, 2, 128, 32, True, None),
+    (2, 4, 2, 96, 32, True, None),        # GQA + ragged padding
+    (1, 2, 2, 160, 32, True, 48),         # sliding window
+    (1, 2, 2, 64, 32, False, None),       # non-causal (encoder)
+])
+def test_flash_vjp_matches_reference_grads(B, H, K, S, hd, causal, window):
+    from repro.models.layers import blockwise_attention, full_attention
+
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, K, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, K, S, hd), jnp.float32)
+
+    def loss_blk(q, k, v):
+        return jnp.sum(jnp.sin(blockwise_attention(
+            q, k, v, causal=causal, window=window,
+            block_q=64, block_kv=64).astype(jnp.float32)))
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.sin(full_attention(
+            q, k, v, causal=causal, window=window).astype(jnp.float32)))
+
+    g1 = jax.grad(loss_blk, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_bf16_grad_barrier_casts_cotangent():
+    from repro.training.train_loop import _bf16_grad_barrier
+
+    x = jnp.ones((4,), jnp.bfloat16)
+    g = jax.grad(lambda x: jnp.sum(
+        _bf16_grad_barrier(x).astype(jnp.float32) * 2.0))(x)
+    assert g.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(g, np.float32), 2.0)
+
+
+def test_slstm_batched_recurrent_weights_grad():
+    """The batch-broadcast R trick must not change sLSTM gradients."""
+    from repro.configs import get_smoke_config
+    from repro.models import xlstm as X
+
+    cfg = get_smoke_config("xlstm_350m")
+    p = X.slstm_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+
+    def loss(p):
+        y, _ = X.slstm_forward(p, x, cfg)
+        return jnp.sum(jnp.square(y.astype(jnp.float32)))
+
+    g = jax.grad(loss)(p)
+    # numerical check on a few scalar entries of R
+    eps = 1e-3
+    for idx in [(0, 0, 0, 0), (1, 1, 2, 3)]:
+        pp = jax.tree.map(jnp.array, p)
+        r = pp["r"].at[idx].add(eps)
+        lp = loss(dict(pp, r=r))
+        r = pp["r"].at[idx].add(-eps)
+        lm = loss(dict(pp, r=r))
+        num = (lp - lm) / (2 * eps)
+        np.testing.assert_allclose(float(g["r"][idx]), float(num),
+                                   rtol=5e-2, atol=5e-2)

@@ -1,0 +1,215 @@
+"""Executable Alloy model (paper §4): adequacy, counterexample, fix.
+
+The unguarded variant must REACH the paper's Fig. 4 inconsistent state
+(that is what makes the model adequate); the guarded variant must make
+the same trace — and every trace hypothesis can find — safe.
+"""
+import pytest
+from hypothesis import HealthCheck, settings
+from hypothesis import strategies as st
+from hypothesis.stateful import (RuleBasedStateMachine, invariant,
+                                 precondition, rule)
+
+from repro.core.errors import ReproError, VisibilityError
+from repro.core.model_check import LakehouseModel
+
+PLAN = ("P", "C", "G")
+
+
+# ---------------------------------------------------------------------------
+# Adequacy: reproduce Fig. 3 (top and bottom)
+# ---------------------------------------------------------------------------
+
+def test_fig3_top_direct_mode_reaches_torn_state():
+    m = LakehouseModel(guarded=True)
+    ok = m.begin_run(PLAN, mode="direct")
+    while not ok.done:
+        m.step_run(ok)
+    m.finish_run(ok)
+    assert m.is_consistent()
+
+    bad = m.begin_run(PLAN, mode="direct")
+    m.step_run(bad)           # writes P** directly to main …
+    m.fail_run(bad)           # … then dies
+    assert not m.is_consistent()          # {P**, C*, G*}: torn
+    assert m.torn_runs() == [bad.run_id]
+
+
+def test_fig3_bottom_txn_mode_never_tears():
+    m = LakehouseModel(guarded=True)
+    ok = m.begin_run(PLAN, mode="txn")
+    while not ok.done:
+        m.step_run(ok)
+        assert m.is_consistent()          # mid-run: main untouched
+    m.finish_run(ok)
+    assert m.is_consistent()
+
+    bad = m.begin_run(PLAN, mode="txn")
+    m.step_run(bad)
+    m.fail_run(bad)
+    assert m.is_consistent()              # total failure, not partial
+    # the aborted branch remains reachable for debugging
+    assert bad.branch in m.catalog.branches()
+
+
+# ---------------------------------------------------------------------------
+# The Fig. 4 counterexample
+# ---------------------------------------------------------------------------
+
+def _drive_fig4(m: LakehouseModel):
+    """A user's txn run fails after P; an agent branches off the aborted
+    branch, does arbitrary work, and merges back to main."""
+    bad = m.begin_run(PLAN, mode="txn")
+    m.step_run(bad)                         # P written on txn branch
+    m.fail_run(bad)                         # aborted, branch dangling
+    agent = m.actor_branch(bad.branch)      # agent sees it as available
+    m.actor_write(agent, "X")               # arbitrary work
+    m.actor_merge(agent, into="main")       # ← the hazard
+    return bad
+
+
+def test_fig4_unguarded_model_admits_counterexample():
+    m = LakehouseModel(guarded=False)
+    bad = _drive_fig4(m)
+    # main now exposes P from the aborted run: globally inconsistent.
+    assert not m.is_consistent()
+    assert bad.run_id in m.torn_runs()
+
+
+def test_fig4_guarded_model_rejects_trace():
+    m = LakehouseModel(guarded=True)
+    with pytest.raises(VisibilityError):
+        _drive_fig4(m)
+    assert m.is_consistent()                # main never tainted
+
+
+def test_guarded_reuse_path_requires_verification():
+    """The paper's idempotent-re-run optimization survives the fix:
+    branching WITH allow_reuse gives a quarantined branch that cannot
+    merge until re-verified."""
+    m = LakehouseModel(guarded=True)
+    bad = m.begin_run(PLAN, mode="txn")
+    m.step_run(bad)
+    m.fail_run(bad)
+    retry = m.actor_branch(bad.branch, allow_reuse=True)
+    m.actor_write(retry, "C")               # re-run child from parent
+    with pytest.raises(VisibilityError):
+        m.actor_merge(retry, into="main")   # still quarantined
+    m.catalog.mark(retry, m.catalog.branch_info(retry).visibility,
+                   verified=True)
+    m.actor_merge(retry, into="main")       # re-verified: legal
+    # NOTE: main now includes P from the aborted run *by design* — the
+    # re-verification step is what re-legitimizes it (DESIGN.md §6).
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis stateful search: no trace of the guarded model tears main
+# ---------------------------------------------------------------------------
+
+class GuardedLakehouse(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        self.m = LakehouseModel(guarded=True)
+        self.runs = []
+        self.branches = ["main"]
+
+    # -- run lifecycle ---------------------------------------------------
+    @rule(n=st.integers(1, 3))
+    def begin(self, n):
+        tables = ["P", "C", "G", "H"][:n]
+        self.runs.append(self.m.begin_run(tuple(tables), mode="txn"))
+
+    @precondition(lambda self: any(
+        r.status == "running" and not r.done for r in self.runs))
+    @rule()
+    def step(self):
+        r = next(r for r in self.runs
+                 if r.status == "running" and not r.done)
+        self.m.step_run(r)
+
+    @precondition(lambda self: any(
+        r.status == "running" and r.done for r in self.runs))
+    @rule()
+    def finish(self):
+        r = next(r for r in self.runs if r.status == "running" and r.done)
+        try:
+            self.m.finish_run(r)
+        except ReproError:
+            self.m.fail_run(r)   # e.g. concurrent merge conflict → abort
+
+    @precondition(lambda self: any(
+        r.status == "running" for r in self.runs))
+    @rule()
+    def fail(self):
+        r = next(r for r in self.runs if r.status == "running")
+        self.m.fail_run(r)
+
+    # -- adversarial actor (the Fig. 4 agent) ------------------------------
+    @rule(reuse=st.booleans(),
+          src=st.integers(0, 10))
+    def agent_branch(self, reuse, src):
+        candidates = self.m.catalog.branches()
+        name = candidates[src % len(candidates)]
+        try:
+            self.branches.append(
+                self.m.actor_branch(name, allow_reuse=reuse))
+        except ReproError:
+            pass   # refusal is fine; tearing is not
+
+    @rule(t=st.sampled_from(["P", "C", "G", "X"]),
+          b=st.integers(0, 10))
+    def agent_write(self, t, b):
+        name = self.branches[b % len(self.branches)]
+        try:
+            self.m.actor_write(name, t)
+        except ReproError:
+            pass
+
+    @rule(b=st.integers(0, 10))
+    def agent_merge(self, b):
+        name = self.branches[b % len(self.branches)]
+        try:
+            self.m.actor_merge(name, into="main")
+        except ReproError:
+            pass
+
+    # -- the global safety property ---------------------------------------
+    @invariant()
+    def main_is_never_torn(self):
+        torn = self.m.torn_runs("main")
+        assert not torn, f"guarded model reached torn state: {torn}"
+
+
+GuardedLakehouse.TestCase.settings = settings(
+    max_examples=60, stateful_step_count=40, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow])
+
+TestGuardedLakehouse = GuardedLakehouse.TestCase
+
+
+def test_unguarded_model_found_by_same_search():
+    """Sanity: the identical agent behaviours DO tear the unguarded
+    model (so the invariant above is not vacuous)."""
+    m = LakehouseModel(guarded=False)
+    bad = m.begin_run(("P", "C"), mode="txn")
+    m.step_run(bad)
+    m.fail_run(bad)
+    agent = m.actor_branch(bad.branch)
+    m.actor_merge(agent, into="main")
+    assert not m.is_consistent()
+
+
+def test_second_counterexample_live_txn_branch_laundering():
+    """Found BY the stateful search above (not in the paper): an agent
+    branches from a LIVE transactional branch (run still in flight) and
+    merges to main — laundering uncommitted state. The guarded catalog
+    refuses the branch without allow_reuse, and quarantines it with."""
+    m = LakehouseModel(guarded=True)
+    r = m.begin_run(("P",), mode="txn")
+    m.step_run(r)                       # P written, run NOT finished
+    with pytest.raises(VisibilityError):
+        m.actor_branch(r.branch)        # refused
+    b = m.actor_branch(r.branch, allow_reuse=True)   # quarantined
+    with pytest.raises(VisibilityError):
+        m.actor_merge(b, into="main")   # cannot merge unverified
+    assert m.is_consistent()

@@ -1,0 +1,146 @@
+"""Quality verifiers, object store, tokenizer, fail-fast ordering."""
+import numpy as np
+import pytest
+
+from repro.core import schema as S
+from repro.core.errors import (ContractCompositionError, Moment, PlanError,
+                               QualityError)
+from repro.core.quality import (all_of, expect_in_range, expect_no_nan,
+                                expect_not_null, expect_row_count,
+                                expect_unique)
+from repro.core.store import MemoryStore, content_hash
+from repro.data.tables import Table
+from repro.data.tokenizer import ByteTokenizer
+
+
+def _t(**cols):
+    return Table({k: np.asarray(v) for k, v in cols.items()})
+
+
+# ---------------------------------------------------------------------------
+# quality verifiers (paper §3.3 step 3)
+# ---------------------------------------------------------------------------
+
+def test_expect_not_null():
+    expect_not_null("a")(_t(a=np.array([1, 2])))
+    with pytest.raises(QualityError):
+        expect_not_null("a")(Table({"a": np.array(["x", None],
+                                                  dtype=object)}))
+
+
+def test_expect_unique():
+    expect_unique("a")(_t(a=np.array([1, 2, 3])))
+    with pytest.raises(QualityError):
+        expect_unique("a")(_t(a=np.array([1, 1])))
+
+
+def test_expect_in_range():
+    expect_in_range("a", 0, 10)(_t(a=np.array([0, 10])))
+    with pytest.raises(QualityError):
+        expect_in_range("a", 0, 10)(_t(a=np.array([11])))
+
+
+def test_expect_row_count():
+    expect_row_count(1, 2)(_t(a=np.array([1])))
+    with pytest.raises(QualityError):
+        expect_row_count(5)(_t(a=np.array([1])))
+
+
+def test_expect_no_nan():
+    expect_no_nan("a")(_t(a=np.array([1.0])))
+    with pytest.raises(QualityError):
+        expect_no_nan("a")(_t(a=np.array([np.nan])))
+
+
+def test_all_of_short_circuits_with_all_errors():
+    v = all_of(expect_row_count(1, 10), expect_unique("a"))
+    v(_t(a=np.array([1, 2])))
+    with pytest.raises(QualityError):
+        v(_t(a=np.array([1, 1])))
+
+
+# ---------------------------------------------------------------------------
+# content-addressed store
+# ---------------------------------------------------------------------------
+
+def test_store_content_addressing_and_dedup():
+    s = MemoryStore()
+    k1 = s.put(b"hello")
+    k2 = s.put(b"hello")
+    assert k1 == k2 == content_hash(b"hello")
+    assert s.get(k1) == b"hello"
+    assert k1 in s
+
+
+def test_store_arrays_roundtrip_dtypes():
+    import ml_dtypes
+    s = MemoryStore()
+    for arr in (np.arange(5, dtype=np.int32),
+                np.arange(5, dtype=np.float64),
+                np.zeros(3, dtype=ml_dtypes.bfloat16),
+                np.array(["a", "bc"], dtype="U2")):
+        key = s.put_array(arr)
+        back = s.get_array(key)
+        assert back.dtype == arr.dtype
+        np.testing.assert_array_equal(np.asarray(back, np.float32)
+                                      if arr.dtype == ml_dtypes.bfloat16
+                                      else back,
+                                      np.asarray(arr, np.float32)
+                                      if arr.dtype == ml_dtypes.bfloat16
+                                      else arr)
+
+
+def test_pytree_roundtrip():
+    from repro.core.store import get_pytree, put_pytree
+    s = MemoryStore()
+    tree = {"a": np.arange(4.0), "b": [np.ones(2), np.zeros(3)]}
+    key = put_pytree(s, tree)
+    back = get_pytree(s, key, tree)
+    np.testing.assert_array_equal(back["a"], tree["a"])
+    np.testing.assert_array_equal(back["b"][1], tree["b"][1])
+
+
+# ---------------------------------------------------------------------------
+# tokenizer
+# ---------------------------------------------------------------------------
+
+def test_byte_tokenizer_roundtrip():
+    tok = ByteTokenizer()
+    ids = tok.encode("hello, lakehouse ✓")
+    assert ids[0] == tok.bos_id and ids[-1] == tok.eos_id
+    assert tok.decode(ids) == "hello, lakehouse ✓"
+
+
+def test_tokenizer_spec_is_versionable():
+    tok = ByteTokenizer()
+    s = MemoryStore()
+    key = s.put_json(tok.spec())
+    assert s.get_json(key)["vocab_size"] == 259
+
+
+# ---------------------------------------------------------------------------
+# fail-fast ordering (paper §3: never fail later than you could earlier)
+# ---------------------------------------------------------------------------
+
+def test_fail_fast_ordering():
+    """A DAG with BOTH a control-plane error (bad composition) and a
+    would-be worker error (bad data) must fail at the CONTROL PLANE."""
+    from repro.core.dag import Pipeline
+    from repro.core.planner import plan
+
+    Raw = S.Schema.of("Raw", a=S.FLOAT)
+    Bad = S.Schema.of("Bad", a=S.INT32)   # narrowing, no cast
+
+    p = Pipeline("ff")
+    p.source("raw_table", Raw)
+
+    @p.node()
+    def out_t(df: Raw = "raw_table") -> Bad:
+        raise AssertionError("worker must never run")   # would also fail
+
+    with pytest.raises(ContractCompositionError):
+        plan(p)   # rejected before any node executes
+
+
+def test_moment_enum_ordering():
+    assert Moment.AUTHORING < Moment.CONTROL_PLANE < Moment.WORKER

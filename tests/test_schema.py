@@ -1,0 +1,151 @@
+"""Unit tests: schema authoring (paper §3.1, Listings 3 + Appendix A)."""
+import datetime
+
+import numpy as np
+import pytest
+
+from repro.core import schema as S
+from repro.core.errors import (ContractAuthoringError,
+                               ContractCompositionError,
+                               ContractRuntimeError)
+
+
+class ParentSchema(S.Schema):  # paper Listing 3, "Node 1"
+    col1: str
+    col2: datetime.datetime
+    _S: int
+
+
+class ChildSchema(S.Schema):   # "Node 2"
+    col2: datetime.datetime
+    col4: float
+    col5: S.Nullable[str]      # UNION(str, None)
+
+
+class Grand(S.Schema):         # "Node 3"
+    col2: datetime.datetime
+    col4: int                  # narrowed from float
+
+
+def test_annotation_columns():
+    cols = ParentSchema.columns()
+    assert list(cols) == ["col1", "col2", "_S"]
+    assert cols["col1"].dtype == S.STR
+    assert cols["col2"].dtype == S.DATETIME
+    assert cols["_S"].dtype == S.INT
+    assert not cols["col1"].nullable
+
+
+def test_nullable_marker():
+    assert ChildSchema.columns()["col5"].nullable
+    assert not ChildSchema.columns()["col4"].nullable
+
+
+def test_attribute_access_carries_lineage():
+    col = ChildSchema.col5
+    assert col.inherited_from == "ChildSchema.col5"
+    assert col.nullable
+
+
+def test_notnull_tag_narrows_nullability():
+    col = ChildSchema.col5[S.NotNull]
+    assert not col.nullable
+    assert col.inherited_from == "ChildSchema.col5"
+
+
+def test_appendix_a_friend_schema():
+    class FriendSchema(S.Schema):      # Appendix A "Node 4"
+        col2 = ChildSchema.col2
+        col4 = Grand.col4
+        col5 = ChildSchema.col5[S.NotNull]
+
+    cols = FriendSchema.columns()
+    assert cols["col2"].inherited_from == "ChildSchema.col2"
+    assert cols["col4"].inherited_from == "Grand.col4"
+    assert cols["col5"].inherited_from == "ChildSchema.col5"
+    assert not cols["col5"].nullable   # explicitly narrowed
+
+
+def test_schema_of_programmatic():
+    Sch = S.Schema.of("MySch", a=int, b=S.Nullable[str])
+    assert Sch.columns()["a"].dtype == S.INT
+    assert Sch.columns()["b"].nullable
+
+
+def test_fingerprint_stable_and_sensitive():
+    A = S.Schema.of("A", x=int, y=float)
+    B = S.Schema.of("A", x=int, y=float)
+    C = S.Schema.of("A", x=int, y=str)
+    assert A.fingerprint() == B.fingerprint()
+    assert A.fingerprint() != C.fingerprint()
+
+
+def test_unknown_column_tag_rejected():
+    with pytest.raises(ContractAuthoringError):
+        ChildSchema.col5["bogus"]
+
+
+def test_unsupported_type_rejected():
+    with pytest.raises(ContractAuthoringError):
+        S.Schema.of("Bad", x=complex)
+
+
+# ---------------------------------------------------------------------------
+# type lattice
+# ---------------------------------------------------------------------------
+
+def test_widening_within_family():
+    assert S.widenable(S.INT32, S.INT64)
+    assert S.widenable(S.FLOAT32, S.FLOAT64)
+    assert not S.widenable(S.INT64, S.INT32)
+
+
+def test_int_widens_to_float_not_back():
+    assert S.widenable(S.INT, S.FLOAT)
+    assert not S.widenable(S.FLOAT, S.INT)
+
+
+def test_narrowing():
+    assert S.narrowable(S.FLOAT, S.INT)        # paper Listing 5 cast
+    assert S.narrowable(S.INT64, S.INT32)
+    assert not S.narrowable(S.INT, S.FLOAT)    # that's widening
+    assert not S.narrowable(S.STR, S.INT)
+
+
+def test_identity_is_both():
+    assert S.widenable(S.STR, S.STR)
+    assert S.narrowable(S.STR, S.STR)
+
+
+# ---------------------------------------------------------------------------
+# tensor contracts
+# ---------------------------------------------------------------------------
+
+def test_tensor_contract_abstract_symbols():
+    import jax
+    tc = S.TensorContract(("B", "S"), "int32")
+    bindings = {}
+    tc.validate_abstract(jax.ShapeDtypeStruct((4, 16), np.int32), bindings)
+    assert bindings == {"B": 4, "S": 16}
+    with pytest.raises(ContractCompositionError):
+        tc.validate_abstract(jax.ShapeDtypeStruct((5, 16), np.int32),
+                             bindings)   # B already bound to 4
+
+
+def test_tensor_contract_dtype_and_rank():
+    import jax
+    tc = S.TensorContract((4,), "float32")
+    with pytest.raises(ContractCompositionError):
+        tc.validate_abstract(jax.ShapeDtypeStruct((4,), np.int32), {})
+    with pytest.raises(ContractCompositionError):
+        tc.validate_abstract(jax.ShapeDtypeStruct((4, 1), np.float32), {})
+
+
+def test_tensor_contract_concrete_nan_policy():
+    import jax.numpy as jnp
+    tc = S.TensorContract((2,), "float32")
+    tc.validate_concrete(jnp.ones(2, jnp.float32))
+    with pytest.raises(ContractRuntimeError):
+        tc.validate_concrete(jnp.array([1.0, jnp.nan], jnp.float32))
+    ok = S.TensorContract((2,), "float32", allow_nan=True)
+    ok.validate_concrete(jnp.array([1.0, jnp.nan], jnp.float32))

@@ -1,0 +1,111 @@
+"""Columnar Table: relational ops, null semantics, snapshots, property
+tests (hypothesis) for the invariants the runner depends on."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.store import MemoryStore
+from repro.data.tables import Table, arrow_cast, col, lit, str_lit
+
+
+def people():
+    return Table({
+        "name": np.array(["ann", "bob", None, "dan"], dtype=object),
+        "age": np.array([30, 40, 50, 60], dtype=np.int64),
+        "score": np.array([0.5, 0.25, 0.75, 1.0]),
+    })
+
+
+def test_select_and_alias():
+    t = people().select([col("age"), (col("score") * 2).alias("s2")])
+    assert t.column_names() == ["age", "s2"]
+    np.testing.assert_allclose(t.column("s2"), [1.0, 0.5, 1.5, 2.0])
+
+
+def test_filter_null_predicate_drops_row():
+    """SQL semantics: a NULL predicate drops the row."""
+    t = people().filter(col("name") == lit("ann"))
+    assert t.num_rows == 1
+    # row with NULL name never matches (even for != comparisons)
+    t2 = people().filter(col("name") != lit("ann"))
+    assert t2.num_rows == 2
+
+
+def test_is_not_null():
+    t = people().filter(col("name").is_not_null())
+    assert t.num_rows == 3
+    assert not t.has_nulls("name")
+
+
+def test_arrow_cast_listing5():
+    t = people().select([
+        arrow_cast(col("score"), str_lit("Int64")).alias("score")])
+    assert t.column("score").dtype == np.int64
+
+
+def test_join_inner():
+    left = Table({"k": np.array([1, 2, 3]), "a": np.array([10, 20, 30])})
+    right = Table({"k": np.array([2, 3, 4]), "b": np.array([200, 300,
+                                                            400])})
+    j = left.join(right, on=["k"])
+    assert j.num_rows == 2
+    np.testing.assert_array_equal(j.column("k"), [2, 3])
+    np.testing.assert_array_equal(j.column("b"), [200, 300])
+
+
+def test_group_by_sum_listing1():
+    t = Table({"col1": np.array(["a", "a", "b"], dtype=object),
+               "col3": np.array([1, 2, 3], dtype=np.int64)})
+    g = t.group_by_sum(["col1"], "col3", out="_S")
+    assert g.num_rows == 2
+    np.testing.assert_array_equal(g.column("_S"), [3, 3])
+
+
+def test_snapshot_roundtrip_identity():
+    store = MemoryStore()
+    t = people()
+    key = t.to_blobs(store)
+    t2 = Table.from_blobs(store, key)
+    assert t.fingerprint() == t2.fingerprint()
+    assert t2.has_nulls("name")
+
+
+def test_snapshot_content_addressed_dedup():
+    store = MemoryStore()
+    assert people().to_blobs(store) == people().to_blobs(store)
+
+
+@settings(max_examples=30, deadline=None)
+@given(vals=st.lists(st.integers(-1000, 1000), min_size=1, max_size=50),
+       thresh=st.integers(-1000, 1000))
+def test_property_filter_partition(vals, thresh):
+    """filter(p) ∪ filter(¬p) is a partition of the rows."""
+    t = Table({"x": np.array(vals, dtype=np.int64)})
+    lo = t.filter(col("x") < lit(thresh))
+    hi = t.filter(col("x") >= lit(thresh))
+    assert lo.num_rows + hi.num_rows == t.num_rows
+    merged = sorted(lo.column("x").tolist() + hi.column("x").tolist())
+    assert merged == sorted(vals)
+
+
+@settings(max_examples=30, deadline=None)
+@given(vals=st.lists(st.floats(allow_nan=False, allow_infinity=False,
+                               width=32),
+                     min_size=1, max_size=40))
+def test_property_snapshot_roundtrip(vals):
+    store = MemoryStore()
+    t = Table({"x": np.array(vals, dtype=np.float32)})
+    t2 = Table.from_blobs(store, t.to_blobs(store))
+    np.testing.assert_array_equal(t.column("x"), t2.column("x"))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 30), seed=st.integers(0, 99))
+def test_property_group_by_sum_total(n, seed):
+    """Σ over groups == Σ over rows."""
+    rng = np.random.default_rng(seed)
+    t = Table({"k": rng.integers(0, 5, n).astype(np.int64),
+               "v": rng.integers(-100, 100, n).astype(np.int64)})
+    g = t.group_by_sum(["k"], "v", out="s")
+    assert g.column("s").sum() == t.column("v").sum()

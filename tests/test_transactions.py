@@ -1,0 +1,134 @@
+"""Transactional pipelines (paper §3.3, Fig. 3): all outputs or none."""
+import pytest
+
+from repro.core.catalog import Catalog, Visibility
+from repro.core.errors import TransactionAborted, TransactionError
+from repro.core.transactions import (RunRegistry, TransactionalRun,
+                                     run_transaction)
+
+
+@pytest.fixture
+def cat():
+    c = Catalog()
+    c.write_table("main", "P", "P*")
+    c.write_table("main", "C", "C*")
+    c.write_table("main", "G", "G*")
+    return c
+
+
+def test_happy_path_atomic_publication(cat):
+    """Fig. 3 bottom, run_1: all three tables land atomically."""
+    reg = RunRegistry()
+    before = cat.head("main").id
+    with TransactionalRun(cat, "main", code="dag-v2",
+                          registry=reg) as txn:
+        txn.write_table("P", "P**")
+        # mid-run: main is UNTOUCHED (readers see the old complete state)
+        assert cat.tables("main")["P"] == "P*"
+        txn.write_table("C", "C**")
+        txn.write_table("G", "G**")
+    assert cat.tables("main") == {"P": "P**", "C": "C**", "G": "G**"}
+    state = reg.get_run(txn.run_id)
+    assert state.status == "committed"
+    assert state.ref == before                  # pinned start commit
+    # txn branch cleaned up on success
+    assert txn.branch not in cat.branches()
+
+
+def test_failure_leaves_main_consistent(cat):
+    """Fig. 3 bottom, run_2: failure after P** does NOT tear main."""
+    reg = RunRegistry()
+    with pytest.raises(RuntimeError, match="child blew up"):
+        with TransactionalRun(cat, "main", registry=reg) as txn:
+            txn.write_table("P", "P**")
+            raise RuntimeError("child blew up")
+    # main still serves the complete state of the last successful run
+    assert cat.tables("main") == {"P": "P*", "C": "C*", "G": "G*"}
+    # the aborted branch is preserved for debugging (paper's "bonus")
+    assert txn.branch in cat.branches()
+    info = cat.branch_info(txn.branch)
+    assert info.visibility is Visibility.ABORTED
+    assert cat.read_table(txn.branch, "P") == "P**"   # triage the failure
+    assert reg.get_run(txn.run_id).status == "aborted"
+
+
+def test_fig3_top_direct_writes_tear_main(cat):
+    """Fig. 3 top: WITHOUT the txn protocol, a mid-run failure leaves
+    main in the partially-stale state {P**, C*, G*}."""
+    cat.write_table("main", "P", "P**")
+    # ... crash before writing C — nothing to roll back
+    assert cat.tables("main") == {"P": "P**", "C": "C*", "G": "G*"}
+    # (this is the failure mode the protocol upgrades to total failure)
+
+
+def test_verifier_failure_aborts(cat):
+    """Step (3): data tests run on B' BEFORE the merge."""
+    def verifier(read):
+        if read("C") == "C-bad":
+            raise ValueError("quality check failed: nulls in col4")
+
+    with pytest.raises(TransactionAborted):
+        with TransactionalRun(cat, "main") as txn:
+            txn.write_table("P", "P**")
+            txn.write_table("C", "C-bad")
+            txn.verify(verifier)
+    assert cat.tables("main")["C"] == "C*"
+    assert cat.branch_info(txn.branch).visibility is Visibility.ABORTED
+
+
+def test_snapshot_reads_during_run(cat):
+    """Reads inside the run resolve against the pinned start commit even
+    if main moves concurrently (MVCC-style snapshot isolation)."""
+    with TransactionalRun(cat, "main") as txn:
+        cat.write_table("main", "P", "P-concurrent")   # concurrent writer
+        assert txn.read_table("P") == "P*"             # snapshot read
+        txn.write_table("G", "G**")
+    # non-conflicting tables merge cleanly (three-way)
+    assert cat.tables("main")["G"] == "G**"
+    assert cat.tables("main")["P"] == "P-concurrent"
+
+
+def test_concurrent_conflicting_commit_aborts(cat):
+    """If main concurrently changed the SAME table, commit must not
+    silently clobber it."""
+    txn = TransactionalRun(cat, "main").begin()
+    txn.write_table("P", "P**")
+    cat.write_table("main", "P", "P-concurrent")
+    with pytest.raises(TransactionAborted, match="publication failed"):
+        txn.commit()
+    # the losing run is aborted, its branch kept for triage
+    assert cat.branch_info(txn.branch).visibility is Visibility.ABORTED
+    assert cat.tables("main")["P"] == "P-concurrent"
+
+
+def test_cannot_write_after_commit(cat):
+    txn = TransactionalRun(cat, "main").begin()
+    txn.write_table("P", "P**")
+    txn.commit()
+    with pytest.raises(TransactionError):
+        txn.write_table("C", "C**")
+
+
+def test_cannot_begin_twice(cat):
+    txn = TransactionalRun(cat, "main").begin()
+    with pytest.raises(TransactionError):
+        txn.begin()
+
+
+def test_run_transaction_helper(cat):
+    head = run_transaction(cat, "main", {"P": "Pnew", "C": "Cnew"},
+                           code="helper")
+    assert head.tables["P"] == "Pnew"
+    assert cat.tables("main")["C"] == "Cnew"
+
+
+def test_nested_runs_on_user_branches(cat):
+    """The paper's collaboration story: agent proposes on a feature
+    branch via a transactional run; human merges after review."""
+    cat.create_branch("feature", "main")
+    with TransactionalRun(cat, "feature") as txn:
+        txn.write_table("P", "P-agent")
+    assert cat.tables("feature")["P"] == "P-agent"
+    assert cat.tables("main")["P"] == "P*"       # not yet reviewed
+    cat.merge("feature", into="main")            # the PR merge
+    assert cat.tables("main")["P"] == "P-agent"
