@@ -1,0 +1,93 @@
+"""Concurrent publication benchmark (DESIGN.md §7).
+
+K threads each publish R transactional runs against `main`:
+
+- ``disjoint``  — private tables: every run must publish (rebasing past
+  the others); measures publication throughput + mean CAS attempts.
+- ``contended`` — all runs fight over one table: exactly one winner per
+  wave; measures clean-abort overhead.
+
+Also compares per-node commits vs one ``write_tables`` multi-table
+commit (the commit-churn cut: log entries per run -> 1).
+
+Run: ``PYTHONPATH=src python -m benchmarks.concurrent_publication``
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.core.catalog import Catalog
+from repro.core.errors import TransactionAborted
+from repro.core.transactions import TransactionalRun
+
+
+def row(name, metric, value, unit, notes=""):
+    print(f"{name},{metric},{value:.6g},{unit},{notes}")
+
+
+def _publish_wave(cat: Catalog, k: int, runs_each: int, *,
+                  disjoint: bool) -> tuple[float, int, int, int]:
+    committed = [0] * k
+    attempts = [0] * k
+    aborted = [0] * k
+    barrier = threading.Barrier(k)
+
+    def worker(i):
+        barrier.wait()
+        for r in range(runs_each):
+            txn = TransactionalRun(cat, "main",
+                                   max_publish_attempts=4 * k).begin()
+            table = f"t{i}" if disjoint else "hot"
+            txn.write_table(table, f"s{i}.{r}")
+            txn.verify(lambda read: read(table))
+            try:
+                txn.commit()
+                committed[i] += 1
+            except TransactionAborted:
+                aborted[i] += 1
+            attempts[i] += txn.publish_attempts
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(k)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    return dt, sum(committed), sum(attempts), sum(aborted)
+
+
+def bench_concurrent_publication(k: int = 8, runs_each: int = 25) -> None:
+    cat = Catalog()
+    dt, ok, att, ab = _publish_wave(cat, k, runs_each, disjoint=True)
+    row("concurrent", f"disjoint_{k}x{runs_each}", ok / dt, "runs/s",
+        f"all published; {att / max(ok, 1):.2f} CAS attempts/run")
+    assert ab == 0, "disjoint runs must all publish"
+
+    cat = Catalog()
+    dt, ok, att, ab = _publish_wave(cat, k, runs_each, disjoint=False)
+    row("concurrent", f"contended_{k}x{runs_each}", ok / dt, "runs/s",
+        f"{ok} committed / {ab} clean aborts on one hot table")
+
+    # commit churn: N write_table commits vs ONE write_tables commit
+    n_tables = 10
+    cat = Catalog()
+    for t in range(n_tables):
+        cat.write_table("main", f"t{t}", "s")
+    per_node = len(cat.log("main", limit=1000)) - 1
+    cat2 = Catalog()
+    cat2.write_tables("main", {f"t{t}": "s" for t in range(n_tables)})
+    per_run = len(cat2.log("main", limit=1000)) - 1
+    row("concurrent", "commits_per_run", per_run, "commits",
+        f"multi-table commit; was {per_node} per-node commits")
+
+
+def main() -> None:
+    print("name,metric,value,unit,notes")
+    bench_concurrent_publication()
+
+
+if __name__ == "__main__":
+    main()

@@ -255,10 +255,14 @@ def bench_decode_step():
 
 
 def main() -> None:
+    from benchmarks.concurrent_publication import (
+        bench_concurrent_publication)
+
     print("name,metric,value,unit,notes")
     bench_contracts()
     bench_catalog()
     bench_txn_overhead()
+    bench_concurrent_publication()
     bench_validation()
     bench_pipeline_run()
     bench_train_step()

@@ -64,16 +64,21 @@ class CheckpointManager:
                                 leaf.astype(np.float32)).all():
                         raise QualityError(
                             f"checkpoint step {step}: non-finite params")
-            txn.write_table("params", put_pytree(self.store, host_params),
-                            message=f"params@{step}")
-            txn.write_table("opt_state", put_pytree(self.store, host_opt),
-                            message=f"opt@{step}")
-            txn.write_table("data_state", self.store.put_json(
-                {"step": step, **data_state}))
-            txn.write_table("metrics", self.store.put_json(
-                {"step": step, **{k: float(v) for k, v in metrics.items()}}))
-        head = self.catalog.head(self.branch)
-        return CheckpointRef(step=step, commit=head.id,
+            # all four artifacts in ONE commit: the branch log shows one
+            # entry per checkpoint, and no reader can see a prefix.
+            txn.write_tables({
+                "params": put_pytree(self.store, host_params),
+                "opt_state": put_pytree(self.store, host_opt),
+                "data_state": self.store.put_json(
+                    {"step": step, **data_state}),
+                "metrics": self.store.put_json(
+                    {"step": step,
+                     **{k: float(v) for k, v in metrics.items()}}),
+            }, message=f"checkpoint@{step}")
+        # the merged commit from the txn itself — NOT head(branch), which
+        # may already reflect a later concurrent checkpoint.
+        assert txn.final_commit is not None
+        return CheckpointRef(step=step, commit=txn.final_commit.id,
                              run_id=f"ckpt_{step}")
 
     # ------------------------------------------------------------------

@@ -15,6 +15,12 @@ Implements the Alloy model's signatures executably:
 Branch heads move via optimistic compare-and-swap (the paper's substrate
 guarantees this via a relational database; here a lock + expected-head
 check), so concurrent writers conflict instead of silently interleaving.
+Every head-moving operation (``write_table``/``write_tables``, ``merge``,
+``rebase``) accepts ``expected_head``; a whole pipeline's outputs can be
+committed as **one** multi-table atomic commit via :meth:`write_tables`,
+and :meth:`rebase` replays a branch's table changes onto a new base so a
+transactional run can re-verify exactly the state it is about to publish
+(the rebase-and-revalidate protocol, DESIGN.md §7).
 
 **Visibility classes** (the Fig. 4 guardrail — see DESIGN.md §6): branches
 carry a :class:`Visibility`; transactional branches are system-owned;
@@ -179,12 +185,28 @@ class Catalog:
             self._branches[name] = info
             return dataclasses.replace(info)
 
-    def delete_branch(self, name: str) -> None:
+    def delete_branch(self, name: str, *, _system: bool = False) -> None:
+        """Delete a branch ref.
+
+        Live transactional branches belong to their run, and aborted
+        branches are preserved for triage (§3.3) — deleting either
+        requires the owning system (``_system=True``).
+        """
         with self._lock:
             if name == self.main:
                 raise CatalogError("cannot delete the main branch")
-            if name not in self._branches:
+            info = self._branches.get(name)
+            if info is None:
                 raise BranchNotFound(name)
+            if not _system and info.visibility is Visibility.TXN:
+                raise VisibilityError(
+                    f"branch {name!r} is a live transactional branch owned "
+                    f"by run {info.owner_run!r}: deleting it mid-run would "
+                    f"strand the run")
+            if not _system and info.visibility is Visibility.ABORTED:
+                raise VisibilityError(
+                    f"branch {name!r} is aborted and preserved for triage "
+                    f"(§3.3); deletion requires the owning system")
             del self._branches[name]
 
     def tag(self, name: str, ref: str) -> str:
@@ -196,12 +218,40 @@ class Catalog:
             return cid
 
     def mark(self, name: str, visibility: Visibility, *,
-             verified: bool | None = None) -> None:
-        """System-internal: change a branch's visibility class."""
+             verified: bool | None = None, _system: bool = False) -> None:
+        """Change a branch's visibility class.
+
+        Two transitions are privileged (``_system=True``): any change to a
+        live TXN branch (it is owned by its run), and un-marking an
+        ABORTED branch (flipping it back to USER would let the Fig. 4
+        laundering through the front door). The one user-facing
+        transition is re-verifying a QUARANTINED branch
+        (``verified=True``) — the sanctioned reuse path of DESIGN.md §6.
+        """
         with self._lock:
             info = self._branches.get(name)
             if info is None:
                 raise BranchNotFound(name)
+            if not _system:
+                if info.visibility is Visibility.TXN:
+                    raise VisibilityError(
+                        f"branch {name!r} is a live transactional branch "
+                        f"owned by run {info.owner_run!r}: only the owning "
+                        f"system may change its visibility")
+                if (info.visibility is Visibility.ABORTED
+                        and visibility is not Visibility.ABORTED):
+                    raise VisibilityError(
+                        f"branch {name!r} is aborted: un-marking it would "
+                        f"republish a partial run (paper Fig. 4); use "
+                        f"allow_reuse branching + re-verification instead")
+                if (info.visibility is Visibility.QUARANTINED
+                        and visibility is not Visibility.QUARANTINED
+                        and not info.verified and not verified):
+                    raise VisibilityError(
+                        f"branch {name!r} is quarantined and unverified: "
+                        f"re-verify first (mark(..., verified=True)) — "
+                        f"releasing it to {visibility.value} would skip "
+                        f"the merge gate")
             info.visibility = visibility
             if verified is not None:
                 info.verified = verified
@@ -209,6 +259,26 @@ class Catalog:
     # ------------------------------------------------------------------
     # the only state-changing write (paper Listing 8)
     # ------------------------------------------------------------------
+    def _writable_info(self, branch: str, expected_head: str | None,
+                       _system: bool) -> BranchInfo:
+        """Shared write guards: existence, visibility, optimistic CAS."""
+        info = self._branches.get(branch)
+        if info is None:
+            raise BranchNotFound(branch)
+        if info.visibility in (Visibility.ABORTED, Visibility.TAG):
+            raise VisibilityError(
+                f"branch {branch!r} is {info.visibility.value}: "
+                f"read-only")
+        if info.visibility is Visibility.TXN and not _system:
+            raise VisibilityError(
+                f"branch {branch!r} is a live transactional branch "
+                f"owned by run {info.owner_run!r}")
+        if expected_head is not None and info.head != expected_head:
+            raise RefConflict(
+                f"branch {branch!r} moved: expected {expected_head[:8]} "
+                f"found {info.head[:8]}")
+        return info
+
     def write_table(self, branch: str, table: str, snapshot: str, *,
                     message: str = "", author: str = "",
                     run_id: str | None = None,
@@ -220,29 +290,34 @@ class Catalog:
         the branch has moved, raises :class:`RefConflict` (optimistic CAS —
         the paper's "optimistic locks guaranteed by a relational database").
         """
+        return self.write_tables(
+            branch, {table: snapshot}, message=message or f"write {table}",
+            author=author, run_id=run_id, expected_head=expected_head,
+            _system=_system)
+
+    def write_tables(self, branch: str, tables: Mapping[str, str], *,
+                     message: str = "", author: str = "",
+                     run_id: str | None = None,
+                     expected_head: str | None = None,
+                     _system: bool = False) -> Commit:
+        """Commit N table snapshots as ONE atomic commit.
+
+        This is how a whole pipeline run publishes: all of the DAG's
+        outputs land in a single commit, so ``log()`` reflects *runs*,
+        not nodes, and readers can never observe a prefix of a run.
+        An empty mapping is a no-op returning the current head.
+        """
         with self._lock:
-            info = self._branches.get(branch)
-            if info is None:
-                raise BranchNotFound(branch)
-            if info.visibility in (Visibility.ABORTED, Visibility.TAG):
-                raise VisibilityError(
-                    f"branch {branch!r} is {info.visibility.value}: "
-                    f"read-only")
-            if info.visibility is Visibility.TXN and not _system:
-                raise VisibilityError(
-                    f"branch {branch!r} is a live transactional branch "
-                    f"owned by run {info.owner_run!r}")
-            if expected_head is not None and info.head != expected_head:
-                raise RefConflict(
-                    f"branch {branch!r} moved: expected {expected_head[:8]} "
-                    f"found {info.head[:8]}")
+            info = self._writable_info(branch, expected_head, _system)
             parent = self._commits[info.head]
-            tables = dict(parent.tables)
-            tables[table] = snapshot
-            cid = _commit_id(tables, (parent.id,), message,
+            if not tables:
+                return parent
+            merged = dict(parent.tables)
+            merged.update(tables)
+            cid = _commit_id(merged, (parent.id,), message,
                              str(next(self._counter)))
-            commit = Commit(id=cid, tables=tables, parents=(parent.id,),
-                            message=message or f"write {table}",
+            commit = Commit(id=cid, tables=merged, parents=(parent.id,),
+                            message=message or f"write {sorted(tables)}",
                             author=author, run_id=run_id,
                             timestamp=time.time())
             self._commits[cid] = commit
@@ -262,11 +337,13 @@ class Catalog:
         return dict(self.head(ref).tables)
 
     def log(self, ref: str, limit: int = 50) -> list[Commit]:
-        out, cur = [], self.head(ref)
-        while cur is not None and len(out) < limit:
-            out.append(cur)
-            cur = (self._commits[cur.parents[0]] if cur.parents else None)
-        return out
+        with self._lock:
+            out, cur = [], self.head(ref)
+            while cur is not None and len(out) < limit:
+                out.append(cur)
+                cur = (self._commits[cur.parents[0]] if cur.parents
+                       else None)
+            return out
 
     # ------------------------------------------------------------------
     # merge (paper §3.2/§3.3: logical, atomic)
@@ -298,6 +375,83 @@ class Catalog:
                 cur = nxt
         raise CatalogError(f"no common ancestor of {a!r} and {b!r}")
 
+    def rebase(self, branch: str, onto: str, *,
+               run_id: str | None = None,
+               _system: bool = False) -> Commit:
+        """Replay ``branch``'s table changes since the merge base onto
+        ``onto``'s head, as ONE new commit; move the branch head to it.
+
+        ``onto`` may be (and, for race-free publication, should be) a raw
+        commit id — an immutable base, so the caller knows exactly which
+        head the rebased state extends and can CAS its merge against it.
+        Raises :class:`MergeConflict` when a table changed on both sides
+        since the base. A branch with no changes fast-forwards.
+        """
+        with self._lock:
+            info = self._writable_info(branch, None, _system)
+            br_head = self._commits[info.head]
+            onto_head = self.head(onto)
+            base = self.merge_base(onto, branch)
+            if br_head.id == onto_head.id or onto_head.id == base.id:
+                return br_head            # already based on onto
+            if br_head.id == base.id:
+                info.head = onto_head.id  # no local changes: fast-forward
+                return onto_head
+            changed_br = {t for t in set(br_head.tables) | set(base.tables)
+                          if br_head.tables.get(t) != base.tables.get(t)}
+            changed_onto = {
+                t for t in set(onto_head.tables) | set(base.tables)
+                if onto_head.tables.get(t) != base.tables.get(t)}
+            conflicts = {
+                t for t in changed_br & changed_onto
+                if br_head.tables.get(t) != onto_head.tables.get(t)}
+            if conflicts:
+                raise MergeConflict(
+                    f"cannot rebase {branch!r} onto {onto!r}: tables "
+                    f"changed on both sides since base: {sorted(conflicts)}")
+            tables = dict(onto_head.tables)
+            for t in changed_br:
+                if t in br_head.tables:
+                    tables[t] = br_head.tables[t]
+                else:
+                    tables.pop(t, None)
+            cid = _commit_id(tables, (onto_head.id,), br_head.message,
+                             str(next(self._counter)))
+            commit = Commit(
+                id=cid, tables=tables, parents=(onto_head.id,),
+                message=br_head.message or f"rebase {branch}",
+                author=br_head.author, run_id=run_id or br_head.run_id,
+                timestamp=time.time())
+            self._commits[cid] = commit
+            info.head = cid
+            return commit
+
+    def _is_published(self, cid: str) -> bool:
+        """Is ``cid`` reachable from a mergeable (USER / verified-
+        QUARANTINED) branch head?
+
+        Only published commits may be merged by raw commit id or tag:
+        anything else — an ABORTED/TXN-only commit, or one whose owning
+        branch was deleted and survives only behind a tag — would
+        launder unverified state past the visibility rules. One early-
+        exiting walk over the union of good histories (no full-closure
+        materialization under the lock).
+        """
+        seen: set[str] = set()
+        stack = [info.head for info in self._branches.values()
+                 if info.visibility is Visibility.USER
+                 or (info.visibility is Visibility.QUARANTINED
+                     and info.verified)]
+        while stack:
+            c = stack.pop()
+            if c in seen:
+                continue
+            if c == cid:
+                return True
+            seen.add(c)
+            stack.extend(self._commits[c].parents)
+        return False
+
     def merge(self, source: str, into: str, *,
               message: str = "", run_id: str | None = None,
               expected_head: str | None = None,
@@ -312,6 +466,20 @@ class Catalog:
         """
         with self._lock:
             src_info = self._branches.get(source)
+            if src_info is None and not _system:
+                # source is a raw commit id or a tag: the branch-level
+                # visibility checks below cannot see it, so resolve the
+                # commit's provenance instead (closes the laundering
+                # hole where merging an ABORTED head by its commit id
+                # republished a partial run).
+                src_cid = self.head(source).id
+                if not self._is_published(src_cid):
+                    raise VisibilityError(
+                        f"ref {source!r} resolves to commit "
+                        f"{src_cid[:8]}, which is not reachable from "
+                        f"any publishable branch: merging it would "
+                        f"republish a partial, unverified run "
+                        f"(paper Fig. 4)")
             if src_info is not None:
                 if src_info.visibility is Visibility.ABORTED:
                     raise VisibilityError(
@@ -379,8 +547,13 @@ class Catalog:
     # introspection for tests / tooling
     # ------------------------------------------------------------------
     def diff(self, a: str, b: str) -> dict[str, tuple[str | None, str | None]]:
-        """Table-level diff {table: (snap@a, snap@b)} where they differ."""
-        ta, tb = self.tables(a), self.tables(b)
+        """Table-level diff {table: (snap@a, snap@b)} where they differ.
+
+        Both refs are resolved under one lock acquisition so the pair is
+        a consistent snapshot even under concurrent writers.
+        """
+        with self._lock:
+            ta, tb = self.tables(a), self.tables(b)
         out = {}
         for t in set(ta) | set(tb):
             if ta.get(t) != tb.get(t):

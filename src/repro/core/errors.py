@@ -88,6 +88,15 @@ class TransactionAborted(TransactionError):
         self.cause = cause
 
 
+class PublicationConflict(TransactionAborted):
+    """Rebase-and-revalidate publication exhausted its retry budget.
+
+    The target branch kept moving faster than the run could rebase,
+    re-verify, and CAS its merge. The run is aborted (branch preserved);
+    the caller may retry the whole run against the new head.
+    """
+
+
 class PlanError(ReproError):
     """DAG is structurally invalid (cycle, missing input, duplicate output)."""
 

@@ -22,12 +22,25 @@ Two system variants:
   left as an ordinary USER branch, so other actors can branch off it and
   merge back.
 
+and two publication variants:
+
+- ``publication="rebase"`` — the shipped CAS + rebase-and-revalidate
+  protocol (DESIGN.md §7): a run publishes with ``expected_head``; on
+  conflict it rebases its branch onto the new head and *re-verifies*
+  before retrying.
+- ``publication="stale"``  — the pre-fix protocol: a plain three-way
+  merge with no CAS, which can silently publish a combined state no
+  verifier ever observed when the target moved after ``begin``.
+
 The **global consistency** predicate formalizes Fig. 3/4: a ref is *torn
 with respect to run r* iff it exposes a strict, non-empty subset of r's
 published tables (partial publication), or any table of an aborted run.
+The **verified publication** predicate (:meth:`stale_publications`)
+formalizes the §3.3 concurrency invariant: the commit a run publishes
+must carry exactly the table state its verifiers last validated.
 Hypothesis stateful tests in ``tests/test_model_check.py`` search traces:
-the unguarded model reaches torn states (the paper's counterexample);
-the guarded model must never.
+the unguarded/stale models reach bad states (which makes the model
+adequate); the guarded/rebase models must never.
 """
 from __future__ import annotations
 
@@ -36,7 +49,8 @@ import itertools
 from typing import Literal, Sequence
 
 from repro.core.catalog import Catalog, Visibility
-from repro.core.errors import CatalogError, ReproError, VisibilityError
+from repro.core.errors import (CatalogError, RefConflict, ReproError,
+                               VisibilityError)
 
 __all__ = ["ModelRun", "LakehouseModel"]
 
@@ -53,6 +67,9 @@ class ModelRun:
     status: str = "running"            # running | committed | aborted
     branch: str | None = None          # txn branch (txn mode)
     written: dict[str, str] = dataclasses.field(default_factory=dict)
+    start_head: str | None = None      # target head at begin (CAS token)
+    verified_tables: dict[str, str] | None = None  # state verifiers saw
+    published_commit: str | None = None            # commit the merge made
 
     @property
     def done(self) -> bool:
@@ -62,9 +79,11 @@ class ModelRun:
 class LakehouseModel:
     """Driveable state machine over the real catalog."""
 
-    def __init__(self, *, guarded: bool = True):
+    def __init__(self, *, guarded: bool = True,
+                 publication: Literal["rebase", "stale"] = "rebase"):
         self.catalog = Catalog()
         self.guarded = guarded
+        self.publication = publication
         self._runs: dict[str, ModelRun] = {}
         self._fresh = itertools.count()
         self._branch_counter = itertools.count()
@@ -77,6 +96,7 @@ class LakehouseModel:
         rid = f"r{next(self._fresh)}"
         run = ModelRun(run_id=rid, plan=tuple(plan), mode=mode,
                        target=target)
+        run.start_head = self.catalog.head(target).id
         if mode == "txn":
             run.branch = f"txn/{rid}"
             self.catalog.create_branch(run.branch, target,
@@ -99,10 +119,39 @@ class LakehouseModel:
     def finish_run(self, run: ModelRun) -> None:
         assert run.status == "running" and run.done
         if run.mode == "txn":
-            self.catalog.merge(run.branch, into=run.target,
-                               run_id=run.run_id, _system=True)
-            self.catalog.delete_branch(run.branch)
+            # Alloy's `verify`: record the exact table state the run's
+            # verifiers observed on B' at publication time.
+            run.verified_tables = dict(self.catalog.tables(run.branch))
+            if self.publication == "stale":
+                # pre-fix: a plain merge — if the target moved after
+                # begin, this silently three-way-merges a combined state
+                # NO verifier ever saw.
+                merged = self.catalog.merge(run.branch, into=run.target,
+                                            run_id=run.run_id,
+                                            _system=True)
+            else:
+                merged = self._publish_rebase(run)
+            run.published_commit = merged.id
+            self.catalog.delete_branch(run.branch, _system=True)
         run.status = "committed"
+
+    def _publish_rebase(self, run: ModelRun):
+        """The shipped protocol: CAS merge; on conflict rebase onto the
+        observed head and re-verify before retrying."""
+        expected = run.start_head
+        while True:
+            try:
+                return self.catalog.merge(
+                    run.branch, into=run.target, run_id=run.run_id,
+                    expected_head=expected, _system=True)
+            except RefConflict:
+                new_head = self.catalog.head(run.target).id
+                self.catalog.rebase(run.branch, new_head,
+                                    run_id=run.run_id, _system=True)
+                # re-verify: the verifiers now validate the rebased state
+                run.verified_tables = dict(
+                    self.catalog.tables(run.branch))
+                expected = new_head
 
     def fail_run(self, run: ModelRun) -> None:
         """Mid-run failure. Direct mode just stops (torn!); txn aborts."""
@@ -110,11 +159,13 @@ class LakehouseModel:
         run.status = "aborted"
         if run.mode == "txn":
             if self.guarded:
-                self.catalog.mark(run.branch, Visibility.ABORTED)
+                self.catalog.mark(run.branch, Visibility.ABORTED,
+                                  _system=True)
             else:
                 # pre-fix system: the dangling branch looks like any other
                 # branch (the Fig. 4 hazard).
-                self.catalog.mark(run.branch, Visibility.USER)
+                self.catalog.mark(run.branch, Visibility.USER,
+                                  _system=True)
 
     # ------------------------------------------------------------------
     # Arbitrary-actor operations (the agent in Fig. 4)
@@ -155,3 +206,29 @@ class LakehouseModel:
 
     def is_consistent(self, ref: str = "main") -> bool:
         return not self.torn_runs(ref)
+
+    # ------------------------------------------------------------------
+    # Concurrent-publication predicate (DESIGN.md §7)
+    # ------------------------------------------------------------------
+    def stale_publications(self) -> list[str]:
+        """Runs whose published commit carries table state their
+        verifiers never validated.
+
+        This is the §3.3 concurrency invariant: the commit a run's merge
+        creates (or fast-forwards to) must equal, table for table, the
+        state of the transactional branch at the last verifier pass.
+        A plain three-way merge against a moved target violates it; the
+        rebase-and-revalidate protocol makes it unfalsifiable.
+        """
+        out = []
+        for run in self._runs.values():
+            if run.published_commit is None or run.verified_tables is None:
+                continue
+            published = dict(
+                self.catalog.commit(run.published_commit).tables)
+            if published != run.verified_tables:
+                out.append(run.run_id)
+        return out
+
+    def publications_verified(self) -> bool:
+        return not self.stale_publications()

@@ -3,9 +3,13 @@
 Paper Figure 1 moments (2)→(3): the control plane hands a :class:`Plan`
 to a worker; the worker reads source tables *from the pinned start
 commit* (snapshot reads), executes nodes, validates each output against
-its declared schema **before** persisting (moment 3), writes results to
-the transactional branch, runs user verifiers, and finally publishes
-atomically — all outputs of the run or none (§3.3).
+its declared schema **before** persisting (moment 3), then writes ALL of
+the run's outputs to the transactional branch as ONE multi-table atomic
+commit, registers user verifiers on the transaction (step 3 of §3.3),
+and publishes via the CAS + rebase-and-revalidate protocol — all outputs
+of the run or none, and ``log()`` shows one commit per run, not one per
+node. If the run fails mid-DAG, the outputs computed so far are flushed
+to the (then ABORTED) branch so they remain queryable for triage.
 """
 from __future__ import annotations
 
@@ -66,16 +70,33 @@ class Client:
         snap = self.catalog.read_table(ref, name)
         return Table.from_blobs(self.store, snap)
 
+    def _table_verifier(self, table: str,
+                        checks: Sequence[Verifier]
+                        ) -> Callable[[Callable[[str], str]], None]:
+        """Adapt table-level quality checks to a txn verifier: re-reads
+        the table from the (possibly rebased) branch so revalidation
+        after a rebase checks exactly the state being published."""
+        def run_checks(read: Callable[[str], str]) -> None:
+            t = Table.from_blobs(self.store, read(table))
+            for check in checks:
+                check(t)
+        return run_checks
+
     # -- the run API (§3.3 protocol over a full DAG plan) --------------------
     def run(self, plan: Plan, ref: str = "main", *,
             verifiers: Mapping[str, Sequence[Verifier]] | None = None,
             dry_run: bool = False,
-            fail_after: str | None = None) -> RunResult:
+            fail_after: str | None = None,
+            max_publish_attempts: int | None = None) -> RunResult:
         """Execute ``plan`` transactionally against branch ``ref``.
 
-        ``verifiers`` maps table name -> quality checks run at step (3).
+        ``verifiers`` maps table name -> quality checks run at step (3);
+        they are registered on the transaction so publication can re-run
+        them against a rebased state (DESIGN.md §7).
         ``fail_after`` (testing hook) injects a failure after the named
         node completes, to exercise the abort path deterministically.
+        ``max_publish_attempts`` bounds the CAS retry loop under heavy
+        concurrent publication (default: TransactionalRun's).
         """
         if dry_run:
             # plan is already validated; nothing to execute.
@@ -87,8 +108,11 @@ class Client:
 
         verifiers = dict(verifiers or {})
         written: dict[str, str] = {}
+        txn_kw = {}
+        if max_publish_attempts is not None:
+            txn_kw["max_publish_attempts"] = max_publish_attempts
         txn = TransactionalRun(self.catalog, ref, code=plan.code_hash,
-                               registry=self.registry)
+                               registry=self.registry, **txn_kw)
         txn.begin()
         # snapshot reads: sources resolve against the txn branch head,
         # which was forked from the start commit — reads are stable even
@@ -110,20 +134,33 @@ class Client:
                 validate_table(out, node.output_schema,
                                elide=step.elided_null_checks,
                                name=node.name)
-                for check in verifiers.get(node.name, ()):  # step (3)
-                    check(out)
                 snap = out.to_blobs(self.store)
-                txn.write_table(node.name, snap,
-                                message=f"{plan.pipeline_name}:{node.name}")
                 written[node.name] = snap
                 cache[node.name] = out
                 if fail_after == node.name:
                     raise RuntimeError(
                         f"injected failure after node {node.name!r}")
+            # ONE atomic commit for the whole DAG (log reflects runs).
+            txn.write_tables(
+                written,
+                message=f"run {plan.pipeline_name} "
+                        f"({len(written)} tables)")
+            # step (3): quality verifiers on B', re-run on rebase.
+            for table, checks in verifiers.items():
+                if table in written:
+                    txn.verify(self._table_verifier(table, checks))
             txn.commit()
         except TransactionAborted:
             raise
         except Exception as e:
+            # flush the outputs computed so far onto the branch so the
+            # ABORTED branch holds them for triage (§3.3 "preserved").
+            if written:
+                try:
+                    txn.write_tables(
+                        written, message="partial outputs before abort")
+                except Exception:      # pragma: no cover - abort anyway
+                    pass
             txn.abort(e)
             raise TransactionAborted(
                 f"run {txn.run_id} aborted: {e}", branch=txn.branch,

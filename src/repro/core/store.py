@@ -88,6 +88,9 @@ class ObjectStore:
 
 
 class MemoryStore(ObjectStore):
+    """Thread-safe: concurrent transactional runs share one store, so
+    every dict access goes through the lock."""
+
     def __init__(self):
         self._blobs: dict[str, bytes] = {}
         self._lock = threading.Lock()
@@ -100,19 +103,23 @@ class MemoryStore(ObjectStore):
         return key
 
     def get(self, key: str) -> bytes:
-        try:
-            return self._blobs[key]
-        except KeyError:
-            raise KeyError(f"object {key!r} not in store") from None
+        with self._lock:
+            try:
+                return self._blobs[key]
+            except KeyError:
+                raise KeyError(f"object {key!r} not in store") from None
 
     def __contains__(self, key: str) -> bool:
-        return key in self._blobs
+        with self._lock:
+            return key in self._blobs
 
     def keys(self) -> Iterator[str]:
-        return iter(list(self._blobs))
+        with self._lock:
+            return iter(list(self._blobs))
 
     def __len__(self) -> int:
-        return len(self._blobs)
+        with self._lock:
+            return len(self._blobs)
 
 
 class FileStore(ObjectStore):

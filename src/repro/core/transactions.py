@@ -3,10 +3,24 @@
 The run protocol, verbatim from the paper — for target branch ``B``:
 
 1. automatically create a new transactional branch ``B'`` from ``B``;
-2. write the DAG tables into ``B'`` (each write an atomic commit);
+2. write the DAG tables into ``B'`` (one multi-table atomic commit for a
+   whole pipeline via :meth:`TransactionalRun.write_tables`);
 3. run data tests / user-defined verifiers on ``B'``;
 4. only if no code or data error is raised, merge ``B'`` back into ``B``
    and delete it.
+
+**Publication is concurrency-correct** (DESIGN.md §7): ``begin()``
+captures the target head and ``commit()`` merges with an optimistic CAS
+(``expected_head``). If the target moved, the silent-three-way-merge
+hazard — publishing a combined state *no verifier ever saw*, the exact
+counterexample the paper's Alloy model warns about around transactional
+branch visibility — is closed by **rebase-and-revalidate**: the
+transactional branch is rebased onto the new head, **every registered
+verifier re-runs against the rebased state**, and the CAS merge is
+retried with bounded backoff. After ``max_publish_attempts`` the run
+aborts with :class:`PublicationConflict`. The published commit is
+therefore always a fast-forward of a branch head that the full verifier
+set validated.
 
 On failure the transactional branch is marked ABORTED and **preserved**
 so the faulty intermediate assets can be queried for triage — but the
@@ -20,12 +34,14 @@ needed to replay the run (Listing 6).
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 import uuid
 from typing import Any, Callable, Mapping, Sequence
 
 from repro.core.catalog import Catalog, Commit, Visibility
-from repro.core.errors import TransactionAborted, TransactionError
+from repro.core.errors import (PublicationConflict, RefConflict,
+                               TransactionAborted, TransactionError)
 from repro.core.store import ObjectStore, content_hash
 
 __all__ = ["RunState", "RunRegistry", "TransactionalRun", "run_transaction"]
@@ -33,10 +49,16 @@ __all__ = ["RunState", "RunRegistry", "TransactionalRun", "run_transaction"]
 
 @dataclasses.dataclass(frozen=True)
 class RunState:
-    """Immutable record returned by a run (paper Listing 6)."""
+    """Immutable record returned by a run (paper Listing 6).
+
+    ``ref`` pins the state the run *read from* (the head at ``begin``);
+    ``base_commit`` pins the head the run *published onto* — after a
+    rebase these differ, and replaying the DAG at ``ref`` reproduces the
+    run's outputs while ``final_commit``'s parent is ``base_commit``.
+    """
 
     run_id: str
-    ref: str                   # start commit id (the data state)
+    ref: str                   # start commit id (pinned read state)
     code_hash: str             # content hash of the DAG code
     target_branch: str
     txn_branch: str
@@ -45,6 +67,9 @@ class RunState:
     error: str | None = None
     started_at: float = 0.0
     finished_at: float | None = None
+    verified_head: str | None = None   # branch head the verifiers validated
+    publish_attempts: int = 0          # CAS attempts commit() needed
+    base_commit: str | None = None     # head the run published onto
 
 
 class RunRegistry:
@@ -52,18 +77,23 @@ class RunRegistry:
 
     def __init__(self):
         self._runs: dict[str, RunState] = {}
+        self._lock = threading.Lock()
 
     def record(self, state: RunState) -> None:
-        self._runs[state.run_id] = state
+        with self._lock:
+            self._runs[state.run_id] = state
 
     def get_run(self, run_id: str) -> RunState:
-        try:
-            return self._runs[run_id]
-        except KeyError:
-            raise TransactionError(f"unknown run_id {run_id!r}") from None
+        with self._lock:
+            try:
+                return self._runs[run_id]
+            except KeyError:
+                raise TransactionError(
+                    f"unknown run_id {run_id!r}") from None
 
     def runs(self) -> list[RunState]:
-        return list(self._runs.values())
+        with self._lock:
+            return list(self._runs.values())
 
 
 class TransactionalRun:
@@ -75,25 +105,34 @@ class TransactionalRun:
             txn.write_table("parent", snap_p)
             txn.write_table("child", snap_c)
             txn.verify(lambda read: check_quality(read("child")))
-        # exit: atomically merged into `main`; on exception: aborted,
-        # branch preserved as `txn.branch` with Visibility.ABORTED.
+        # exit: atomically merged into `main` (rebase-and-revalidate on
+        # concurrent movement); on exception: aborted, branch preserved
+        # as `txn.branch` with Visibility.ABORTED.
     """
 
     def __init__(self, catalog: Catalog, target: str, *,
                  code: bytes | str = b"", registry: RunRegistry | None = None,
                  run_id: str | None = None, author: str = "",
-                 keep_branch_on_success: bool = False):
+                 keep_branch_on_success: bool = False,
+                 max_publish_attempts: int = 8,
+                 publish_backoff_s: float = 0.001):
         self.catalog = catalog
         self.target = target
         self.registry = registry
         self.author = author
         self.keep_branch_on_success = keep_branch_on_success
+        self.max_publish_attempts = max_publish_attempts
+        self.publish_backoff_s = publish_backoff_s
         self.run_id = run_id or f"run_{uuid.uuid4().hex[:12]}"
         code_bytes = code.encode() if isinstance(code, str) else code
         self.code_hash = content_hash(code_bytes)[:16]
         self.branch: str | None = None
+        self.final_commit: Commit | None = None
+        self.publish_attempts = 0
         self._start_commit: str | None = None
+        self._target_head: str | None = None   # CAS token for publication
         self._verifiers: list[Callable[[Callable[[str], str]], Any]] = []
+        self._verifier_heads: list[str | None] = []  # head each fn last saw
         self._status = "created"
         self._started_at = 0.0
 
@@ -104,6 +143,7 @@ class TransactionalRun:
         self._started_at = time.time()
         head = self.catalog.head(self.target)
         self._start_commit = head.id
+        self._target_head = head.id   # publication CAS expects this head
         self.branch = f"txn/{self.run_id}"
         # step 1: system-created transactional branch
         self.catalog.create_branch(
@@ -121,6 +161,14 @@ class TransactionalRun:
             self.branch, table, snapshot, message=message,
             author=self.author, run_id=self.run_id, _system=True)
 
+    def write_tables(self, tables: Mapping[str, str], *,
+                     message: str = "") -> Commit:
+        """Write a whole DAG's outputs as ONE multi-table atomic commit."""
+        self._require_running()
+        return self.catalog.write_tables(
+            self.branch, tables, message=message,
+            author=self.author, run_id=self.run_id, _system=True)
+
     def read_table(self, table: str) -> str:
         """Read within the transaction (sees own writes, snapshot reads)."""
         self._require_running()
@@ -131,32 +179,99 @@ class TransactionalRun:
         """Register (and immediately run) a verifier against B'.
 
         ``fn`` receives a reader ``read(table) -> snapshot`` bound to the
-        transactional branch. Any exception aborts the run.
+        transactional branch. Any exception aborts the run. The branch
+        head the verifier observed is recorded; ``commit()`` re-runs
+        every verifier whose observation is stale (writes after
+        verification, or a rebase onto a moved target) so that no state
+        is ever published unvalidated.
         """
         self._require_running()
+        observed = self.catalog.head(self.branch).id
         self._verifiers.append(fn)
+        self._verifier_heads.append(None)
         try:
             fn(self.read_table)
         except Exception as e:
             self.abort(e)
             raise TransactionAborted(
                 f"verifier failed: {e}", branch=self.branch, cause=e) from e
+        self._verifier_heads[-1] = observed
 
-    # step 4: atomic publication
+    @property
+    def verifier_heads(self) -> tuple[str | None, ...]:
+        """Branch head each registered verifier last validated."""
+        return tuple(self._verifier_heads)
+
+    def _revalidate(self) -> str:
+        """Re-run EVERY registered verifier against the current branch
+        state; returns the branch head they all validated."""
+        observed = self.catalog.head(self.branch).id
+        for fn in self._verifiers:
+            try:
+                fn(self.read_table)
+            except Exception as e:
+                self.abort(e)
+                raise TransactionAborted(
+                    f"verifier failed on revalidation against "
+                    f"{observed[:8]}: {e}",
+                    branch=self.branch, cause=e) from e
+        self._verifier_heads = [observed] * len(self._verifiers)
+        return observed
+
+    # step 4: atomic publication — CAS + rebase-and-revalidate
     def commit(self) -> Commit:
         self._require_running()
-        try:
-            merged = self.catalog.merge(
-                self.branch, into=self.target, run_id=self.run_id,
-                message=f"txn commit {self.run_id}", _system=True)
-        except Exception as e:
-            self.abort(e)
-            raise TransactionAborted(
-                f"publication failed: {e}", branch=self.branch,
-                cause=e) from e
+        attempt = 0
+        while True:
+            attempt += 1
+            self.publish_attempts = attempt
+            # Never publish state the full verifier set did not validate:
+            # if any verifier's observation is stale (a write or a rebase
+            # happened after it ran), re-run them all first.
+            branch_head = self.catalog.head(self.branch).id
+            if self._verifiers and any(h != branch_head
+                                       for h in self._verifier_heads):
+                branch_head = self._revalidate()
+            try:
+                merged = self.catalog.merge(
+                    self.branch, into=self.target, run_id=self.run_id,
+                    message=f"txn commit {self.run_id}",
+                    expected_head=self._target_head, _system=True)
+                break
+            except RefConflict as e:
+                if attempt >= self.max_publish_attempts:
+                    self.abort(e)
+                    raise PublicationConflict(
+                        f"run {self.run_id}: target {self.target!r} kept "
+                        f"moving; gave up after {attempt} publication "
+                        f"attempts", branch=self.branch, cause=e) from e
+                if self.publish_backoff_s:
+                    time.sleep(self.publish_backoff_s * attempt)
+                # Rebase onto the head we just observed — an immutable
+                # commit id, so the subsequent CAS publishes exactly the
+                # (re-verified) rebased state or conflicts again.
+                try:
+                    new_head = self.catalog.head(self.target).id
+                    self.catalog.rebase(self.branch, new_head,
+                                        run_id=self.run_id, _system=True)
+                    self._target_head = new_head
+                except Exception as e2:
+                    self.abort(e2)
+                    raise TransactionAborted(
+                        f"publication failed: {e2}", branch=self.branch,
+                        cause=e2) from e2
+            except Exception as e:
+                self.abort(e)
+                raise TransactionAborted(
+                    f"publication failed: {e}", branch=self.branch,
+                    cause=e) from e
         self._status = "committed"
+        self.final_commit = merged
         if not self.keep_branch_on_success:
-            self.catalog.delete_branch(self.branch)
+            self.catalog.delete_branch(self.branch, _system=True)
+        else:
+            # the branch's state is now published: release it to users
+            self.catalog.mark(self.branch, Visibility.USER, _system=True)
         self._record(final_commit=merged.id)
         return merged
 
@@ -167,7 +282,7 @@ class TransactionalRun:
         self._status = "aborted"
         # the branch stays: "reachable by any user for debugging and
         # inspection" — but Visibility.ABORTED means it can never merge.
-        self.catalog.mark(self.branch, Visibility.ABORTED)
+        self.catalog.mark(self.branch, Visibility.ABORTED, _system=True)
         self._record(error=str(error) if error else None)
 
     # ------------------------------------------------------------------
@@ -192,6 +307,7 @@ class TransactionalRun:
                 error: str | None = None) -> None:
         if self.registry is None:
             return
+        heads = {h for h in self._verifier_heads if h is not None}
         self.registry.record(RunState(
             run_id=self.run_id, ref=self._start_commit or "",
             code_hash=self.code_hash, target_branch=self.target,
@@ -200,7 +316,10 @@ class TransactionalRun:
             started_at=self._started_at,
             finished_at=(time.time()
                          if self._status in ("committed", "aborted")
-                         else None)))
+                         else None),
+            verified_head=(heads.pop() if len(heads) == 1 else None),
+            publish_attempts=self.publish_attempts,
+            base_commit=self._target_head))
 
 
 def run_transaction(
@@ -212,13 +331,17 @@ def run_transaction(
     code: bytes | str = b"",
     registry: RunRegistry | None = None,
 ) -> Commit:
-    """One-shot functional form of the protocol."""
+    """One-shot functional form of the protocol.
+
+    Returns the actual merged :class:`Commit` from ``txn.commit()`` —
+    NOT ``catalog.head(target)`` after the fact, which may already
+    reflect a later concurrent run.
+    """
     items = writes.items() if isinstance(writes, Mapping) else writes
     with TransactionalRun(catalog, target, code=code,
                           registry=registry) as txn:
-        for table, snap in items:
-            txn.write_table(table, snap)
+        txn.write_tables(dict(items), message=f"txn {txn.run_id}")
         for v in verifiers:
             txn.verify(v)
-    head = catalog.head(target)
-    return head
+    assert txn.final_commit is not None
+    return txn.final_commit

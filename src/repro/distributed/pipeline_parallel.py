@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.sharding import shard_map
+
 
 def pipeline_forward(stage_fn: Callable[[Any, jax.Array], jax.Array],
                      stage_params: Any, x: jax.Array, *, mesh: Mesh,
@@ -74,7 +76,7 @@ def pipeline_forward(stage_fn: Callable[[Any, jax.Array], jax.Array],
 
     other = tuple(a for a in mesh.axis_names if a != "pipe")
     pspec = jax.tree.map(lambda _: P("pipe"), stage_params)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(pspec, P()), out_specs=P(),
         check_vma=False,

@@ -143,7 +143,7 @@ def _aborted_branch(cat):
     cat.create_branch("txn/r1", "main", visibility=Visibility.TXN,
                       owner_run="r1")
     cat.write_table("txn/r1", "P", "p1", _system=True)
-    cat.mark("txn/r1", Visibility.ABORTED)
+    cat.mark("txn/r1", Visibility.ABORTED, _system=True)
     return "txn/r1"
 
 
@@ -192,3 +192,174 @@ def test_quarantine_is_contagious(cat):
         cat.create_branch("retry2", "retry")         # still quarantined
     cat.create_branch("retry2", "retry", allow_reuse=True)
     assert cat.branch_info("retry2").visibility is Visibility.QUARANTINED
+
+
+# ---------------------------------------------------------------------------
+# Laundering by raw commit id / tag (the visibility-bypass regression)
+# ---------------------------------------------------------------------------
+
+def test_merge_aborted_head_by_commit_id_refused(cat):
+    """Regression: merging the ABORTED branch's raw COMMIT ID used to
+    skip every src_info visibility check and republish the partial run."""
+    b = _aborted_branch(cat)
+    cid = cat.head(b).id
+    with pytest.raises(VisibilityError, match="republish"):
+        cat.merge(cid, into="main")
+    assert cat.read_table("main", "P") == "p0"       # main untouched
+
+
+def test_merge_live_txn_head_by_commit_id_refused(cat):
+    cat.create_branch("txn/live", "main", visibility=Visibility.TXN,
+                      owner_run="r2")
+    cat.write_table("txn/live", "Q", "q-uncommitted", _system=True)
+    cid = cat.head("txn/live").id
+    with pytest.raises(VisibilityError):
+        cat.merge(cid, into="main")
+
+
+def test_merge_tag_of_aborted_head_refused(cat):
+    """A tag on an aborted head must not legitimize it."""
+    b = _aborted_branch(cat)
+    cat.tag("triage-pin", b)
+    with pytest.raises(VisibilityError):
+        cat.merge("triage-pin", into="main")
+
+
+def test_merge_published_commit_id_still_allowed(cat):
+    """Commits reachable from USER branches stay mergeable by id."""
+    cat.write_table("main", "t", "s1")
+    cat.create_branch("f", "main")
+    cat.write_table("f", "t", "s2")
+    cid = cat.head("f").id
+    merged = cat.merge(cid, into="main")
+    assert cat.head("main").id == merged.id
+    assert cat.read_table("main", "t") == "s2"
+
+
+# ---------------------------------------------------------------------------
+# delete_branch / mark privilege holes
+# ---------------------------------------------------------------------------
+
+def test_delete_live_txn_branch_requires_system(cat):
+    cat.create_branch("txn/r5", "main", visibility=Visibility.TXN,
+                      owner_run="r5")
+    with pytest.raises(VisibilityError, match="live transactional"):
+        cat.delete_branch("txn/r5")                  # mid-run delete
+    cat.delete_branch("txn/r5", _system=True)
+    assert "txn/r5" not in cat.branches()
+
+
+def test_delete_aborted_branch_requires_system(cat):
+    b = _aborted_branch(cat)
+    with pytest.raises(VisibilityError, match="triage"):
+        cat.delete_branch(b)                         # preserved per §3.3
+    cat.delete_branch(b, _system=True)
+
+
+def test_mark_cannot_unabort_without_system(cat):
+    b = _aborted_branch(cat)
+    with pytest.raises(VisibilityError, match="un-marking"):
+        cat.mark(b, Visibility.USER)                 # laundering attempt
+    # system (e.g. an operator tool) may still do it explicitly
+    cat.mark(b, Visibility.USER, _system=True)
+    assert cat.branch_info(b).visibility is Visibility.USER
+
+
+def test_mark_cannot_release_unverified_quarantine(cat):
+    """Regression: flipping an UNVERIFIED quarantined branch to USER
+    would skip the merge gate entirely."""
+    b = _aborted_branch(cat)
+    cat.create_branch("retry", b, allow_reuse=True)
+    with pytest.raises(VisibilityError, match="unverified"):
+        cat.mark("retry", Visibility.USER)
+    # after re-verification, releasing is the sanctioned path
+    cat.mark("retry", Visibility.QUARANTINED, verified=True)
+    cat.mark("retry", Visibility.USER)
+    cat.merge("retry", into="main")
+
+
+def test_merge_tag_of_deleted_aborted_branch_refused(cat):
+    """Regression: once the aborted branch is cleaned up, its head is
+    reachable only via the tag — still not publishable."""
+    b = _aborted_branch(cat)
+    cat.tag("triage-pin", b)
+    cat.delete_branch(b, _system=True)
+    with pytest.raises(VisibilityError, match="not reachable"):
+        cat.merge("triage-pin", into="main")
+
+
+def test_mark_live_txn_branch_requires_system(cat):
+    cat.create_branch("txn/r6", "main", visibility=Visibility.TXN,
+                      owner_run="r6")
+    with pytest.raises(VisibilityError):
+        cat.mark("txn/r6", Visibility.USER)
+    # QUARANTINED re-verification stays user-facing (DESIGN.md §6)
+    b = _aborted_branch(cat)
+    cat.create_branch("retry", b, allow_reuse=True)
+    cat.mark("retry", Visibility.QUARANTINED, verified=True)  # no _system
+    assert cat.branch_info("retry").verified
+
+
+# ---------------------------------------------------------------------------
+# write_tables: the multi-table atomic commit
+# ---------------------------------------------------------------------------
+
+def test_write_tables_single_commit(cat):
+    before = cat.head("main")
+    c = cat.write_tables("main", {"a": "a0", "b": "b0", "c": "c0"},
+                         message="one run")
+    assert cat.head("main").id == c.id
+    assert c.parents == (before.id,)
+    assert c.tables == {"a": "a0", "b": "b0", "c": "c0"}
+    # exactly ONE commit was appended for three tables
+    assert [x.id for x in cat.log("main")] == [c.id, before.id]
+
+
+def test_write_tables_empty_is_noop(cat):
+    head = cat.head("main")
+    assert cat.write_tables("main", {}).id == head.id
+    assert cat.head("main").id == head.id
+
+
+def test_write_tables_cas(cat):
+    h = cat.head("main").id
+    cat.write_table("main", "t", "s1")
+    with pytest.raises(RefConflict):
+        cat.write_tables("main", {"a": "a0"}, expected_head=h)
+
+
+# ---------------------------------------------------------------------------
+# rebase: replay changes onto a new base (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def test_rebase_replays_changes_onto_new_head(cat):
+    cat.write_table("main", "p", "p0")
+    cat.create_branch("f", "main")
+    cat.write_table("f", "x", "x1")
+    cat.write_table("main", "p", "p1")               # main moved
+    new_head = cat.head("main").id
+    c = cat.rebase("f", new_head)
+    assert c.parents == (new_head,)
+    assert c.tables == {"p": "p1", "x": "x1"}
+    assert cat.head("f").id == c.id
+    # now a CAS merge against new_head fast-forwards
+    merged = cat.merge("f", into="main", expected_head=new_head)
+    assert merged.id == c.id
+
+
+def test_rebase_conflict(cat):
+    cat.write_table("main", "t", "t0")
+    cat.create_branch("f", "main")
+    cat.write_table("f", "t", "left")
+    cat.write_table("main", "t", "right")
+    with pytest.raises(MergeConflict):
+        cat.rebase("f", cat.head("main").id)
+
+
+def test_rebase_no_changes_fast_forwards(cat):
+    cat.create_branch("f", "main")
+    cat.write_table("main", "t", "t1")
+    head = cat.head("main").id
+    c = cat.rebase("f", head)
+    assert c.id == head
+    assert cat.head("f").id == head

@@ -1,0 +1,204 @@
+"""Threaded stress harness: concurrent transactional runs against `main`.
+
+The §3.3 protocol under real concurrency (DESIGN.md §7). Invariants
+asserted over every interleaving the scheduler produces:
+
+- every run either publishes atomically or aborts cleanly (branch
+  preserved as ABORTED) — never a torn or silently-combined state;
+- **linearizable history**: every published commit is a fast-forward of
+  a transactional-branch head that the run's FULL verifier set
+  validated, asserted by recording the head each verifier observed
+  (``RunState.verified_head`` / ``TransactionalRun.verifier_heads``);
+- :meth:`Catalog.write_tables` yields exactly ONE commit on main per
+  successful run — ``log()`` reflects runs, not nodes.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import schema as S
+from repro.core.catalog import Catalog, Visibility
+from repro.core.dag import Pipeline
+from repro.core.errors import PublicationConflict, TransactionAborted
+from repro.core.planner import plan
+from repro.core.quality import expect_not_null, expect_row_count
+from repro.core.runner import Client
+from repro.core.transactions import TransactionalRun
+from repro.data.tables import Table, col
+
+K = 8  # concurrent runs
+
+Src = S.Schema.of("Src", k=str, v=int)
+Out = S.Schema.of("Out", k=str, v=int)
+
+
+def _source_table() -> Table:
+    return Table({"k": np.array(["a", "b", "c"], dtype=object),
+                  "v": np.arange(3, dtype=np.int64)})
+
+
+def _pipeline(i: int) -> Pipeline:
+    p = Pipeline(f"worker{i}")
+    p.source("src_table", Src)
+
+    @p.node(name=f"out_{i}")
+    def out_node(df: Src = "src_table") -> Out:
+        return df.select([col("k"), col("v")])
+
+    return p
+
+
+def _spawn(n, fn):
+    threads = [threading.Thread(target=fn, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+
+# ---------------------------------------------------------------------------
+# Disjoint outputs: all K runs MUST publish, rebasing past each other
+# ---------------------------------------------------------------------------
+
+def test_eight_concurrent_client_runs_all_publish():
+    client = Client()
+    client.write_source_table("main", "src_table", _source_table())
+    base_log = len(client.catalog.log("main", limit=1000))
+    plans = [plan(_pipeline(i)) for i in range(K)]
+    barrier = threading.Barrier(K)
+    results, errors = {}, {}
+
+    def worker(i):
+        barrier.wait()          # maximal contention: all begin together
+        try:
+            results[i] = client.run(
+                plans[i], "main",
+                verifiers={f"out_{i}": [expect_row_count(1, 10),
+                                        expect_not_null("k")]},
+                # each RefConflict implies another run published since we
+                # last rebased, so K+2 attempts can never be exhausted
+                max_publish_attempts=K + 2)
+        except TransactionAborted as e:   # pragma: no cover - must not
+            errors[i] = e
+
+    _spawn(K, worker)
+    assert not errors, f"disjoint runs aborted: {errors}"
+
+    # all outputs are visible on main
+    tables = client.catalog.tables("main")
+    assert all(f"out_{i}" in tables for i in range(K))
+
+    # linearizable: the commit each run published IS the branch head its
+    # verifiers validated (fast-forward of fully-verified state)
+    for res in results.values():
+        st = res.state
+        assert st.status == "committed"
+        assert st.verified_head is not None
+        assert st.final_commit == st.verified_head
+
+    # exactly ONE commit on main per successful run
+    log = client.catalog.log("main", limit=1000)
+    assert len(log) == base_log + K
+    assert ({c.run_id for c in log[:K]}
+            == {res.state.run_id for res in results.values()})
+
+    # no transactional branches leak
+    assert client.catalog.branches() == ["main"]
+
+
+# ---------------------------------------------------------------------------
+# Same table: exactly one run wins; the rest abort cleanly
+# ---------------------------------------------------------------------------
+
+def test_concurrent_same_table_runs_serialize():
+    cat = Catalog()
+    cat.write_table("main", "T", "t0")
+    barrier = threading.Barrier(K)
+    outcomes = {}
+
+    def worker(i):
+        txn = TransactionalRun(cat, "main",
+                               max_publish_attempts=K + 2).begin()
+        txn.write_table("T", f"t-run{i}")
+        txn.verify(lambda read: read("T"))
+        barrier.wait()          # everyone wrote before anyone publishes
+        try:
+            merged = txn.commit()
+            outcomes[i] = ("committed", merged.id, txn)
+        except TransactionAborted:
+            outcomes[i] = ("aborted", None, txn)
+
+    _spawn(K, worker)
+    committed = {i: v for i, v in outcomes.items() if v[0] == "committed"}
+    aborted = {i: v for i, v in outcomes.items() if v[0] == "aborted"}
+    # all K began from the same base and changed the same table: exactly
+    # one can linearize; every other rebase must conflict and abort
+    assert len(committed) == 1
+    assert len(aborted) == K - 1
+
+    (winner, (_, cid, wtxn)), = committed.items()
+    assert cat.read_table("main", "T") == f"t-run{winner}"
+    assert cat.head("main").id == cid
+    # the winner's published head is exactly what its verifier validated
+    assert set(wtxn.verifier_heads) == {cid}
+
+    # losers' branches are preserved for triage, never mergeable
+    for i, (_, _, txn) in aborted.items():
+        info = cat.branch_info(txn.branch)
+        assert info.visibility is Visibility.ABORTED
+        assert cat.read_table(txn.branch, "T") == f"t-run{i}"
+
+
+# ---------------------------------------------------------------------------
+# Mixed workload, repeated rounds: determinism across interleavings
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("round_", range(3))
+def test_mixed_contention_rounds(round_):
+    """Half the runs write private tables (must publish), half fight
+    over one shared table (exactly one winner per round)."""
+    cat = Catalog()
+    cat.write_table("main", "shared", "s0")
+    barrier = threading.Barrier(K)
+    outcomes = {}
+
+    def worker(i):
+        txn = TransactionalRun(cat, "main",
+                               max_publish_attempts=2 * K).begin()
+        if i % 2 == 0:
+            txn.write_table(f"private_{i}", f"p{i}")
+        else:
+            txn.write_table("shared", f"s-run{i}")
+        txn.verify(lambda read: None)
+        barrier.wait()
+        try:
+            outcomes[i] = ("committed", txn.commit().id, txn)
+        except TransactionAborted:
+            outcomes[i] = ("aborted", None, txn)
+
+    _spawn(K, worker)
+    disjoint = [i for i in range(0, K, 2)]
+    fighting = [i for i in range(1, K, 2)]
+    assert all(outcomes[i][0] == "committed" for i in disjoint)
+    winners = [i for i in fighting if outcomes[i][0] == "committed"]
+    assert len(winners) == 1
+    assert cat.read_table("main", "shared") == f"s-run{winners[0]}"
+    for i in disjoint:
+        assert cat.read_table("main", f"private_{i}") == f"p{i}"
+    # every published commit was verified against its actual parent:
+    # published head == the head recorded at the last verifier pass
+    for i, (status, cid, txn) in outcomes.items():
+        if status == "committed":
+            heads = set(txn.verifier_heads)
+            assert heads == {cid}
+
+
+# ---------------------------------------------------------------------------
+# Retry-budget exhaustion surfaces as PublicationConflict
+# ---------------------------------------------------------------------------
+
+def test_publication_conflict_is_transaction_aborted():
+    """PublicationConflict is catchable as TransactionAborted, so
+    existing abort handling (and the stress workers above) covers it."""
+    assert issubclass(PublicationConflict, TransactionAborted)

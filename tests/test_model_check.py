@@ -5,6 +5,11 @@ The unguarded variant must REACH the paper's Fig. 4 inconsistent state
 the same trace — and every trace hypothesis can find — safe.
 """
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property search needs hypothesis (pip install -r "
+           "requirements-dev.txt)")
 from hypothesis import HealthCheck, settings
 from hypothesis import strategies as st
 from hypothesis.stateful import (RuleBasedStateMachine, invariant,
@@ -173,11 +178,17 @@ class GuardedLakehouse(RuleBasedStateMachine):
         except ReproError:
             pass
 
-    # -- the global safety property ---------------------------------------
+    # -- the global safety properties ---------------------------------------
     @invariant()
     def main_is_never_torn(self):
         torn = self.m.torn_runs("main")
         assert not torn, f"guarded model reached torn state: {torn}"
+
+    @invariant()
+    def publications_are_verified(self):
+        stale = self.m.stale_publications()
+        assert not stale, (
+            f"rebase-and-revalidate published unverified state: {stale}")
 
 
 GuardedLakehouse.TestCase.settings = settings(
@@ -197,6 +208,54 @@ def test_unguarded_model_found_by_same_search():
     agent = m.actor_branch(bad.branch)
     m.actor_merge(agent, into="main")
     assert not m.is_consistent()
+
+
+# ---------------------------------------------------------------------------
+# Concurrent publication: stale-verification merges (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def test_stale_publication_counterexample_without_cas():
+    """The pre-fix protocol: target moves after begin; the plain merge
+    silently publishes a combined state NO verifier ever observed."""
+    m = LakehouseModel(guarded=True, publication="stale")
+    r = m.begin_run(("P",), mode="txn")
+    m.step_run(r)
+    m.actor_write("main", "X")          # main moves mid-run
+    m.finish_run(r)                     # silent three-way merge
+    assert m.stale_publications() == [r.run_id]
+    # the torn-run predicate does NOT catch this (r committed, nothing
+    # partial) — which is exactly why the new predicate is needed.
+    assert m.is_consistent()
+
+
+def test_rebase_publication_closes_counterexample():
+    """The shipped protocol on the identical trace: rebase onto the
+    moved head, re-verify, then fast-forward — published == verified."""
+    m = LakehouseModel(guarded=True, publication="rebase")
+    r = m.begin_run(("P",), mode="txn")
+    m.step_run(r)
+    m.actor_write("main", "X")
+    m.finish_run(r)
+    assert m.publications_verified()
+    # the published commit carries BOTH the concurrent write and the
+    # run's table, and the verifiers validated that exact state
+    pub = dict(m.catalog.commit(r.published_commit).tables)
+    assert pub == r.verified_tables
+    assert "X" in pub and "P" in pub
+
+
+def test_rebase_publication_conflict_aborts_cleanly():
+    """Same table changed on both sides: rebase must conflict, the run
+    must abort, and main keeps the concurrent writer's value."""
+    m = LakehouseModel(guarded=True, publication="rebase")
+    r = m.begin_run(("P",), mode="txn")
+    m.step_run(r)
+    m.actor_write("main", "P")          # same table on main
+    with pytest.raises(ReproError):
+        m.finish_run(r)
+    m.fail_run(r)
+    assert m.is_consistent()
+    assert m.publications_verified()
 
 
 def test_second_counterexample_live_txn_branch_laundering():

@@ -2,6 +2,11 @@
 tests (hypothesis) for the invariants the runner depends on."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property sweeps need hypothesis (pip install -r "
+           "requirements-dev.txt)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

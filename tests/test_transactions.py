@@ -2,7 +2,8 @@
 import pytest
 
 from repro.core.catalog import Catalog, Visibility
-from repro.core.errors import TransactionAborted, TransactionError
+from repro.core.errors import (PublicationConflict, TransactionAborted,
+                               TransactionError)
 from repro.core.transactions import (RunRegistry, TransactionalRun,
                                      run_transaction)
 
@@ -120,6 +121,145 @@ def test_run_transaction_helper(cat):
                            code="helper")
     assert head.tables["P"] == "Pnew"
     assert cat.tables("main")["C"] == "Cnew"
+
+
+def test_run_transaction_returns_own_merge_not_later_head(cat):
+    """Regression: the helper used to return catalog.head(target) AFTER
+    the with-block — under concurrency that can be someone else's
+    commit. It must return the actual merged commit of THIS run."""
+    recorded = {}
+
+    def sneaky_verifier(read):
+        # simulate a concurrent run publishing between our merge and the
+        # (old) post-hoc head read: we publish, then main moves again.
+        recorded["ran"] = True
+
+    merged = run_transaction(cat, "main", {"P": "P1"},
+                             verifiers=[sneaky_verifier])
+    # another writer moves main AFTER our commit returned
+    cat.write_table("main", "P", "P-later")
+    assert recorded["ran"]
+    assert merged.tables["P"] == "P1"          # our state, not P-later
+    assert merged.run_id is not None
+    assert cat.commit(merged.id).id == merged.id
+
+
+# ---------------------------------------------------------------------------
+# Rebase-and-revalidate publication (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+def test_rebase_republishes_verified_state(cat):
+    """If main moves after begin() on a DISJOINT table, commit() must
+    rebase and re-run the verifiers against the rebased state — never
+    silently three-way-merge a state no verifier saw."""
+    seen_states = []
+
+    def verifier(read):
+        seen_states.append((read("P"), read("G")))
+
+    txn = TransactionalRun(cat, "main").begin()
+    txn.write_table("G", "G**")
+    txn.verify(verifier)
+    assert seen_states == [("P*", "G**")]
+    cat.write_table("main", "P", "P-concurrent")   # target moves
+    merged = txn.commit()
+    # the verifier RE-RAN and observed the rebased (published) state
+    assert seen_states[-1] == ("P-concurrent", "G**")
+    assert merged.tables == {"P": "P-concurrent", "C": "C*", "G": "G**",
+                             }
+    assert txn.publish_attempts == 2
+    # published commit is exactly the branch head the verifiers validated
+    assert txn.final_commit.id == merged.id
+
+
+def test_verifier_failure_on_revalidation_aborts(cat):
+    """A verifier that passes pre-conflict but fails against the rebased
+    state must abort the run — publishing would be incorrect."""
+    def verifier(read):
+        if read("P") == "P-concurrent":
+            raise ValueError("new base breaks the quality gate")
+
+    txn = TransactionalRun(cat, "main").begin()
+    txn.write_table("G", "G**")
+    txn.verify(verifier)                           # passes against P*
+    cat.write_table("main", "P", "P-concurrent")
+    with pytest.raises(TransactionAborted, match="revalidation"):
+        txn.commit()
+    assert cat.branch_info(txn.branch).visibility is Visibility.ABORTED
+    assert cat.tables("main")["G"] == "G*"         # nothing published
+
+
+def test_writes_after_verify_are_revalidated(cat):
+    """A write AFTER a verifier ran makes its observation stale; commit
+    must re-run it so the published state is fully validated."""
+    observed = []
+
+    def verifier(read):
+        observed.append(read("C"))
+
+    txn = TransactionalRun(cat, "main").begin()
+    txn.write_table("C", "C1")
+    txn.verify(verifier)
+    txn.write_table("C", "C2")                     # stale-ifies the pass
+    txn.commit()
+    assert observed == ["C1", "C2"]                # re-ran before merge
+    assert cat.tables("main")["C"] == "C2"
+
+
+def test_publication_conflict_after_retry_budget(cat):
+    """A target that keeps moving exhausts the CAS budget and raises
+    PublicationConflict; the branch is aborted and preserved."""
+    def adversarial_verifier(read):
+        # every (re)validation pass, the target moves again
+        cat.write_table("main", "hot", f"v{len(moves)}")
+        moves.append(1)
+
+    moves = []
+    txn = TransactionalRun(cat, "main", max_publish_attempts=3,
+                           publish_backoff_s=0.0).begin()
+    txn.write_table("G", "G**")
+    txn.verify(adversarial_verifier)
+    with pytest.raises(PublicationConflict, match="gave up after 3"):
+        txn.commit()
+    assert cat.branch_info(txn.branch).visibility is Visibility.ABORTED
+    reg_free_state = txn.publish_attempts
+    assert reg_free_state == 3
+
+
+def test_registry_records_verified_head_and_attempts(cat):
+    reg = RunRegistry()
+    with TransactionalRun(cat, "main", registry=reg) as txn:
+        txn.write_table("P", "P**")
+        txn.verify(lambda read: read("P"))
+    st = reg.get_run(txn.run_id)
+    assert st.status == "committed"
+    assert st.publish_attempts == 1
+    assert st.verified_head == st.final_commit     # published == verified
+    assert st.base_commit == st.ref                # no rebase happened
+
+
+def test_registry_records_rebased_base_commit(cat):
+    """After a rebase, `ref` keeps the pinned READ state while
+    `base_commit` records the head actually published onto."""
+    reg = RunRegistry()
+    start = cat.head("main").id
+    txn = TransactionalRun(cat, "main", registry=reg).begin()
+    txn.write_table("G", "G**")
+    moved = cat.write_table("main", "P", "P-concurrent")
+    merged = txn.commit()
+    st = reg.get_run(txn.run_id)
+    assert st.ref == start
+    assert st.base_commit == moved.id
+    assert cat.commit(merged.id).parents[0] == st.base_commit
+
+
+def test_keep_branch_on_success_releases_branch(cat):
+    txn = TransactionalRun(cat, "main", keep_branch_on_success=True)
+    with txn:
+        txn.write_table("P", "P**")
+    info = cat.branch_info(txn.branch)
+    assert info.visibility is Visibility.USER      # published: released
+    cat.delete_branch(txn.branch)                  # user may clean up
 
 
 def test_nested_runs_on_user_branches(cat):
