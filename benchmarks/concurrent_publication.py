@@ -8,7 +8,11 @@ K threads each publish R transactional runs against `main`:
   wave; measures clean-abort overhead.
 
 Also compares per-node commits vs one ``write_tables`` multi-table
-commit (the commit-churn cut: log entries per run -> 1).
+commit (the commit-churn cut: log entries per run -> 1), and — since
+the wave engine (DESIGN.md §8) — measures how many nodes a publication
+rebase re-executes: with the content-addressed cache, rebasing past
+concurrent runs that did NOT move this run's inputs re-executes ZERO
+nodes (O(changed subgraph), not O(full DAG)).
 
 Run: ``PYTHONPATH=src python -m benchmarks.concurrent_publication``
 """
@@ -17,13 +21,26 @@ from __future__ import annotations
 import threading
 import time
 
+import numpy as np
+
+from repro.core import schema as S
 from repro.core.catalog import Catalog
+from repro.core.dag import Pipeline
 from repro.core.errors import TransactionAborted
+from repro.core.planner import plan
+from repro.core.runner import Client
 from repro.core.transactions import TransactionalRun
+from repro.data.tables import Table, col
 
 
 def row(name, metric, value, unit, notes=""):
     print(f"{name},{metric},{value:.6g},{unit},{notes}")
+
+
+# module scope: PEP-563 string annotations resolve against the defining
+# frame, so node schemas cannot live inside the bench function.
+SrcSchema = S.Schema.of("SrcSchema", v=int)
+OutSchema = S.Schema.of("OutSchema", v=int, w=int)
 
 
 def _publish_wave(cat: Catalog, k: int, runs_each: int, *,
@@ -84,9 +101,60 @@ def bench_concurrent_publication(k: int = 8, runs_each: int = 25) -> None:
         f"multi-table commit; was {per_node} per-node commits")
 
 
+def bench_rebase_reexecution(k: int = 8) -> None:
+    """K full Client runs (plan -> waves -> publish) with disjoint
+    outputs over ONE shared source: every CAS conflict rebases past a
+    sibling's commit that did not move the inputs, so every rebase must
+    re-execute 0 nodes (all cache hits)."""
+    def pipeline(i: int) -> Pipeline:
+        p = Pipeline(f"worker{i}")
+        p.source("src", SrcSchema)
+
+        @p.node(name=f"out_{i}")
+        def out_node(df: SrcSchema = "src") -> OutSchema:
+            return df.select([col("v"), (col("v") * (i + 1)).alias("w")])
+
+        return p
+
+    client = Client()
+    client.write_source_table(
+        "main", "src", Table({"v": np.arange(64, dtype=np.int64)}))
+    plans = [plan(pipeline(i)) for i in range(k)]
+    barrier = threading.Barrier(k)
+    results: dict[int, object] = {}
+
+    def worker(i):
+        barrier.wait()
+        results[i] = client.run(plans[i], "main",
+                                max_publish_attempts=4 * k)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(k)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+
+    rebases = sum(len(r.rebase_reexecutions) for r in results.values())
+    reexecuted = sum(sum(r.rebase_reexecutions) for r in results.values())
+    attempts = sum(r.state.publish_attempts for r in results.values())
+    row("concurrent", f"client_disjoint_{k}", k / dt, "runs/s",
+        f"{attempts} CAS attempts; {rebases} rebases")
+    row("concurrent", "reexecuted_nodes_per_attempt",
+        reexecuted / max(attempts, 1), "nodes",
+        f"{reexecuted} node re-executions across {rebases} rebases "
+        f"(cache makes rebase O(changed subgraph))")
+    assert all(r.state.status == "committed" for r in results.values())
+    assert reexecuted == 0, \
+        "rebases past disjoint runs must not re-execute unchanged nodes"
+
+
 def main() -> None:
     print("name,metric,value,unit,notes")
     bench_concurrent_publication()
+    bench_rebase_reexecution()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,139 @@
+"""Wave-parallel + content-addressed incremental run benchmark (§8).
+
+Three claims, each asserted (the benchmark doubles as a regression
+gate — CI runs it in ``--smoke`` mode):
+
+1. **wave parallelism**: an 8-wide diamond DAG (src -> 8 mids -> sink,
+   per-node work ``WORK_S``) runs > 1.5x faster with wave scheduling
+   than sequentially (``max_workers=1``);
+2. **full cache hit**: re-running the identical plan over identical
+   sources executes 0 nodes and publishes 0 new commits;
+3. **incremental subgraph**: after touching ONE of two sources, only
+   the dependent half of the DAG re-executes.
+
+Run: ``PYTHONPATH=src python -m benchmarks.incremental_runs [--smoke]``
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import schema as S
+from repro.core.dag import Pipeline
+from repro.core.planner import plan
+from repro.core.runner import Client
+from repro.data.tables import Table, col
+
+WIDTH = 8
+
+Src = S.Schema.of("Src", x=int)
+Mid = S.Schema.of("Mid", x=int, y=int)
+Total = S.Schema.of("Total", total=int)
+
+
+def row(name, metric, value, unit, notes=""):
+    print(f"{name},{metric},{value:.6g},{unit},{notes}")
+
+
+def _add_mid(p: Pipeline, i: int, work_s: float, src: str) -> None:
+    @p.node(name=f"mid_{i}")
+    def mid(df: Src = src) -> Mid:
+        time.sleep(work_s)          # per-node work (I/O-shaped: yields)
+        return df.select([col("x"), (col("x") * (i + 1)).alias("y")])
+
+
+def diamond(work_s: float, *, two_roots: bool = False) -> Pipeline:
+    """src[,src2] -> mid_0..mid_7 (one wave) -> sink (second wave)."""
+    p = Pipeline("diamond8")
+    p.source("src", Src)
+    if two_roots:
+        p.source("src2", Src)
+    for i in range(WIDTH):
+        root = "src2" if (two_roots and i >= WIDTH // 2) else "src"
+        _add_mid(p, i, work_s, root)
+
+    @p.node()
+    def sink(a0: Mid = "mid_0", a1: Mid = "mid_1", a2: Mid = "mid_2",
+             a3: Mid = "mid_3", a4: Mid = "mid_4", a5: Mid = "mid_5",
+             a6: Mid = "mid_6", a7: Mid = "mid_7") -> Total:
+        total = sum(int(t.column("y").sum())
+                    for t in (a0, a1, a2, a3, a4, a5, a6, a7))
+        return Table({"total": np.array([total], dtype=np.int64)})
+
+    return p
+
+
+def _client(*, two_roots: bool = False) -> Client:
+    c = Client()
+    c.write_source_table("main", "src",
+                         Table({"x": np.arange(32, dtype=np.int64)}))
+    if two_roots:
+        c.write_source_table("main", "src2",
+                             Table({"x": np.arange(32, dtype=np.int64)}))
+    return c
+
+
+def _best_of(n: int, fn) -> float:
+    # min-of-n: one scheduler stall on a noisy CI runner must not fail
+    # the regression gate.
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_incremental(work_s: float) -> None:
+    pl = plan(diamond(work_s))
+
+    # 1) wave-parallel speedup over sequential execution
+    t_seq = _best_of(2, lambda: _client().run(
+        pl, "main", max_workers=1, cache=False))
+    t_par = _best_of(2, lambda: _client().run(
+        pl, "main", max_workers=WIDTH, cache=False))
+    speedup = t_seq / t_par
+    row("incremental", f"wave_speedup_{WIDTH}wide", speedup, "x",
+        f"seq {t_seq * 1e3:.1f}ms vs {WIDTH} workers {t_par * 1e3:.1f}ms")
+    assert speedup > 1.5, (
+        f"wave scheduling must beat sequential by >1.5x, got {speedup:.2f}")
+
+    # 2) content-addressed cache: second identical run executes nothing
+    client = _client()
+    r1 = client.run(pl, "main")
+    commits = len(client.catalog.log("main", limit=1000))
+    t0 = time.perf_counter()
+    r2 = client.run(pl, "main")
+    t_hit = time.perf_counter() - t0
+    row("incremental", "cached_rerun_nodes", len(r2.executed), "nodes",
+        f"first run executed {len(r1.executed)}; re-run {t_hit * 1e3:.1f}ms")
+    assert r2.executed == (), "fully-cached re-run must execute 0 nodes"
+    assert len(client.catalog.log("main", limit=1000)) == commits, \
+        "fully-cached re-run must publish no new commit"
+
+    # 3) touch one of two roots: only its half of the DAG re-executes
+    pl2 = plan(diamond(work_s, two_roots=True))
+    client = _client(two_roots=True)
+    client.run(pl2, "main")
+    client.write_source_table("main", "src2",
+                              Table({"x": np.arange(7, dtype=np.int64)}))
+    r3 = client.run(pl2, "main")
+    row("incremental", "changed_subgraph_nodes", len(r3.executed), "nodes",
+        f"{sorted(r3.executed)} after touching src2 "
+        f"({len(r3.cached)} cached)")
+    assert set(r3.executed) == {"mid_4", "mid_5", "mid_6", "mid_7",
+                                "sink"}, r3.executed
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv
+    print("name,metric,value,unit,notes")
+    # smoke keeps per-node work large enough that the sleep term (not
+    # scheduler noise) dominates the speedup measurement on CI runners.
+    bench_incremental(work_s=0.02 if smoke else 0.05)
+
+
+if __name__ == "__main__":
+    main()

@@ -186,9 +186,12 @@ def bench_pipeline_run():
     pl = plan(p)
     ms = _t(lambda: plan(p), n=20) * 1e3
     row("pipeline", "plan", ms, "ms/call", "control-plane only")
-    ms = _t(lambda: client.run(pl, "main"), n=5, warmup=1) * 1e3
+    ms = _t(lambda: client.run(pl, "main", cache=False), n=5, warmup=1) * 1e3
     row("pipeline", "run_100k_rows", ms, "ms/run",
-        "execute+validate+snapshot+txn-commit")
+        "execute+validate+snapshot+txn-commit (cache off)")
+    ms = _t(lambda: client.run(pl, "main"), n=5, warmup=1) * 1e3
+    row("pipeline", "run_100k_rows_cached", ms, "ms/run",
+        "content-addressed cache hit (validate+publish only)")
 
 
 # ---------------------------------------------------------------------------

@@ -38,7 +38,7 @@ import hashlib
 import itertools
 import threading
 import time
-from typing import Any, Callable, Iterator, Mapping
+from typing import Any, Callable, Iterator, Mapping, Sequence
 
 from repro.core.errors import (
     BranchExists,
@@ -332,6 +332,23 @@ class Catalog:
         if snap is None:
             raise CatalogError(f"table {table!r} not found at ref {ref!r}")
         return snap
+
+    def read_tables(self, ref: str, tables: Sequence[str]
+                    ) -> dict[str, str]:
+        """Resolve several tables against ONE commit (a consistent
+        multi-table snapshot read under a single lock acquisition) —
+        how the engine pins a run's source set before scheduling waves.
+        """
+        with self._lock:
+            head = self.head(ref)
+        out: dict[str, str] = {}
+        for t in tables:
+            snap = head.snapshot_of(t)
+            if snap is None:
+                raise CatalogError(
+                    f"table {t!r} not found at ref {ref!r}")
+            out[t] = snap
+        return out
 
     def tables(self, ref: str) -> Mapping[str, str]:
         return dict(self.head(ref).tables)

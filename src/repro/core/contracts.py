@@ -92,6 +92,14 @@ def _resolve_upstream(
     Resolution order: explicit lineage ("Schema.col"), then by-name match
     across inputs (the paper's "col2 is propagated as-is" convention).
     Returns (input schema name, column) or None for fresh columns.
+
+    By-name resolution across MULTIPLE inputs is legal only when every
+    candidate declares the same (dtype, nullability) — otherwise the
+    composition verdict would depend on input dict ordering (binding
+    ``x`` to ``A(x: int32)`` vs ``B(x: int64)`` flips widening into
+    narrowing). Ambiguous candidates raise
+    :class:`ContractCompositionError`; declare explicit lineage
+    (``col = A.x``) to disambiguate.
     """
     if col.inherited_from is not None:
         sname, cname = col.inherited_from.rsplit(".", 1)
@@ -103,10 +111,20 @@ def _resolve_upstream(
             f"column {col.name!r} declares lineage {col.inherited_from!r} "
             f"but no input provides it (inputs: "
             f"{[s.__name__ for s in inputs.values()]})")
-    for iname, ischema in inputs.items():
-        if col.name in ischema.columns():
-            return iname, ischema.columns()[col.name]
-    return None
+    candidates = [(iname, ischema.columns()[col.name])
+                  for iname, ischema in inputs.items()
+                  if col.name in ischema.columns()]
+    if not candidates:
+        return None
+    decls = {(c.dtype, c.nullable) for _, c in candidates}
+    if len(decls) > 1:
+        raise ContractCompositionError(
+            f"column {col.name!r} resolves by name against multiple "
+            f"inputs with conflicting declarations "
+            f"({', '.join(sorted(f'{i}: {c.dtype.name}' + ('?' if c.nullable else '') for i, c in candidates))}): "
+            f"declare explicit lineage (e.g. `{col.name} = "
+            f"SchemaName.{col.name}`) to disambiguate")
+    return candidates[0]
 
 
 def check_edge(

@@ -35,6 +35,109 @@ from repro.data.tables import Expr, Table
 __all__ = ["Node", "PythonNode", "DeclarativeNode", "Pipeline"]
 
 
+def _code_fingerprint(co) -> str:
+    """Hash a code object: bytecode + data consts + referenced names,
+    recursing into nested code objects (lambdas, comprehensions)."""
+    h = hashlib.sha256()
+
+    def fold(c):
+        h.update(c.co_code)
+        consts = tuple(x for x in c.co_consts if not hasattr(x, "co_code"))
+        h.update(repr((consts, c.co_names)).encode())
+        for x in c.co_consts:
+            if hasattr(x, "co_code"):
+                fold(x)
+
+    fold(co)
+    return h.hexdigest()[:16]
+
+
+def _names_read(co) -> set[str]:
+    """All global names a code object reads, including inside nested
+    code objects (a lambda's global read is still this function's)."""
+    names = set(co.co_names)
+    for c in co.co_consts:
+        if hasattr(c, "co_code"):
+            names |= _names_read(c)
+    return names
+
+
+def _fingerprint_function(fn, seen: set[int]) -> str | None:
+    """Fingerprint a Python function as cache-key material: its code
+    (recursively, see :func:`_code_fingerprint`), its captured closure
+    cells, and every module-global *data* value its bytecode reads —
+    referenced helper functions are fingerprinted the same way, so a
+    constant or global change inside a helper moves the key too.
+    ``None`` = not faithfully fingerprintable (caller must not cache).
+    """
+    if id(fn) in seen:                 # recursion cycle: code already
+        return f"fnrec:{fn.__qualname__}"  # folded at first visit
+    seen.add(id(fn))
+    parts = [f"code={_code_fingerprint(fn.__code__)}"]
+    if fn.__closure__:
+        for var, cell in zip(fn.__code__.co_freevars, fn.__closure__):
+            try:
+                v = cell.cell_contents
+            except ValueError:          # pragma: no cover - empty cell
+                parts.append(f"{var}=<unbound>")
+                continue
+            fp = _fingerprint_value(v, seen)
+            if fp is None:
+                return None
+            parts.append(f"{var}={fp}")
+    for name in sorted(_names_read(fn.__code__)):
+        if name not in fn.__globals__:
+            continue                    # builtin or pure attribute name
+        v = fn.__globals__[name]
+        if isinstance(v, type) or inspect.ismodule(v):
+            continue                    # import-stable (DESIGN.md §8)
+        fp = _fingerprint_value(v, seen)
+        if fp is None:
+            return None                 # mutable global data read
+        parts.append(f"g:{name}={fp}")
+    return "fn(" + ",".join(parts) + ")"
+
+
+def _fingerprint_value(v: Any, seen: set[int] | None = None) -> str | None:
+    """A stable fingerprint for a runtime value, or None.
+
+    Only values whose ``repr`` is total and value-determined qualify:
+    scalars, strings, and containers thereof. Python functions are
+    fingerprinted structurally (:func:`_fingerprint_function`); C-level
+    builtins by qualified name. Everything else — arbitrary objects
+    (default id-based repr), numpy arrays (repr truncates), open
+    handles — returns None: such values can mutate between runs without
+    changing any printable identity, so a cache key built from them
+    could serve stale outputs.
+    """
+    seen = seen if seen is not None else set()
+    if v is None or isinstance(v, (bool, int, float, complex,
+                                   str, bytes)):
+        return repr(v)
+    if isinstance(v, (tuple, list)):
+        parts = [_fingerprint_value(x, seen) for x in v]
+        if any(p is None for p in parts):
+            return None
+        return f"{type(v).__name__}({','.join(parts)})"
+    if isinstance(v, (set, frozenset)):
+        parts = [_fingerprint_value(x, seen) for x in v]
+        if any(p is None for p in parts):
+            return None
+        return f"{type(v).__name__}({','.join(sorted(parts))})"
+    if isinstance(v, dict):
+        items = [(_fingerprint_value(k, seen), _fingerprint_value(x, seen))
+                 for k, x in v.items()]
+        if any(k is None or x is None for k, x in items):
+            return None
+        return "dict(" + ",".join(f"{k}:{x}"
+                                  for k, x in sorted(items)) + ")"
+    if inspect.isfunction(v):
+        return _fingerprint_function(v, seen)
+    if inspect.isbuiltin(v):            # C function: code is the binary
+        return f"builtin:{getattr(v, '__module__', '?')}.{v.__qualname__}"
+    return None
+
+
 @dataclasses.dataclass(frozen=True)
 class Node:
     """Common node metadata."""
@@ -52,6 +155,19 @@ class Node:
 
     def source(self) -> str:
         return f"<node {self.name}>"
+
+    def cache_material(self) -> str | None:
+        """Static half of the engine's content-addressed cache key: the
+        transformation source, the declared output contract, and the
+        declared casts. The dynamic half (input snapshot keys) is bound
+        by :func:`repro.core.engine.cache_key` at execution time. The
+        node *name* is deliberately excluded — two nodes computing the
+        same function over the same inputs share one cache entry.
+        ``None`` marks the node as not content-addressable (the engine
+        always executes it)."""
+        casts = ";".join(f"{c.column}->{c.to.name}" for c in self.casts)
+        return (f"{self.source()}|"
+                f"{self.output_schema.fingerprint()}|{casts}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +188,26 @@ class PythonNode(Node):
             return inspect.getsource(self.fn)
         except (OSError, TypeError):
             return f"<python {self.name}>"
+
+    def cache_material(self) -> str | None:
+        # Source text alone under-identifies a Python function: two
+        # closures over different values share identical text, and
+        # inspect.getsource can fail entirely (exec'd/REPL-defined
+        # functions), collapsing source() to a name-only fallback.
+        # _fingerprint_function folds in the recursive bytecode+consts
+        # fingerprint, the captured closure cells, and every
+        # module-global data value the bytecode (incl. nested lambdas
+        # and referenced helper functions) reads. Anything that cannot
+        # be fingerprinted faithfully — arbitrary objects, numpy arrays
+        # (whose repr truncates) — makes the node UNCACHEABLE rather
+        # than risking a stale hit; modules and classes are assumed
+        # import-stable (DESIGN.md §8).
+        if self.fn is None:     # pragma: no cover - defensive
+            return None
+        fp = _fingerprint_function(self.fn, set())
+        if fp is None:
+            return None
+        return super().cache_material() + "|" + fp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +231,10 @@ class DeclarativeNode(Node):
         object.__setattr__(self, "inspectable", True)
         # select/filter/inner-join cannot introduce nulls into inherited
         # columns -> null-preserving (Appendix A condition (2)+(3)).
+        # This claim assumes SQL join semantics: Table.join drops
+        # null-keyed rows (NULL matches nothing), so an inner join only
+        # ever *selects* existing rows. tests/test_engine.py keeps the
+        # elided checks honest against the physical implementation.
         object.__setattr__(self, "null_preserving", True)
 
     def run(self, tables: Mapping[str, Table]) -> Table:
@@ -109,12 +249,31 @@ class DeclarativeNode(Node):
         return t
 
     def source(self) -> str:
-        parts = [f"select {[e.output_name() for e in self.exprs]}"]
+        # describe() (structural, alias-surviving) rather than
+        # output_name(): `lit(0.25) AS x` and `lit(0.5) AS x` must not
+        # collide in the content-addressed cache.
+        parts = [f"select {[e.describe() for e in self.exprs]}"]
         if self.filter_expr is not None:
-            parts.append(f"filter {self.filter_expr.output_name()}")
+            parts.append(f"filter {self.filter_expr.describe()}")
         if self.join_with:
             parts.append(f"join {self.join_with} on {list(self.join_on)}")
-        return f"<declarative {self.name}: {'; '.join(parts)}>"
+        # the node name is intentionally absent (Pipeline.code_hash mixes
+        # it in separately): cache keys identify the *function*, not the
+        # output table it happens to be bound to.
+        return f"<declarative: {'; '.join(parts)}>"
+
+    def cache_material(self) -> str | None:
+        # source() describes exprs structurally — but only expressions
+        # built through the library constructors (col/lit/operators/
+        # arrow_cast) carry a faithful structural description. A
+        # hand-rolled Expr(fn, name) is opaque: two different fns under
+        # one name would collide, so such nodes are uncacheable.
+        exprs = list(self.exprs)
+        if self.filter_expr is not None:
+            exprs.append(self.filter_expr)
+        if any(not getattr(e, "_structural", False) for e in exprs):
+            return None
+        return super().cache_material()
 
 
 class Pipeline:

@@ -103,5 +103,28 @@ class PlanError(ReproError):
     moment = Moment.CONTROL_PLANE
 
 
+class ExecutionError(ReproError):
+    """A node failed during wave execution (DESIGN.md §8).
+
+    Raised by the engine after the failing node's *whole wave* has
+    drained: ``partial`` maps every output that validated before the
+    failure (earlier waves + validated wave siblings, in plan order) to
+    its snapshot key, so the runner can flush exactly the validated
+    outputs to the ABORTED branch — deterministically, regardless of
+    sibling timing. ``cause`` is the first failure in plan order.
+    """
+
+    moment = Moment.WORKER
+
+    def __init__(self, msg: str, cause: BaseException | None = None,
+                 partial: dict | None = None,
+                 executed: tuple = (), cached: tuple = ()):
+        super().__init__(msg)
+        self.cause = cause
+        self.partial = dict(partial or {})
+        self.executed = tuple(executed)
+        self.cached = tuple(cached)
+
+
 class QualityError(ContractRuntimeError):
     """A data-quality verifier (expectation) failed on the worker."""

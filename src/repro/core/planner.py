@@ -36,6 +36,7 @@ class PlanStep:
     node: Node
     report: EdgeReport
     elided_null_checks: frozenset[str]  # statically discharged (App. A)
+    wave: int = 0                       # dependency level (DESIGN.md §8)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,12 +50,34 @@ class Plan:
     def output_tables(self) -> tuple[str, ...]:
         return tuple(s.node.name for s in self.steps)
 
+    @property
+    def waves(self) -> tuple[tuple[PlanStep, ...], ...]:
+        """Steps grouped by dependency level (level scheduling): wave
+        ``w`` holds every node whose longest path from a source is ``w``.
+        All nodes of a wave depend only on sources and earlier waves, so
+        a wave's nodes may execute concurrently; steps within a wave keep
+        plan order, making wave execution deterministic."""
+        grouped: dict[int, list[PlanStep]] = {}
+        for s in self.steps:
+            grouped.setdefault(s.wave, []).append(s)
+        return tuple(tuple(grouped[w]) for w in sorted(grouped))
+
+    def source_tables(self) -> tuple[str, ...]:
+        """Source tables the plan's nodes actually read."""
+        outputs = set(self.output_tables)
+        seen: list[str] = []
+        for s in self.steps:
+            for t in s.node.inputs.values():
+                if t not in outputs and t not in seen:
+                    seen.append(t)
+        return tuple(seen)
+
     def describe(self) -> str:
         lines = [f"plan {self.pipeline_name} (code={self.code_hash})"]
         for s in self.steps:
             el = (f" [elided null-checks: {sorted(s.elided_null_checks)}]"
                   if s.elided_null_checks else "")
-            lines.append(f"  {s.report.describe()}{el}")
+            lines.append(f"  [wave {s.wave}] {s.report.describe()}{el}")
         return "\n".join(lines)
 
 
@@ -70,6 +93,7 @@ def plan(pipeline: Pipeline) -> Plan:
     published: dict[str, type[S.Schema]] = dict(pipeline.source_schemas)
 
     steps: list[PlanStep] = []
+    node_wave: dict[str, int] = {}
     for node in order:
         # 2. contract composition: inputs must exist with known schemas.
         input_schemas: dict[str, type[S.Schema]] = {}
@@ -94,8 +118,13 @@ def plan(pipeline: Pipeline) -> Plan:
             input_schemas, node.output_schema,
             inspectable=node.inspectable,
             null_preserving=node.null_preserving)
+        # level scheduling: a node runs one wave after its deepest
+        # upstream node; source-only nodes form wave 0 (DESIGN.md §8).
+        wave = max((node_wave[t] + 1 for t in node.inputs.values()
+                    if t in node_wave), default=0)
+        node_wave[node.name] = wave
         steps.append(PlanStep(node=node, report=report,
-                              elided_null_checks=elided))
+                              elided_null_checks=elided, wave=wave))
         published[node.name] = node.output_schema
 
     return Plan(pipeline_name=pipeline.name,

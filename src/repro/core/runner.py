@@ -2,14 +2,19 @@
 
 Paper Figure 1 moments (2)→(3): the control plane hands a :class:`Plan`
 to a worker; the worker reads source tables *from the pinned start
-commit* (snapshot reads), executes nodes, validates each output against
-its declared schema **before** persisting (moment 3), then writes ALL of
-the run's outputs to the transactional branch as ONE multi-table atomic
-commit, registers user verifiers on the transaction (step 3 of §3.3),
-and publishes via the CAS + rebase-and-revalidate protocol — all outputs
-of the run or none, and ``log()`` shows one commit per run, not one per
-node. If the run fails mid-DAG, the outputs computed so far are flushed
-to the (then ABORTED) branch so they remain queryable for triage.
+commit* (snapshot reads), executes the plan's dependency **waves**
+concurrently through :class:`repro.core.engine.PlanExecutor` — skipping
+any node whose content-addressed cache entry already names its output —
+validates each output against its declared schema **before** persisting
+(moment 3), then writes the run's outputs to the transactional branch
+as ONE multi-table atomic commit, registers user verifiers on the
+transaction (step 3 of §3.3), and publishes via the CAS +
+rebase-and-revalidate protocol — all outputs of the run or none, and
+``log()`` shows one commit per run, not one per node. On a publication
+rebase the engine re-executes ONLY the nodes whose input snapshots
+moved (DESIGN.md §8). If the run fails mid-DAG, exactly the validated
+outputs are flushed to the (then ABORTED) branch so they remain
+queryable for triage.
 """
 from __future__ import annotations
 
@@ -17,8 +22,8 @@ import dataclasses
 from typing import Callable, Mapping, Sequence
 
 from repro.core.catalog import Catalog
-from repro.core.contracts import validate_table
-from repro.core.errors import TransactionAborted
+from repro.core.engine import NodeCache, PlanExecutor
+from repro.core.errors import ExecutionError, TransactionAborted
 from repro.core.planner import Plan
 from repro.core.quality import Verifier
 from repro.core.transactions import RunRegistry, RunState, TransactionalRun
@@ -31,6 +36,11 @@ __all__ = ["RunResult", "Client"]
 class RunResult:
     state: RunState
     tables: Mapping[str, str]  # table -> snapshot key written by this run
+    executed: tuple[str, ...] = ()  # nodes actually run (cache misses)
+    cached: tuple[str, ...] = ()    # nodes satisfied from the cache
+    # nodes re-executed per publication rebase (empty: published on the
+    # first CAS attempt). All zeros = every rebase was fully incremental.
+    rebase_reexecutions: tuple[int, ...] = ()
 
 
 class Client:
@@ -45,6 +55,9 @@ class Client:
         self.catalog = catalog if catalog is not None else Catalog()
         self.registry = registry if registry is not None else RunRegistry()
         self.store = self.catalog.store
+        # shared across this client's runs; persisted via store refs so
+        # clients over one (file-backed) store share entries too.
+        self.node_cache = NodeCache(self.store)
 
     # -- Git-for-data surface (Listing 6) --------------------------------
     def create_branch(self, name: str, from_ref: str = "main", **kw):
@@ -87,16 +100,25 @@ class Client:
             verifiers: Mapping[str, Sequence[Verifier]] | None = None,
             dry_run: bool = False,
             fail_after: str | None = None,
-            max_publish_attempts: int | None = None) -> RunResult:
+            max_publish_attempts: int | None = None,
+            max_workers: int | None = None,
+            cache: bool = True) -> RunResult:
         """Execute ``plan`` transactionally against branch ``ref``.
 
-        ``verifiers`` maps table name -> quality checks run at step (3);
-        they are registered on the transaction so publication can re-run
-        them against a rebased state (DESIGN.md §7).
-        ``fail_after`` (testing hook) injects a failure after the named
-        node completes, to exercise the abort path deterministically.
-        ``max_publish_attempts`` bounds the CAS retry loop under heavy
-        concurrent publication (default: TransactionalRun's).
+        Waves of independent nodes run concurrently; nodes whose
+        content-addressed cache key already names an output snapshot are
+        skipped (their snapshot is reused after re-validating the
+        contract). ``verifiers`` maps table name -> quality checks run
+        at step (3); they are registered on the transaction so
+        publication can re-run them against a rebased state (DESIGN.md
+        §7), and a rebase additionally re-executes the nodes whose input
+        snapshots moved (DESIGN.md §8). ``fail_after`` (testing hook)
+        injects a failure after the named node completes, to exercise
+        the abort path deterministically. ``max_publish_attempts``
+        bounds the CAS retry loop under heavy concurrent publication
+        (default: TransactionalRun's). ``max_workers`` caps wave
+        concurrency (1 = sequential); ``cache=False`` forces every node
+        to execute.
         """
         if dry_run:
             # plan is already validated; nothing to execute.
@@ -107,63 +129,88 @@ class Client:
                 tables={})
 
         verifiers = dict(verifiers or {})
-        written: dict[str, str] = {}
         txn_kw = {}
         if max_publish_attempts is not None:
             txn_kw["max_publish_attempts"] = max_publish_attempts
         txn = TransactionalRun(self.catalog, ref, code=plan.code_hash,
                                registry=self.registry, **txn_kw)
         txn.begin()
-        # snapshot reads: sources resolve against the txn branch head,
-        # which was forked from the start commit — reads are stable even
-        # if `ref` moves concurrently.
-        cache: dict[str, Table] = {}
+        engine = PlanExecutor(plan, self.store,
+                              cache=self.node_cache if cache else None,
+                              max_workers=max_workers)
+        source_names = plan.source_tables()
 
-        def load(table: str) -> Table:
-            if table not in cache:
-                snap = self.catalog.read_table(txn.branch, table)
-                cache[table] = Table.from_blobs(self.store, snap)
-            return cache[table]
+        def branch_sources() -> Callable[[str], str]:
+            # snapshot reads: ALL sources resolve against one commit of
+            # the txn branch (forked from the start commit, rebased only
+            # by this run) — a consistent read set even if `ref` moves.
+            pinned = self.catalog.read_tables(txn.branch, source_names)
+            return pinned.__getitem__
 
+        written: dict[str, str] = {}
+        rebase_reexecutions: list[int] = []
         try:
-            for step in plan.steps:
-                node = step.node
-                inputs = {t: load(t) for t in node.inputs.values()}
-                out = node.run(inputs)
-                # moment (3): validate physical data BEFORE persisting.
-                validate_table(out, node.output_schema,
-                               elide=step.elided_null_checks,
-                               name=node.name)
-                snap = out.to_blobs(self.store)
-                written[node.name] = snap
-                cache[node.name] = out
-                if fail_after == node.name:
-                    raise RuntimeError(
-                        f"injected failure after node {node.name!r}")
-            # ONE atomic commit for the whole DAG (log reflects runs).
+            outcome = engine.execute(branch_sources(),
+                                     fail_after=fail_after)
+            written.update(outcome.snapshots)
+            # ONE atomic commit for the whole DAG (log reflects runs) —
+            # writing only snapshots that differ from the branch state,
+            # so a fully-cached re-run publishes no new commit at all.
+            current = self.catalog.tables(txn.branch)
+            changed = {t: s for t, s in written.items()
+                       if current.get(t) != s}
             txn.write_tables(
-                written,
+                changed,
                 message=f"run {plan.pipeline_name} "
                         f"({len(written)} tables)")
             # step (3): quality verifiers on B', re-run on rebase.
             for table, checks in verifiers.items():
                 if table in written:
                     txn.verify(self._table_verifier(table, checks))
+
+            def reexecute(read: Callable[[str], str],
+                          write_tables: Callable[..., None]) -> None:
+                # after a rebase: re-derive from the rebased branch.
+                # Unchanged inputs hit the cache (0 node executions);
+                # only the changed subgraph runs. Write back only moved
+                # snapshots, keeping the branch delta minimal.
+                oc = engine.execute(branch_sources())
+                cur = self.catalog.tables(txn.branch)
+                delta = {t: s for t, s in oc.snapshots.items()
+                         if cur.get(t) != s}
+                if delta:
+                    write_tables(
+                        delta,
+                        message=f"recompute {sorted(delta)} after rebase")
+                written.update(oc.snapshots)
+                rebase_reexecutions.append(len(oc.executed))
+
+            txn.set_executor(reexecute)
             txn.commit()
-        except TransactionAborted:
-            raise
-        except Exception as e:
-            # flush the outputs computed so far onto the branch so the
+        except ExecutionError as e:
+            # flush EXACTLY the validated outputs (earlier waves + the
+            # failing wave's validated siblings, in plan order) so the
             # ABORTED branch holds them for triage (§3.3 "preserved").
-            if written:
+            if e.partial:
                 try:
                     txn.write_tables(
-                        written, message="partial outputs before abort")
+                        e.partial, message="partial outputs before abort")
                 except Exception:      # pragma: no cover - abort anyway
                     pass
+            cause = e.cause or e
+            txn.abort(cause)
+            raise TransactionAborted(
+                f"run {txn.run_id} aborted: {cause}", branch=txn.branch,
+                cause=cause) from e
+        except TransactionAborted:
+            raise
+        except Exception as e:         # pragma: no cover - safety net
             txn.abort(e)
             raise TransactionAborted(
                 f"run {txn.run_id} aborted: {e}", branch=txn.branch,
                 cause=e) from e
         return RunResult(state=self.registry.get_run(txn.run_id),
-                         tables=written)
+                         tables=written,
+                         executed=outcome.executed,
+                         cached=outcome.cached,
+                         rebase_reexecutions=tuple(rebase_reexecutions))

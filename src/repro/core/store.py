@@ -39,7 +39,15 @@ def content_hash(data: bytes) -> str:
 
 
 class ObjectStore:
-    """Abstract immutable blob store keyed by content hash."""
+    """Abstract immutable blob store keyed by content hash.
+
+    Besides immutable blobs, a store exposes a small *named-ref* surface
+    (``put_ref``/``get_ref``): mutable name → blob-key pointers, the
+    only mutable state in the physical layer. The engine's
+    content-addressed function cache persists through it (a cache entry
+    is ``fncache/<cache-key> -> output snapshot key``), so a
+    :class:`FileStore`-backed cache survives process restarts.
+    """
 
     def put(self, data: bytes) -> str:
         raise NotImplementedError
@@ -51,6 +59,13 @@ class ObjectStore:
         raise NotImplementedError
 
     def keys(self) -> Iterator[str]:
+        raise NotImplementedError
+
+    # -- named refs (mutable pointers into the immutable blob space) ---
+    def put_ref(self, name: str, key: str) -> None:
+        raise NotImplementedError
+
+    def get_ref(self, name: str) -> str | None:
         raise NotImplementedError
 
     # -- structured helpers -------------------------------------------
@@ -93,6 +108,7 @@ class MemoryStore(ObjectStore):
 
     def __init__(self):
         self._blobs: dict[str, bytes] = {}
+        self._refs: dict[str, str] = {}
         self._lock = threading.Lock()
 
     def put(self, data: bytes) -> str:
@@ -116,6 +132,14 @@ class MemoryStore(ObjectStore):
     def keys(self) -> Iterator[str]:
         with self._lock:
             return iter(list(self._blobs))
+
+    def put_ref(self, name: str, key: str) -> None:
+        with self._lock:
+            self._refs[name] = key
+
+    def get_ref(self, name: str) -> str | None:
+        with self._lock:
+            return self._refs.get(name)
 
     def __len__(self) -> int:
         with self._lock:
@@ -168,6 +192,32 @@ class FileStore(ObjectStore):
         for d in os.listdir(objdir):
             for k in os.listdir(os.path.join(objdir, d)):
                 yield k
+
+    def _ref_path(self, name: str) -> str:
+        parts = name.split("/")
+        if not all(p and all(c.isalnum() or c in "._-" for c in p)
+                   and not p.startswith(".") for p in parts):
+            raise ValueError(f"invalid ref name {name!r}")
+        return os.path.join(self.root, "refs", *parts)
+
+    def put_ref(self, name: str, key: str) -> None:
+        path = self._ref_path(name)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path))
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(key)
+            os.replace(tmp, path)  # atomic, like blob put
+        finally:
+            if os.path.exists(tmp):  # pragma: no cover - crash path
+                os.unlink(tmp)
+
+    def get_ref(self, name: str) -> str | None:
+        path = self._ref_path(name)
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return f.read().strip()
 
 
 # ---------------------------------------------------------------------------

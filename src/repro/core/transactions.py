@@ -133,6 +133,9 @@ class TransactionalRun:
         self._target_head: str | None = None   # CAS token for publication
         self._verifiers: list[Callable[[Callable[[str], str]], Any]] = []
         self._verifier_heads: list[str | None] = []  # head each fn last saw
+        self._executor: Callable[
+            [Callable[[str], str], Callable[..., Any]], Any] | None = None
+        self._needs_reexecution = False
         self._status = "created"
         self._started_at = 0.0
 
@@ -202,9 +205,38 @@ class TransactionalRun:
         """Branch head each registered verifier last validated."""
         return tuple(self._verifier_heads)
 
+    def set_executor(self, fn: Callable[
+            [Callable[[str], str], Callable[..., Any]], Any]) -> None:
+        """Register a re-execution hook run after every rebase.
+
+        ``fn(read, write_tables)`` re-derives the run's outputs from the
+        *rebased* branch state — with the engine's content-addressed
+        cache, only nodes whose input snapshots actually moved execute
+        (O(changed subgraph), not O(full DAG)) — and writes back only
+        the snapshots that changed. It runs in :meth:`_revalidate`
+        BEFORE the verifiers, so the verifier set always validates the
+        recomputed state that will be published. Without it, a rebase
+        past a concurrent update of a *source* table would publish
+        outputs computed from the pre-rebase inputs.
+        """
+        self._require_running()
+        self._executor = fn
+
     def _revalidate(self) -> str:
-        """Re-run EVERY registered verifier against the current branch
-        state; returns the branch head they all validated."""
+        """Re-run the registered executor (if a rebase made inputs
+        stale) and then EVERY registered verifier against the current
+        branch state; returns the branch head they all validated."""
+        if self._executor is not None and self._needs_reexecution:
+            try:
+                self._executor(self.read_table, self.write_tables)
+            except TransactionAborted:
+                raise
+            except Exception as e:
+                self.abort(e)
+                raise TransactionAborted(
+                    f"re-execution after rebase failed: {e}",
+                    branch=self.branch, cause=e) from e
+        self._needs_reexecution = False
         observed = self.catalog.head(self.branch).id
         for fn in self._verifiers:
             try:
@@ -227,10 +259,13 @@ class TransactionalRun:
             self.publish_attempts = attempt
             # Never publish state the full verifier set did not validate:
             # if any verifier's observation is stale (a write or a rebase
-            # happened after it ran), re-run them all first.
+            # happened after it ran), or a rebase left the run's outputs
+            # possibly computed from moved inputs, re-derive and re-run
+            # them all first.
             branch_head = self.catalog.head(self.branch).id
-            if self._verifiers and any(h != branch_head
-                                       for h in self._verifier_heads):
+            if self._needs_reexecution or (
+                    self._verifiers and any(h != branch_head
+                                            for h in self._verifier_heads)):
                 branch_head = self._revalidate()
             try:
                 merged = self.catalog.merge(
@@ -255,6 +290,9 @@ class TransactionalRun:
                     self.catalog.rebase(self.branch, new_head,
                                         run_id=self.run_id, _system=True)
                     self._target_head = new_head
+                    # the rebase may have moved this run's INPUT tables:
+                    # the executor must re-derive before revalidation.
+                    self._needs_reexecution = True
                 except Exception as e2:
                     self.abort(e2)
                     raise TransactionAborted(

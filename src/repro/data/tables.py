@@ -46,12 +46,33 @@ _ARROW_TO_LOGICAL = {
 }
 
 
+# Sentinel marking a NULL group key in group_by_sum: SQL GROUP BY puts
+# all NULL keys in one group (unlike join equality, which matches none).
+_NULL = object()
+
+
+def _canon_str_array(arr: np.ndarray) -> np.ndarray:
+    """Canonical representation for string columns: object dtype holding
+    plain ``str`` / ``None``. Numpy fixed-width ``U``/``S`` arrays (from
+    list literals, ``lit``, ``np.full``) are normalized here so the
+    logical dtype is always ``str`` and fingerprints/snapshots do not
+    depend on the construction path."""
+    if arr.dtype.kind == "S":
+        arr = np.char.decode(arr, "utf-8")
+    out = np.empty(len(arr), dtype=object)
+    out[:] = arr.tolist()       # C-level conversion to plain str
+    return out
+
+
 @dataclasses.dataclass(frozen=True)
 class _ColumnData:
     values: np.ndarray
     valid: np.ndarray | None = None  # None = no nulls
 
     def __post_init__(self):
+        if self.values.dtype.kind in ("U", "S"):
+            object.__setattr__(self, "values",
+                               _canon_str_array(self.values))
         if self.valid is not None and not self.valid.all():
             return
         if self.valid is not None:
@@ -108,6 +129,9 @@ class Table:
                 else np.ones(len(c.values), dtype=bool))
 
     def logical_dtype(self, name: str) -> str:
+        # numpy U/S string dtypes never reach this point: _ColumnData
+        # canonicalizes them to object arrays at construction, and
+        # object maps to logical `str` below.
         arr = self._data[name].values
         key = str(arr.dtype)
         if key in _NP_TO_LOGICAL:
@@ -179,7 +203,7 @@ class Table:
             valid = (store.get_array(m["valid"])
                      if m["valid"] is not None else None)
             if m["kind"] == "str":
-                vals = np.array(list(vals), dtype=object)
+                vals = _canon_str_array(vals)
                 if valid is not None:   # true roundtrip: restore None
                     vals[~valid.astype(bool)] = None
             elif m["kind"] == "datetime":
@@ -207,17 +231,34 @@ class Table:
             for n, c in self._data.items()}
         return Table(_data=data)
 
+    def _key_validity(self, on: Sequence[str]) -> np.ndarray:
+        """Rows whose every join key is non-NULL (validity mask AND no
+        ``None`` payload in object columns)."""
+        ok = np.ones(len(self), dtype=bool)
+        for k in on:
+            ok &= self.validity(k)
+            vals = self.column(k)
+            if vals.dtype == object:
+                ok &= np.array([v is not None for v in vals], dtype=bool)
+        return ok
+
     def join(self, other: "Table", on: Sequence[str],
              how: str = "inner") -> "Table":
         if how != "inner":
             raise NotImplementedError("only inner joins are supported")
+        # SQL semantics: NULL join keys match nothing (NULL = NULL is not
+        # true), so null-keyed rows are dropped from both sides.
+        lok, rok = self._key_validity(on), other._key_validity(on)
         lkeys = list(zip(*(self.column(k) for k in on)))
         rindex: dict[tuple, list[int]] = {}
         rkeys = list(zip(*(other.column(k) for k in on)))
         for i, k in enumerate(rkeys):
-            rindex.setdefault(k, []).append(i)
+            if rok[i]:
+                rindex.setdefault(k, []).append(i)
         li, ri = [], []
         for i, k in enumerate(lkeys):
+            if not lok[i]:
+                continue
             for j in rindex.get(k, ()):
                 li.append(i)
                 ri.append(j)
@@ -237,26 +278,43 @@ class Table:
 
     def group_by_sum(self, keys: Sequence[str], value: str,
                      out: str | None = None) -> "Table":
-        """GROUP BY keys, SUM(value) — the paper's Listing 1 aggregate."""
+        """GROUP BY keys, SUM(value) — the paper's Listing 1 aggregate.
+
+        SQL aggregate semantics over nullable columns: NULL values are
+        skipped by SUM (a group whose values are all NULL sums to NULL),
+        and NULL keys form their own single group — SQL ``GROUP BY``
+        treats all NULLs as one group, unlike join equality.
+        """
         out = out or f"_S"
         kcols = [self.column(k) for k in keys]
+        kvalid = [self.validity(k) for k in keys]
         vals = self.column(value)
+        vvalid = self.validity(value)
         groups: dict[tuple, Any] = {}
         order: list[tuple] = []
         for i in range(len(self)):
-            k = tuple(c[i] for c in kcols)
+            k = tuple(c[i] if kvalid[j][i] and c[i] is not None else _NULL
+                      for j, c in enumerate(kcols))
             if k not in groups:
-                groups[k] = vals[i]
+                groups[k] = None          # SUM over no non-NULL values
                 order.append(k)
-            else:
-                groups[k] = groups[k] + vals[i]
+            v = vals[i]
+            if vvalid[i] and v is not None:
+                groups[k] = v if groups[k] is None else groups[k] + v
         data: dict[str, _ColumnData] = {}
         for j, kname in enumerate(keys):
-            colvals = np.array([k[j] for k in order],
-                               dtype=self.column(kname).dtype)
-            data[kname] = _ColumnData(colvals)
-        data[out] = _ColumnData(np.array([groups[k] for k in order],
-                                         dtype=vals.dtype))
+            dt = kcols[j].dtype
+            fill = None if dt == object else np.zeros(1, dtype=dt)[0]
+            colvals = np.array([fill if k[j] is _NULL else k[j]
+                                for k in order], dtype=dt)
+            mask = np.array([k[j] is not _NULL for k in order], dtype=bool)
+            data[kname] = _ColumnData(colvals, mask)
+        vdt = vals.dtype
+        vfill = None if vdt == object else np.zeros(1, dtype=vdt)[0]
+        data[out] = _ColumnData(
+            np.array([vfill if groups[k] is None else groups[k]
+                      for k in order], dtype=vdt),
+            np.array([groups[k] is not None for k in order], dtype=bool))
         return Table(_data=data)
 
     def concat(self, other: "Table") -> "Table":
@@ -284,9 +342,19 @@ class Table:
 
 class Expr:
     def __init__(self, fn: Callable[[Table], tuple[np.ndarray, np.ndarray | None]],
-                 name: str):
+                 name: str, desc: str | None = None, *,
+                 _structural: bool = False):
         self._fn = fn
         self._name = name
+        # structural description: unlike the output name it survives
+        # alias(), so two expressions computing different values never
+        # describe identically (content-addressed cache keys rely on it).
+        self._desc = desc if desc is not None else name
+        # set only by the library constructors (col/lit/operators/
+        # arrow_cast): marks _desc as a faithful description of the
+        # computation. Hand-rolled Expr(fn, name) stays False, which
+        # makes any declarative node using it uncacheable (dag.py).
+        self._structural = _structural
 
     def evaluate(self, t: Table) -> tuple[np.ndarray, np.ndarray | None]:
         return self._fn(t)
@@ -294,8 +362,14 @@ class Expr:
     def output_name(self) -> str:
         return self._name
 
+    def describe(self) -> str:
+        if self._desc == self._name:
+            return self._desc
+        return f"{self._desc} AS {self._name}"
+
     def alias(self, name: str) -> "Expr":
-        return Expr(self._fn, name)
+        return Expr(self._fn, name, self._desc,
+                    _structural=self._structural)
 
     def is_not_null(self) -> "Expr":
         def fn(t: Table):
@@ -304,7 +378,9 @@ class Expr:
             out = (valid.copy() if valid is not None
                    else np.ones(n, dtype=bool))
             return out, None
-        return Expr(fn, f"{self._name}_is_not_null")
+        return Expr(fn, f"{self._name}_is_not_null",
+                    f"is_not_null({self._desc})",
+                    _structural=self._structural)
 
     def _binop(self, other: Any, op, sym: str) -> "Expr":
         other_e = other if isinstance(other, Expr) else lit(other)
@@ -320,7 +396,9 @@ class Expr:
                 ra = rva if rva is not None else np.ones(len(t), bool)
                 valid = la & ra
             return vals, valid
-        return Expr(fn, f"({self._name}{sym}{other_e._name})")
+        return Expr(fn, f"({self._name}{sym}{other_e._name})",
+                    f"({self._desc}{sym}{other_e._desc})",
+                    _structural=self._structural and other_e._structural)
 
     def __add__(self, o): return self._binop(o, np.add, "+")
     def __sub__(self, o): return self._binop(o, np.subtract, "-")
@@ -340,7 +418,7 @@ def col(name: str) -> Expr:
     def fn(t: Table):
         c = t._data[name]
         return c.values, c.valid
-    return Expr(fn, name)
+    return Expr(fn, name, _structural=True)
 
 
 def lit(value: Any) -> Expr:
@@ -349,9 +427,12 @@ def lit(value: Any) -> Expr:
         if value is None:
             return (np.zeros(n, dtype=object),
                     np.zeros(n, dtype=bool))
-        arr = np.full(n, value)
+        # canonical string representation: object dtype, never
+        # fixed-width <U*> (which logical_dtype could not map)
+        dtype = object if isinstance(value, (str, bytes)) else None
+        arr = np.full(n, value, dtype=dtype)
         return arr, None
-    return Expr(fn, repr(value))
+    return Expr(fn, repr(value), _structural=True)
 
 
 def str_lit(value: str) -> str:
@@ -368,6 +449,7 @@ def arrow_cast(expr: Expr, target: str) -> Expr:
     def fn(t: Table):
         vals, valid = expr.evaluate(t)
         return vals.astype(np_t), valid
-    e = Expr(fn, expr.output_name())
+    e = Expr(fn, expr.output_name(), f"cast({expr._desc}, {target})",
+             _structural=expr._structural)
     e.cast_target = _ARROW_TO_LOGICAL.get(target, target)  # type: ignore
     return e

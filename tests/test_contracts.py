@@ -197,3 +197,50 @@ def test_provable_postconditions_nullable_upstream_not_provable():
     # upstream nullable: the filter must be physically checked
     assert provable_postconditions({"up": Up}, Down, inspectable=True,
                                    null_preserving=True) == frozenset()
+
+
+# ---------------------------------------------------------------------------
+# By-name resolution across multiple inputs must not depend on ordering
+# ---------------------------------------------------------------------------
+
+def test_ambiguous_by_name_resolution_raises():
+    """Inputs A(x: int32) and B(x: int64): the verdict used to depend on
+    dict ordering (x silently bound to whichever input came first)."""
+    A = S.Schema.of("A", x=S.INT32)
+    B = S.Schema.of("B", x=S.INT64)
+    Out = S.Schema.of("Out", x=S.INT64)
+    for inputs in ({"a": A, "b": B}, {"b": B, "a": A}):   # both orders
+        with pytest.raises(ContractCompositionError, match="multiple"):
+            check_node(inputs, Out)
+
+
+def test_ambiguous_nullability_also_raises():
+    A = S.Schema.of("A", x=S.Nullable[str])
+    B = S.Schema.of("B", x=str)
+    with pytest.raises(ContractCompositionError, match="multiple"):
+        check_node({"a": A, "b": B}, S.Schema.of("Out", x=S.Nullable[str]))
+
+
+def test_explicit_lineage_disambiguates():
+    A = S.Schema.of("A", x=S.INT32)
+    B = S.Schema.of("B", x=S.INT64)
+    OutA = S.Schema.of("OutA", x=A.x)          # lineage: A.x, widens
+    r = check_node({"a": A, "b": B}, OutA)
+    assert "x" in r.inherited
+    # binding to B instead requires a declared narrowing cast — and the
+    # verdict is now the same whichever order the inputs arrive in.
+    OutB = S.Schema.of("OutB", x=S.Column("x", S.INT32,
+                                          inherited_from="B.x"))
+    with pytest.raises(ContractCompositionError, match="explicit cast"):
+        check_node({"a": A, "b": B}, OutB)
+    check_node({"a": A, "b": B}, OutB, casts=[CastDecl("x", S.INT32)])
+
+
+def test_agreeing_duplicate_columns_still_compose_by_name():
+    """Identical declarations across inputs (the natural-join idiom —
+    e.g. a shared join key) stay legal: the verdict cannot depend on
+    which input the column binds to."""
+    L = S.Schema.of("L", k=str, a=int)
+    R = S.Schema.of("R", k=str, b=int)
+    r = check_node({"l": L, "r": R}, S.Schema.of("J", k=str, a=int, b=int))
+    assert set(r.inherited) == {"k", "a", "b"}

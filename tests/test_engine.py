@@ -1,0 +1,541 @@
+"""Wave-parallel, content-addressed execution engine (DESIGN.md §8).
+
+Covers: level scheduling in the planner; deterministic partial-output
+flush when a wave fails with siblings in flight; the cache-correctness
+property (same plan + same sources ⇒ identical published snapshots and
+ZERO node executions on the second run); incremental re-execution after
+a publication rebase (only the changed subgraph runs); cache
+persistence across clients sharing one object store; and the
+Appendix-A elision-soundness regression for SQL join null semantics.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import schema as S
+from repro.core.catalog import Catalog, Visibility
+from repro.core.dag import Pipeline
+from repro.core.engine import NodeCache, PlanExecutor, cache_key
+from repro.core.errors import (CatalogError, ContractRuntimeError,
+                               TransactionAborted)
+from repro.core.planner import plan
+from repro.core.runner import Client
+from repro.core.store import FileStore, MemoryStore
+from repro.data.tables import Table, col
+
+Src = S.Schema.of("Src", x=int)
+Mid = S.Schema.of("Mid", x=int, y=int)
+Total = S.Schema.of("Total", total=int)
+
+
+def _source(vals=(1, 2, 3)) -> Table:
+    return Table({"x": np.array(vals, dtype=np.int64)})
+
+
+def _add_mid(p: Pipeline, i: int, sleep_s: float, mult: int) -> None:
+    # factory so each closure gets its OWN cells (the engine folds
+    # captured values into the cache key — mults must not be shared)
+    @p.node(name=f"mid_{i}")
+    def mid(df: Src = "src") -> Mid:
+        time.sleep(sleep_s)
+        return df.select([col("x"), (col("x") * mult).alias("y")])
+
+
+def _diamond(*, sleeps=(0.0, 0.0, 0.0), mults=(1, 2, 3)) -> Pipeline:
+    """src -> (mid_0 | mid_1 | mid_2) -> sink: one 3-wide wave + a sink."""
+    p = Pipeline("diamond")
+    p.source("src", Src)
+    for i in range(3):
+        _add_mid(p, i, sleeps[i], mults[i])
+
+    @p.node()
+    def sink(a: Mid = "mid_0", b: Mid = "mid_1", c: Mid = "mid_2") -> Total:
+        total = int(a.column("y").sum() + b.column("y").sum()
+                    + c.column("y").sum())
+        return Table({"total": np.array([total], dtype=np.int64)})
+
+    return p
+
+
+def _client(store=None) -> Client:
+    c = Client(Catalog(store=store))
+    c.write_source_table("main", "src", _source())
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Wave scheduling (planner)
+# ---------------------------------------------------------------------------
+
+def test_plan_assigns_waves_by_dependency_level():
+    pl = plan(_diamond())
+    waves = {s.node.name: s.wave for s in pl.steps}
+    assert waves == {"mid_0": 0, "mid_1": 0, "mid_2": 0, "sink": 1}
+    assert [sorted(s.node.name for s in w) for w in pl.waves] == [
+        ["mid_0", "mid_1", "mid_2"], ["sink"]]
+    assert pl.source_tables() == ("src",)
+
+
+def test_wave_parallel_run_matches_sequential_result():
+    c1, c2 = _client(), _client()
+    pl = plan(_diamond())
+    r_par = c1.run(pl, "main", max_workers=3)
+    r_seq = c2.run(pl, "main", max_workers=1, cache=False)
+    assert r_par.state.status == r_seq.state.status == "committed"
+    t1 = c1.read_table("main", "sink")
+    t2 = c2.read_table("main", "sink")
+    assert t1.fingerprint() == t2.fingerprint()
+    assert t1.column("total")[0] == (1 + 2 + 3) * (1 + 2 + 3)
+
+
+# ---------------------------------------------------------------------------
+# Concurrent-wave failure injection: deterministic partial-output flush
+# ---------------------------------------------------------------------------
+
+def test_fail_with_siblings_mid_flight_flushes_exactly_validated():
+    """fail_after on a node whose wave siblings are PROVABLY mid-flight:
+    the engine drains the wave and the ABORTED branch holds exactly the
+    validated outputs (all three siblings, never the sink)."""
+    siblings_started = threading.Barrier(3, timeout=10)
+    p = Pipeline("inflight")
+    p.source("src", Src)
+    for i in range(3):
+        @p.node(name=f"mid_{i}")
+        def mid(df: Src = "src") -> Mid:
+            siblings_started.wait()   # nobody finishes until all started
+            return df.select([col("x"), (col("x") * 2).alias("y")])
+
+    @p.node()
+    def sink(a: Mid = "mid_0", b: Mid = "mid_1", c: Mid = "mid_2") -> Total:
+        return Table({"total": np.array([0], dtype=np.int64)})
+
+    client = _client()
+    before = client.catalog.tables("main")
+    with pytest.raises(TransactionAborted) as ei:
+        client.run(plan(p), "main", fail_after="mid_1", max_workers=3)
+    # main untouched; ABORTED branch preserved with exactly the wave's
+    # validated outputs — including the fail_after node's own output,
+    # excluding the never-started sink.
+    assert client.catalog.tables("main") == before
+    branch = ei.value.branch
+    assert client.catalog.branch_info(branch).visibility is Visibility.ABORTED
+    held = set(client.catalog.tables(branch)) - set(before)
+    assert held == {"mid_0", "mid_1", "mid_2"}
+
+
+def test_failing_sibling_output_not_flushed():
+    """A sibling that fails *validation* is excluded from the flush; its
+    validated wave-mates are preserved. The flush set is a function of
+    the plan, not of thread timing."""
+    p = Pipeline("liar_sibling")
+    p.source("src", Src)
+
+    @p.node(name="mid_0")
+    def ok_node(df: Src = "src") -> Mid:
+        return df.select([col("x"), (col("x") * 2).alias("y")])
+
+    @p.node(name="mid_1")
+    def liar(df: Src = "src") -> Mid:
+        return df.select([col("x")])          # missing y: fails moment 3
+
+    @p.node(name="mid_2")
+    def slow_ok(df: Src = "src") -> Mid:
+        time.sleep(0.05)
+        return df.select([col("x"), (col("x") * 3).alias("y")])
+
+    client = _client()
+    for _ in range(3):   # repeat: identical flush set across timings
+        before = client.catalog.tables("main")
+        with pytest.raises(TransactionAborted) as ei:
+            client.run(plan(p), "main", max_workers=3, cache=False)
+        assert isinstance(ei.value.cause, ContractRuntimeError)
+        held = set(client.catalog.tables(ei.value.branch)) - set(before)
+        assert held == {"mid_0", "mid_2"}
+
+
+# ---------------------------------------------------------------------------
+# Cache correctness: same plan + same sources ⇒ same snapshots, 0 reruns
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(8))
+def test_property_cached_rerun_is_identical_and_free(seed):
+    """Property (seeded sweep): same plan + same sources ⇒ identical
+    published snapshots with ZERO node executions on the second run."""
+    rng = np.random.default_rng(seed)
+    vals = tuple(int(v) for v in rng.integers(-100, 100,
+                                              size=rng.integers(1, 12)))
+    client = Client()
+    client.write_source_table("main", "src", _source(vals))
+    pl = plan(_diamond())
+    r1 = client.run(pl, "main")
+    assert set(r1.executed) == {"mid_0", "mid_1", "mid_2", "sink"}
+    log_after_first = len(client.catalog.log("main", limit=1000))
+
+    r2 = client.run(pl, "main")
+    assert r2.state.status == "committed"
+    assert r2.executed == ()                      # zero node executions
+    assert set(r2.cached) == set(r1.executed)
+    assert dict(r2.tables) == dict(r1.tables)     # identical snapshots
+    # fully-cached re-run publishes no new commit (no churn)
+    assert len(client.catalog.log("main", limit=1000)) == log_after_first
+
+
+def test_cache_distinguishes_changed_source_and_changed_code():
+    client = _client()
+    r1 = client.run(plan(_diamond()), "main")
+    assert len(r1.executed) == 4
+
+    # change ONE thing at a time: the source data...
+    client.write_source_table("main", "src", _source((7, 8)))
+    r2 = client.run(plan(_diamond()), "main")
+    assert len(r2.executed) == 4                  # all inputs moved
+    assert client.read_table("main", "sink").column("total")[0] == \
+        (7 + 8) * (1 + 2 + 3)
+
+    # ...then nothing: full hit again
+    r3 = client.run(plan(_diamond()), "main")
+    assert r3.executed == ()
+
+    # ...then the code (different multipliers = different closures)
+    r4 = client.run(plan(_diamond(mults=(1, 2, 4))), "main")
+    assert "mid_2" in r4.executed and "sink" in r4.executed
+    assert "mid_0" in r4.cached and "mid_1" in r4.cached
+
+
+def test_cache_hit_still_validates_contract():
+    """A cache hit must re-run validate_table for the CURRENT plan: a
+    poisoned/stale snapshot cannot slip past the worker moment."""
+    client = _client()
+    pl = plan(_diamond())
+    client.run(pl, "main")
+    # poison the cache: point a hit at a snapshot violating Mid
+    step = next(s for s in pl.steps if s.node.name == "mid_0")
+    key = cache_key(step, {"df": client.catalog.read_table("main", "src")})
+    bad = Table({"x": np.array([1], dtype=np.int64)})   # missing y
+    client.node_cache.put(key, bad.to_blobs(client.store))
+    with pytest.raises(TransactionAborted) as ei:
+        client.run(pl, "main")
+    assert isinstance(ei.value.cause, ContractRuntimeError)
+
+
+def test_cache_persists_across_clients_sharing_a_store(tmp_path):
+    store = FileStore(str(tmp_path))
+    c1 = _client(store=store)
+    r1 = c1.run(plan(_diamond()), "main")
+    assert len(r1.executed) == 4
+
+    c2 = _client(store=FileStore(str(tmp_path)))   # fresh catalog+cache
+    r2 = c2.run(plan(_diamond()), "main")
+    assert r2.executed == ()                       # warmed from disk
+    assert c2.read_table("main", "sink").fingerprint() == \
+        c1.read_table("main", "sink").fingerprint()
+
+
+def test_node_cache_survives_pruned_blobs():
+    store = MemoryStore()
+    cache = NodeCache(store)
+    cache.put("k1", "missing-snapshot")
+    assert cache.lookup("k1") is None              # ref without blob: miss
+
+
+def test_pruned_column_blob_recomputes_instead_of_aborting():
+    """A cache entry whose manifest survived but whose column blobs were
+    pruned must demote to a miss (recompute), never abort the run."""
+    client = _client()
+    pl = plan(_diamond())
+    r1 = client.run(pl, "main")
+    # prune an array blob UNIQUE to mid_1's cached output (its y = x*2;
+    # content-addressing shares mid_0's y = x*1 with the source itself)
+    manifest = client.store.get_json(r1.tables["mid_1"])
+    del client.store._blobs[manifest["columns"]["y"]["values"]]
+    r2 = client.run(pl, "main")
+    assert r2.state.status == "committed"
+    assert "mid_1" in r2.executed                  # recomputed, not hit
+    assert "mid_0" in r2.cached and "mid_2" in r2.cached
+
+
+def test_unfingerprintable_closure_capture_disables_caching():
+    """A node capturing an object with only a default id-based repr can
+    be mutated without changing its fingerprint — such nodes must never
+    cache (stale-hit hazard), they re-execute every run."""
+    class Cfg:                                     # default object repr
+        scale = 2
+
+    cfg = Cfg()
+    p = Pipeline("mutable_capture")
+    p.source("src", Src)
+
+    @p.node(name="scaled")
+    def scaled(df: Src = "src") -> Mid:
+        return df.select([col("x"), (col("x") * cfg.scale).alias("y")])
+
+    pl = plan(p)
+    assert cache_key(pl.steps[0], {"df": "snap"}) is None
+    client = _client()
+    client.run(pl, "main")
+    cfg.scale = 5                                  # mutate between runs
+    res = client.run(pl, "main")
+    assert res.executed == ("scaled",)             # not a stale hit
+    assert client.read_table("main", "scaled").column("y").tolist() == \
+        [5, 10, 15]
+
+
+def test_stable_closure_reprs_still_cache():
+    pl = plan(_diamond())                          # captures ints/floats
+    for step in pl.steps:
+        assert cache_key(step, {"df": "snap"}) is not None
+
+
+def test_numpy_array_capture_disables_caching():
+    """numpy reprs TRUNCATE (large arrays print '...'), so a captured
+    array can mutate without changing any printable identity — such
+    nodes must never cache."""
+    weights = np.arange(2000, dtype=np.int64)
+    p = Pipeline("array_capture")
+    p.source("src", Src)
+
+    @p.node(name="weighted")
+    def weighted(df: Src = "src") -> Mid:
+        w = int(weights.sum())
+        return df.select([col("x"), (col("x") * 0 + w).alias("y")])
+
+    pl = plan(p)
+    assert cache_key(pl.steps[0], {"df": "snap"}) is None
+    client = _client()
+    client.run(pl, "main")
+    weights[1000] = -999_999                       # repr unchanged!
+    res = client.run(pl, "main")
+    assert res.executed == ("weighted",)           # re-executed
+    assert client.read_table("main", "weighted").column("y")[0] == \
+        int(weights.sum())
+
+
+# module-global data value read by the node below; mutated in-test
+_GLOBAL_SCALE = 10
+
+
+def test_mutated_module_global_changes_cache_key():
+    """A node reading a module-global data value must fold that VALUE
+    into its cache key — mutating the global used to yield a stale hit
+    (only the global's NAME was fingerprinted, via co_names)."""
+    global _GLOBAL_SCALE
+    p = Pipeline("global_read")
+    p.source("src", Src)
+
+    @p.node(name="scaled")
+    def scaled(df: Src = "src") -> Mid:
+        return df.select([col("x"),
+                          (col("x") * _GLOBAL_SCALE).alias("y")])
+
+    pl = plan(p)
+    client = _client()
+    _GLOBAL_SCALE = 10
+    client.run(pl, "main")
+    _GLOBAL_SCALE = 20                             # mutate the global
+    res = client.run(plan(p), "main")
+    assert "scaled" in res.executed                # key moved: no hit
+    assert client.read_table("main", "scaled").column("y").tolist() == \
+        [20, 40, 60]
+    _GLOBAL_SCALE = 10
+    res2 = client.run(plan(p), "main")             # back: warm again
+    assert res2.executed == ()
+
+
+def _helper_rate():
+    return 0.25
+
+
+def test_helper_function_const_change_moves_cache_key():
+    """A referenced helper's CONSTANTS are part of the fingerprint: a
+    `return 0.25` -> `return 0.5` edit is co_consts-only (identical
+    bytecode) and used to leave the key unchanged — a stale hit."""
+    p = Pipeline("helper_read")
+    p.source("src", Src)
+
+    @p.node(name="rated")
+    def rated(df: Src = "src") -> Mid:
+        r = _helper_rate()
+        return df.select([col("x"), (col("x") * 0 + int(r * 4)).alias("y")])
+
+    pl = plan(p)
+    k1 = cache_key(pl.steps[0], {"df": "snap"})
+    global _helper_rate
+    orig = _helper_rate
+
+    def _helper_rate():                            # noqa: F811
+        return 0.5
+    try:
+        k2 = cache_key(plan(p).steps[0], {"df": "snap"})
+    finally:
+        _helper_rate = orig
+    assert k1 is not None and k2 is not None and k1 != k2
+
+
+def test_global_read_inside_nested_lambda_is_fingerprinted():
+    """Globals read only inside a nested lambda (its own co_names) must
+    move the key too."""
+    global _GLOBAL_SCALE
+    p = Pipeline("lambda_read")
+    p.source("src", Src)
+
+    @p.node(name="thresh")
+    def thresh(df: Src = "src") -> Mid:
+        f = (lambda v: v * _GLOBAL_SCALE)          # noqa: E731
+        return df.select([col("x"), (col("x") * 0 + f(1)).alias("y")])
+
+    _GLOBAL_SCALE = 10
+    k1 = cache_key(plan(p).steps[0], {"df": "snap"})
+    _GLOBAL_SCALE = 20
+    k2 = cache_key(plan(p).steps[0], {"df": "snap"})
+    _GLOBAL_SCALE = 10
+    assert k1 is not None and k2 is not None and k1 != k2
+
+
+def test_hand_rolled_expr_makes_declarative_node_uncacheable():
+    """Expr(fn, name) carries no faithful structural description: two
+    different fns under one output name must not collide — such nodes
+    are uncacheable (library-built expressions still cache)."""
+    from repro.data.tables import Expr
+
+    def custom(mult):
+        p = Pipeline(f"custom")
+        p.source("src", Src)
+        p.sql(name="out_t", inputs={"s": "src"}, input_schemas={"s": Src},
+              output_schema=Mid,
+              exprs=[col("x"),
+                     Expr(lambda t: (t.column("x") * mult, None), "y")])
+        return plan(p)
+
+    assert cache_key(custom(2).steps[0], {"s": "snap"}) is None
+    # end to end: the opaque-expr node re-executes every run
+    client = _client()
+    client.run(custom(2), "main")
+    res = client.run(custom(3), "main")            # same name, new fn
+    assert res.executed == ("out_t",)
+    assert client.read_table("main", "out_t").column("y").tolist() == \
+        [3, 6, 9]
+
+
+# ---------------------------------------------------------------------------
+# Publication rebase re-executes only the changed subgraph
+# ---------------------------------------------------------------------------
+
+def _run_with_concurrent_write(client, pl, write_fn):
+    """Run `pl` with a verifier that (once) moves main mid-publication,
+    forcing the CAS to conflict and the run to rebase-and-revalidate."""
+    fired = []
+
+    def bump_main(_table):
+        if not fired:
+            fired.append(True)
+            write_fn()
+
+    return client.run(pl, "main", verifiers={"sink": [bump_main]})
+
+
+def test_rebase_past_unrelated_write_reexecutes_nothing():
+    client = _client()
+    pl = plan(_diamond())
+    res = _run_with_concurrent_write(
+        client, pl,
+        lambda: client.catalog.write_table("main", "unrelated", "snap"))
+    assert res.state.status == "committed"
+    assert res.state.publish_attempts == 2         # one CAS conflict
+    assert res.rebase_reexecutions == (0,)         # O(changed subgraph)=0
+
+
+def test_rebase_past_moved_source_recomputes_and_publishes_fresh():
+    """A concurrent update to a SOURCE this run read forces the rebase
+    to re-derive the DAG — the published outputs must reflect the NEW
+    source, not the snapshots computed at begin()."""
+    client = _client()              # src = (1, 2, 3)
+    pl = plan(_diamond())
+    res = _run_with_concurrent_write(
+        client, pl,
+        lambda: client.write_source_table("main", "src", _source((10,))))
+    assert res.state.status == "committed"
+    # every node depends (transitively) on src: full re-derivation...
+    assert res.rebase_reexecutions == (4,)
+    # ...and the published sink was computed from the rebased source.
+    assert client.read_table("main", "sink").column("total")[0] == \
+        10 * (1 + 2 + 3)
+    assert res.state.final_commit == res.state.verified_head
+
+
+def test_rebase_partial_subgraph_reexecution():
+    """Two independent sources; only one moves mid-publication: the
+    untouched source's subgraph hits the cache, the moved one re-runs."""
+    p = Pipeline("two_roots")
+    p.source("src", Src)
+    p.source("other", Src)
+
+    @p.node(name="from_src")
+    def a(df: Src = "src") -> Mid:
+        return df.select([col("x"), (col("x") * 2).alias("y")])
+
+    @p.node(name="from_other")
+    def b(df: Src = "other") -> Mid:
+        return df.select([col("x"), (col("x") * 5).alias("y")])
+
+    client = _client()
+    client.write_source_table("main", "other", _source((4,)))
+    fired = []
+
+    def bump(_t):
+        if not fired:
+            fired.append(True)
+            client.write_source_table("main", "other", _source((9,)))
+
+    res = client.run(plan(p), "main", verifiers={"from_src": [bump]})
+    assert res.state.status == "committed"
+    assert res.rebase_reexecutions == (1,)         # only from_other
+    assert client.read_table("main", "from_other").column("y")[0] == 45
+    assert client.read_table("main", "from_src").column("y").tolist() == \
+        [2, 4, 6]
+
+
+# ---------------------------------------------------------------------------
+# Appendix-A elision stays sound under SQL join null semantics
+# ---------------------------------------------------------------------------
+
+def test_elided_checks_sound_for_declarative_join_with_null_keys():
+    """Regression for the NULL-join-key fix: a declarative join is
+    null-preserving only because NULL keys match nothing. With null-keyed
+    rows present in both inputs, the planner's elided NOT-NULL checks
+    must hold physically — re-validated here WITHOUT elision."""
+    from repro.core.contracts import validate_table
+
+    L = S.Schema.of("L", k=S.Nullable[str], a=int)
+    R = S.Schema.of("R", k=S.Nullable[str], b=int)
+    J = S.Schema.of("J", k=S.Nullable[str], a=int, b=int)
+
+    p = Pipeline("nulljoin")
+    p.source("left_t", L)
+    p.source("right_t", R)
+    p.sql(name="joined", inputs={"l": "left_t", "r": "right_t"},
+          input_schemas={"l": L, "r": R}, output_schema=J,
+          exprs=[col("k"), col("a"), col("b")],
+          join_with="right_t", join_on=("k",))
+
+    pl = plan(p)
+    step = pl.steps[0]
+    # a and b are not-null upstream + declarative join: statically elided
+    assert step.elided_null_checks == frozenset({"a", "b"})
+
+    client = Client()
+    client.write_source_table("main", "left_t", Table({
+        "k": np.array([None, "x", "y"], dtype=object),
+        "a": np.array([1, 2, 3], dtype=np.int64)}))
+    client.write_source_table("main", "right_t", Table({
+        "k": np.array([None, "x"], dtype=object),
+        "b": np.array([10, 20], dtype=np.int64)}))
+    res = client.run(pl, "main")
+    assert res.state.status == "committed"
+    out = client.read_table("main", "joined")
+    # NULL keys matched nothing: only the "x" row survives
+    assert out.to_pydict() == {"k": ["x"], "a": [2], "b": [20]}
+    # soundness: the elided checks hold physically (validate w/o elision)
+    validate_table(out, J, name="joined")
+    assert not out.has_nulls("a") and not out.has_nulls("b")
