@@ -1,0 +1,144 @@
+"""Columnar execution-backend benchmark (DESIGN.md §9) — the perf gate.
+
+Times the registered backends on the two table-layer hot paths the
+worker moment runs for every pipeline node:
+
+1. **hash join** (FK shape: 1e6-row fact table joined to a 1e5-row
+   dim table with unique keys);
+2. **group_by_sum** (1e6 rows, 1e4 groups, int64 values);
+
+and asserts the ``vectorized`` backend beats ``reference`` by >= 10x on
+both (>= 5x in ``--smoke`` mode, where n shrinks 5x for CI runners and
+scheduler noise eats into the Python-loop constant). Outputs are
+cross-checked via ``Table.fingerprint`` before timing — a fast wrong
+answer must fail here, not in production. The ``jax`` backend is timed
+when available (reported, not gated: CPU containers run XLA/interpret).
+
+Emits a BENCH JSON line (``BENCH {...}``) and, with ``--json PATH``,
+writes the same document to disk so CI can upload it as an artifact —
+the perf trajectory finally has data.
+
+Run: ``PYTHONPATH=src python -m benchmarks.columnar_kernels
+[--smoke] [--json PATH]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+MIN_SPEEDUP = 10.0
+MIN_SPEEDUP_SMOKE = 5.0
+
+
+def row(name, metric, value, unit, notes=""):
+    print(f"{name},{metric},{value:.6g},{unit},{notes}")
+
+
+def _best_of(n, fn):
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _tables(n: int):
+    from repro.data.tables import Table
+
+    rng = np.random.default_rng(0)
+    n_dim = max(n // 10, 1)
+    n_groups = max(n // 100, 1)
+    left = Table({
+        "k": rng.integers(0, n_dim, n).astype(np.int64),
+        "x": rng.normal(size=n),
+    })
+    right = Table({
+        "k": rng.permutation(n_dim).astype(np.int64),
+        "w": rng.normal(size=n_dim),
+    })
+    grouped = Table({
+        "k": rng.integers(0, n_groups, n).astype(np.int64),
+        "v": rng.integers(-100, 100, n).astype(np.int64),
+    })
+    return left, right, grouped
+
+
+def bench_columnar(smoke: bool = False, json_path: str | None = None,
+                   reps: int | None = None) -> dict:
+    from repro import exec as exec_backends
+
+    n = 200_000 if smoke else 1_000_000
+    floor = MIN_SPEEDUP_SMOKE if smoke else MIN_SPEEDUP
+    reps = reps if reps is not None else (2 if smoke else 3)
+    left, right, grouped = _tables(n)
+    backends = exec_backends.available_backends()
+
+    ops = {
+        "join": lambda be: left.join(right, on=["k"], backend=be),
+        "group_by_sum": lambda be: grouped.group_by_sum(
+            ["k"], "v", out="s", backend=be),
+    }
+
+    results: dict[str, dict[str, float]] = {}
+    for op_name, op in ops.items():
+        # correctness first: a fast wrong answer must fail the bench
+        want = op("reference").fingerprint()
+        for be in backends:
+            got = op(be).fingerprint()
+            assert got == want, (
+                f"{op_name}: backend {be!r} diverges from reference "
+                f"({got} != {want})")
+        timings: dict[str, float] = {}
+        for be in backends:
+            timings[be] = _best_of(reps, lambda b=be: op(b))
+            row("columnar", f"{op_name}_{be}", timings[be] * 1e3,
+                "ms/call", f"n={n}")
+        results[op_name] = timings
+
+    speedups = {}
+    for op_name, timings in results.items():
+        s = timings["reference"] / timings["vectorized"]
+        speedups[op_name] = s
+        row("columnar", f"{op_name}_speedup", s, "x",
+            f"vectorized over reference; gate >= {floor}x")
+
+    doc = {
+        "bench": "columnar_kernels",
+        "n_rows": n,
+        "smoke": smoke,
+        "backends": backends,
+        "timings_s": results,
+        "speedups": speedups,
+        "gate_min_speedup": floor,
+    }
+    print("BENCH " + json.dumps(doc, sort_keys=True))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+
+    for op_name, s in speedups.items():
+        assert s >= floor, (
+            f"{op_name}: vectorized must be >= {floor}x over reference "
+            f"at n={n}, got {s:.1f}x "
+            f"({results[op_name]['reference'] * 1e3:.0f}ms vs "
+            f"{results[op_name]['vectorized'] * 1e3:.0f}ms)")
+    return doc
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: 5x smaller n, relaxed 5x gate")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the BENCH JSON document to PATH")
+    args = ap.parse_args(argv)
+    print("name,metric,value,unit,notes")
+    bench_columnar(smoke=args.smoke, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -258,6 +258,7 @@ def bench_decode_step():
 
 
 def main() -> None:
+    from benchmarks.columnar_kernels import bench_columnar
     from benchmarks.concurrent_publication import (
         bench_concurrent_publication)
 
@@ -267,6 +268,9 @@ def main() -> None:
     bench_txn_overhead()
     bench_concurrent_publication()
     bench_validation()
+    # execution-backend gate (DESIGN.md §9): asserts the vectorized
+    # backend's speedup over the row-loop reference, smoke-sized.
+    bench_columnar(smoke=True)
     bench_pipeline_run()
     bench_train_step()
     bench_decode_step()

@@ -160,9 +160,12 @@ class Node:
         """Static half of the engine's content-addressed cache key: the
         transformation source, the declared output contract, and the
         declared casts. The dynamic half (input snapshot keys) is bound
-        by :func:`repro.core.engine.cache_key` at execution time. The
-        node *name* is deliberately excluded — two nodes computing the
-        same function over the same inputs share one cache entry.
+        by :func:`repro.core.engine.cache_key` at execution time, which
+        also folds in the active execution-backend name (DESIGN.md §9)
+        — backend choice is runtime state, not node identity, so it is
+        deliberately absent here. The node *name* is likewise excluded
+        — two nodes computing the same function over the same inputs
+        share one cache entry.
         ``None`` marks the node as not content-addressable (the engine
         always executes it)."""
         casts = ";".join(f"{c.column}->{c.to.name}" for c in self.casts)

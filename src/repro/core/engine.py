@@ -35,6 +35,7 @@ import threading
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Mapping
 
+from repro import exec as exec_backends
 from repro.core.contracts import validate_table
 from repro.core.errors import ExecutionError
 from repro.core.planner import Plan, PlanStep
@@ -52,15 +53,20 @@ def cache_key(step: PlanStep,
     fingerprint, and declared casts (``Node.cache_material``). Dynamic
     half: the snapshot key of every input, keyed by *parameter* name —
     not merely the sorted key set, because a binary node applied to
-    ``(A, B)`` and ``(B, A)`` is a different evaluation. ``None`` if
-    the node is not content-addressable (e.g. it captures state that
-    cannot be fingerprinted stably): such nodes always execute.
+    ``(A, B)`` and ``(B, A)`` is a different evaluation — plus the name
+    of the active execution backend (DESIGN.md §9): all backends are
+    *supposed* to agree bit-for-bit, but a cache hit must never be the
+    mechanism that launders a divergent backend's output past that
+    claim, so switching backends moves every key. ``None`` if the node
+    is not content-addressable (e.g. it captures state that cannot be
+    fingerprinted stably): such nodes always execute.
     """
     material = step.node.cache_material()
     if material is None:
         return None
     h = hashlib.sha256()
     h.update(material.encode())
+    h.update(f"|backend={exec_backends.active_backend().name}".encode())
     for param in sorted(input_snapshots):
         h.update(f"|{param}={input_snapshots[param]}".encode())
     return h.hexdigest()[:32]

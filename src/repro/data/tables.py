@@ -13,6 +13,14 @@ table snapshot. The expression API mirrors the paper's nodes::
 Logical dtypes follow :mod:`repro.core.schema` so worker-side contract
 validation (:func:`repro.core.contracts.validate_table`) checks *physical*
 data against declared schemas, including nullability.
+
+The relational operators dispatch through the pluggable execution
+backends of :mod:`repro.exec` (DESIGN.md §9): ``reference`` (row-loop
+oracle), ``vectorized`` (numpy, default), ``jax`` (segment-sum
+aggregation). Semantics are backend-independent — the differential
+suite (tests/test_exec_backends.py) holds every backend to the
+reference bit for bit — and each op takes a per-call ``backend=``
+override on top of the process-wide selection.
 """
 from __future__ import annotations
 
@@ -20,6 +28,8 @@ import dataclasses
 from typing import Any, Callable, Iterable, Mapping, Sequence
 
 import numpy as np
+
+from repro import exec as exec_backends
 
 __all__ = ["Table", "col", "lit", "str_lit", "arrow_cast", "Expr"]
 
@@ -44,11 +54,6 @@ _ARROW_TO_LOGICAL = {
     "Int8": "int8", "Int16": "int16", "Int32": "int32", "Int64": "int64",
     "Float32": "float32", "Float64": "float64",
 }
-
-
-# Sentinel marking a NULL group key in group_by_sum: SQL GROUP BY puts
-# all NULL keys in one group (unlike join equality, which matches none).
-_NULL = object()
 
 
 def _canon_str_array(arr: np.ndarray) -> np.ndarray:
@@ -211,7 +216,20 @@ class Table:
             data[name] = _ColumnData(vals, valid)
         return cls(_data=data)
 
+    # -- backend bridge (repro.exec column dicts) ------------------------
+    def _to_cols(self) -> dict[str, tuple[np.ndarray, np.ndarray | None]]:
+        return {n: (c.values, c.valid) for n, c in self._data.items()}
+
+    @classmethod
+    def _from_cols(cls, cols: Mapping[str, tuple]) -> "Table":
+        return cls(_data={n: _ColumnData(v, valid)
+                          for n, (v, valid) in cols.items()})
+
     # -- relational ops (paper's node bodies) ----------------------------
+    # Expression evaluation stays here; the physical operators dispatch
+    # through repro.exec (DESIGN.md §9). `backend=` overrides the
+    # process-wide selection for one call.
+
     def select(self, exprs: Sequence["Expr"]) -> "Table":
         data: dict[str, _ColumnData] = {}
         for e in exprs:
@@ -220,120 +238,63 @@ class Table:
             data[name] = _ColumnData(vals, valid)
         return Table(_data=data)
 
-    def filter(self, pred: "Expr") -> "Table":
+    def filter(self, pred: "Expr", *,
+               backend: "str | None" = None) -> "Table":
         mask, valid = pred.evaluate(self)
         mask = np.asarray(mask, dtype=bool)
         if valid is not None:
             mask = mask & valid  # SQL semantics: NULL predicate = drop row
-        data = {
-            n: _ColumnData(c.values[mask],
-                           None if c.valid is None else c.valid[mask])
-            for n, c in self._data.items()}
-        return Table(_data=data)
-
-    def _key_validity(self, on: Sequence[str]) -> np.ndarray:
-        """Rows whose every join key is non-NULL (validity mask AND no
-        ``None`` payload in object columns)."""
-        ok = np.ones(len(self), dtype=bool)
-        for k in on:
-            ok &= self.validity(k)
-            vals = self.column(k)
-            if vals.dtype == object:
-                ok &= np.array([v is not None for v in vals], dtype=bool)
-        return ok
+        be = exec_backends.resolve(backend)
+        return Table._from_cols(be.filter_select(self._to_cols(), mask))
 
     def join(self, other: "Table", on: Sequence[str],
-             how: str = "inner") -> "Table":
-        if how != "inner":
-            raise NotImplementedError("only inner joins are supported")
-        # SQL semantics: NULL join keys match nothing (NULL = NULL is not
-        # true), so null-keyed rows are dropped from both sides.
-        lok, rok = self._key_validity(on), other._key_validity(on)
-        lkeys = list(zip(*(self.column(k) for k in on)))
-        rindex: dict[tuple, list[int]] = {}
-        rkeys = list(zip(*(other.column(k) for k in on)))
-        for i, k in enumerate(rkeys):
-            if rok[i]:
-                rindex.setdefault(k, []).append(i)
-        li, ri = [], []
-        for i, k in enumerate(lkeys):
-            if not lok[i]:
-                continue
-            for j in rindex.get(k, ()):
-                li.append(i)
-                ri.append(j)
-        li_arr, ri_arr = np.array(li, dtype=int), np.array(ri, dtype=int)
-        data: dict[str, _ColumnData] = {}
-        for n, c in self._data.items():
-            data[n] = _ColumnData(
-                c.values[li_arr] if len(li_arr) else c.values[:0],
-                None if c.valid is None else c.valid[li_arr])
-        for n, c in other._data.items():
-            if n in data:  # join keys: keep left copy
-                continue
-            data[n] = _ColumnData(
-                c.values[ri_arr] if len(ri_arr) else c.values[:0],
-                None if c.valid is None else c.valid[ri_arr])
-        return Table(_data=data)
+             how: str = "inner", *,
+             backend: "str | None" = None) -> "Table":
+        """Hash join. ``inner`` drops NULL-keyed rows from both sides
+        (NULL = NULL is not TRUE); ``left`` keeps every left row —
+        unmatched rows carry NULL right columns with correct validity
+        masks."""
+        if how not in ("inner", "left"):
+            raise NotImplementedError(
+                f"join: how={how!r} not supported (inner, left)")
+        be = exec_backends.resolve(backend)
+        return Table._from_cols(
+            be.hash_join(self._to_cols(), other._to_cols(),
+                         tuple(on), how))
 
     def group_by_sum(self, keys: Sequence[str], value: str,
-                     out: str | None = None) -> "Table":
+                     out: str | None = None, *,
+                     backend: "str | None" = None) -> "Table":
         """GROUP BY keys, SUM(value) — the paper's Listing 1 aggregate.
 
         SQL aggregate semantics over nullable columns: NULL values are
         skipped by SUM (a group whose values are all NULL sums to NULL),
         and NULL keys form their own single group — SQL ``GROUP BY``
         treats all NULLs as one group, unlike join equality.
-        """
-        out = out or f"_S"
-        kcols = [self.column(k) for k in keys]
-        kvalid = [self.validity(k) for k in keys]
-        vals = self.column(value)
-        vvalid = self.validity(value)
-        groups: dict[tuple, Any] = {}
-        order: list[tuple] = []
-        for i in range(len(self)):
-            k = tuple(c[i] if kvalid[j][i] and c[i] is not None else _NULL
-                      for j, c in enumerate(kcols))
-            if k not in groups:
-                groups[k] = None          # SUM over no non-NULL values
-                order.append(k)
-            v = vals[i]
-            if vvalid[i] and v is not None:
-                groups[k] = v if groups[k] is None else groups[k] + v
-        data: dict[str, _ColumnData] = {}
-        for j, kname in enumerate(keys):
-            dt = kcols[j].dtype
-            fill = None if dt == object else np.zeros(1, dtype=dt)[0]
-            colvals = np.array([fill if k[j] is _NULL else k[j]
-                                for k in order], dtype=dt)
-            mask = np.array([k[j] is not _NULL for k in order], dtype=bool)
-            data[kname] = _ColumnData(colvals, mask)
-        vdt = vals.dtype
-        vfill = None if vdt == object else np.zeros(1, dtype=vdt)[0]
-        data[out] = _ColumnData(
-            np.array([vfill if groups[k] is None else groups[k]
-                      for k in order], dtype=vdt),
-            np.array([groups[k] is not None for k in order], dtype=bool))
-        return Table(_data=data)
 
-    def concat(self, other: "Table") -> "Table":
-        if set(self._data) != set(other._data):
-            raise ValueError("column sets differ")
-        data = {}
-        for n, c in self._data.items():
-            oc = other._data[n]
-            vals = np.concatenate([c.values, oc.values])
-            if c.valid is None and oc.valid is None:
-                valid = None
-            else:
-                lv = (c.valid if c.valid is not None
-                      else np.ones(len(c.values), bool))
-                rv = (oc.valid if oc.valid is not None
-                      else np.ones(len(oc.values), bool))
-                valid = np.concatenate([lv, rv])
-            data[n] = _ColumnData(vals, valid)
-        return Table(_data=data)
+        The output column defaults to ``{value}_sum`` (deterministically
+        de-collided against the key names); an explicit ``out`` that
+        names a group key raises instead of silently overwriting it.
+        """
+        if out is None:
+            out = f"{value}_sum"
+            i = 1
+            while out in keys:
+                out = f"{value}_sum_{i}"
+                i += 1
+        elif out in keys:
+            raise ValueError(
+                f"group_by_sum: out={out!r} collides with a group key; "
+                f"pick a distinct output column name")
+        be = exec_backends.resolve(backend)
+        return Table._from_cols(
+            be.group_by_sum(self._to_cols(), tuple(keys), value, out))
+
+    def concat(self, other: "Table", *,
+               backend: "str | None" = None) -> "Table":
+        be = exec_backends.resolve(backend)
+        return Table._from_cols(
+            be.concat(self._to_cols(), other._to_cols()))
 
 
 # ---------------------------------------------------------------------------
@@ -388,13 +349,25 @@ class Expr:
         def fn(t: Table):
             lv, lva = self._fn(t)
             rv, rva = other_e._fn(t)
-            vals = op(lv, rv)
             if lva is None and rva is None:
                 valid = None
             else:
                 la = lva if lva is not None else np.ones(len(t), bool)
                 ra = rva if rva is not None else np.ones(len(t), bool)
                 valid = la & ra
+            if valid is not None and (lv.dtype == object
+                                      or rv.dtype == object):
+                # NULL lanes of object columns hold None payloads; numpy
+                # object-dtype ufuncs evaluate EVERY lane, so e.g.
+                # None - 1 raises TypeError even though validity masks
+                # the lane out. Evaluate only the valid lanes; invalid
+                # lanes keep the canonical object fill (None), so the
+                # result fingerprints identically however it was built.
+                vals = np.full(len(t), None, dtype=object)
+                if valid.any():
+                    vals[valid] = op(lv[valid], rv[valid])
+            else:
+                vals = op(lv, rv)
             return vals, valid
         return Expr(fn, f"({self._name}{sym}{other_e._name})",
                     f"({self._desc}{sym}{other_e._desc})",

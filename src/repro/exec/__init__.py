@@ -1,0 +1,156 @@
+"""Pluggable columnar execution backends (DESIGN.md §9).
+
+The table layer (:class:`repro.data.tables.Table`) dispatches its
+physical operators — ``hash_join``, ``group_by_sum``, ``filter_select``,
+``concat`` — through this registry, so *what* a pipeline computes
+(contracts, NULL semantics, row order) is fixed while *how* it executes
+is swappable:
+
+- ``reference`` — the original interpreted row loops, kept as the
+  differential-testing oracle;
+- ``vectorized`` — numpy factorize/sort kernels, the default;
+- ``jax``       — accelerator segment-sum aggregation (XLA or the
+  Pallas kernel), registered only when JAX imports.
+
+Selection, in precedence order:
+
+1. per-call override: ``table.join(other, on=[...], backend="reference")``;
+2. process-wide: :func:`set_backend` / the :func:`use_backend` context
+   manager (process-global, *not* thread-scoped — the engine's wave
+   threads all see it, which is exactly what keeps one run on one
+   backend);
+3. environment: ``REPRO_EXEC_BACKEND`` at first use;
+4. default: ``vectorized``.
+
+Backends are registered as *factories* and instantiated lazily, so
+importing this package never imports JAX; an unimportable backend
+surfaces as :class:`BackendUnavailable` at selection time and the
+``jax`` entry simply drops out of :func:`available_backends` on
+JAX-less installs. The engine folds :func:`active_backend`'s name into
+every node cache key (``repro.core.engine.cache_key``), so switching
+backends can never serve a snapshot computed by a different
+implementation.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from contextlib import contextmanager
+from typing import Callable
+
+from repro.exec.base import Backend, Columns, fill_value, payload_validity
+
+__all__ = [
+    "Backend", "Columns", "fill_value", "payload_validity",
+    "BackendUnavailable", "register", "get_backend", "available_backends",
+    "active_backend", "set_backend", "use_backend", "resolve",
+    "DEFAULT_BACKEND",
+]
+
+DEFAULT_BACKEND = "vectorized"
+
+
+class BackendUnavailable(RuntimeError):
+    """A registered backend cannot be constructed (missing dependency)."""
+
+
+_lock = threading.Lock()
+_factories: dict[str, Callable[[], Backend]] = {}
+_instances: dict[str, Backend] = {}
+_active: str | None = None      # resolved lazily (env) on first use
+
+
+def register(name: str, factory: Callable[[], Backend]) -> None:
+    """Register a backend factory. Construction is deferred to first
+    :func:`get_backend` so optional dependencies stay optional."""
+    _factories[name] = factory
+
+
+def get_backend(name: str) -> Backend:
+    with _lock:
+        be = _instances.get(name)
+        if be is not None:
+            return be
+        factory = _factories.get(name)
+        if factory is None:
+            raise KeyError(
+                f"unknown execution backend {name!r}; registered: "
+                f"{sorted(_factories)}")
+        try:
+            be = factory()
+        except ImportError as e:
+            raise BackendUnavailable(
+                f"execution backend {name!r} is unavailable: {e}") from e
+        _instances[name] = be
+        return be
+
+
+def available_backends() -> list[str]:
+    """Names of backends that actually construct on this install."""
+    out = []
+    for name in sorted(_factories):
+        try:
+            get_backend(name)
+        except BackendUnavailable:
+            continue
+        out.append(name)
+    return out
+
+
+def _default_name() -> str:
+    return os.environ.get("REPRO_EXEC_BACKEND", DEFAULT_BACKEND)
+
+
+def active_backend() -> Backend:
+    global _active
+    if _active is None:
+        _active = _default_name()
+    return get_backend(_active)
+
+
+def set_backend(name: str) -> None:
+    """Select the process-wide backend (validates availability now)."""
+    global _active
+    get_backend(name)
+    _active = name
+
+
+@contextmanager
+def use_backend(name: str):
+    """Temporarily select a backend (process-global, not thread-scoped)."""
+    global _active
+    prev = _active
+    set_backend(name)
+    try:
+        yield get_backend(name)
+    finally:
+        _active = prev
+
+
+def resolve(backend: "str | Backend | None") -> Backend:
+    """Per-call dispatch: None -> active, str -> registry, Backend -> it."""
+    if backend is None:
+        return active_backend()
+    if isinstance(backend, Backend):
+        return backend
+    return get_backend(backend)
+
+
+def _reference_factory() -> Backend:
+    from repro.exec.reference import ReferenceBackend
+    return ReferenceBackend()
+
+
+def _vectorized_factory() -> Backend:
+    from repro.exec.vectorized import VectorizedBackend
+    return VectorizedBackend()
+
+
+def _jax_factory() -> Backend:
+    from repro.exec.jax_backend import JaxBackend  # imports jax
+    return JaxBackend()
+
+
+register("reference", _reference_factory)
+register("vectorized", _vectorized_factory)
+register("jax", _jax_factory)

@@ -1,0 +1,121 @@
+"""Execution-backend interface for the columnar table layer (DESIGN.md §9).
+
+A backend implements the four physical operators the relational layer
+dispatches (:class:`~repro.data.tables.Table` stays the only public
+API): ``hash_join``, ``group_by_sum``, ``filter_select`` and ``concat``.
+Backends operate on *column dicts* — ``{name: (values, valid)}`` with
+numpy value arrays and optional boolean validity masks — rather than on
+:class:`Table` itself, so the package has no import cycle with the
+table layer and a backend can be exercised (and differentially tested)
+without building tables.
+
+Semantics are fixed by the ``reference`` backend (the extracted
+row-loop implementation): every registered backend must agree with it
+bit-for-bit — including NULL handling, row order, and the typed fill
+payloads it writes into invalid lanes (fills are hashed by
+``Table.fingerprint``, so "don't care" lanes still have to match).
+One documented carve-out: *float* SUM results are deterministic per
+backend but exact only up to summation order across backends (SIMD /
+device reductions regroup additions; no engine promises bit-stable
+float aggregation across execution strategies). Integer sums have no
+carve-out — integer addition is associative even under wraparound.
+``tests/test_exec_backends.py`` enforces all of this differentially.
+
+Shared NULL conventions (SQL semantics, established in PR 2):
+
+- join keys: a NULL key matches nothing (``NULL = NULL`` is not TRUE);
+  NaN/NaT keys also match nothing (Python/numpy equality agrees);
+- GROUP BY keys: all NULL keys form ONE group; NaN keys are pairwise
+  distinct (NaN != NaN), so each NaN-keyed row is its own group;
+- SUM skips NULL values; a group whose values are all NULL sums to NULL.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+import numpy as np
+
+__all__ = ["Columns", "Backend", "fill_value", "payload_validity"]
+
+# {column name: (values, validity-or-None)} — insertion order is column
+# order. `valid is None` means "no NULLs" (the Table-layer convention).
+Columns = Mapping[str, tuple[np.ndarray, "np.ndarray | None"]]
+
+
+def fill_value(dtype: np.dtype):
+    """The canonical payload written into invalid (NULL) lanes: ``None``
+    for object columns, the dtype's zero otherwise. Every backend must
+    use the same fill so snapshots/fingerprints do not depend on which
+    backend produced a table."""
+    return None if dtype == object else np.zeros(1, dtype=dtype)[0]
+
+
+def payload_validity(values: np.ndarray,
+                     valid: np.ndarray | None) -> np.ndarray:
+    """Effective validity of a column: the mask AND, for object columns,
+    "payload is not None" (freshly-built object columns may carry None
+    payloads before any mask exists)."""
+    n = len(values)
+    ok = (valid.astype(bool, copy=True) if valid is not None
+          else np.ones(n, dtype=bool))
+    if values.dtype == object:
+        ok &= np.array([v is not None for v in values], dtype=bool)
+    return ok
+
+
+def _column_length(cols: Columns) -> int:
+    for values, _ in cols.values():
+        return len(values)
+    return 0
+
+
+class Backend:
+    """One physical implementation of the relational operators.
+
+    Subclasses set ``name`` and implement ``hash_join`` and
+    ``group_by_sum``; ``filter_select`` and ``concat`` have shared
+    default implementations (plain gather/concatenate — already
+    vectorized, and semantics-free enough that the differential suite
+    keeps everyone honest)."""
+
+    name: str = "?"
+
+    # -- joins ----------------------------------------------------------
+    def hash_join(self, left: Columns, right: Columns,
+                  on: Sequence[str], how: str = "inner") -> Columns:
+        raise NotImplementedError
+
+    # -- aggregation ----------------------------------------------------
+    def group_by_sum(self, cols: Columns, keys: Sequence[str],
+                     value: str, out: str) -> Columns:
+        raise NotImplementedError
+
+    # -- row selection --------------------------------------------------
+    def filter_select(self, cols: Columns, mask: np.ndarray) -> Columns:
+        mask = np.asarray(mask, dtype=bool)
+        return {
+            name: (values[mask],
+                   None if valid is None else valid[mask])
+            for name, (values, valid) in cols.items()}
+
+    # -- concatenation --------------------------------------------------
+    def concat(self, a: Columns, b: Columns) -> Columns:
+        if set(a) != set(b):
+            raise ValueError("column sets differ")
+        out: dict[str, tuple[np.ndarray, np.ndarray | None]] = {}
+        for name, (av, avalid) in a.items():
+            bv, bvalid = b[name]
+            values = np.concatenate([av, bv])
+            if avalid is None and bvalid is None:
+                valid = None
+            else:
+                la = (avalid if avalid is not None
+                      else np.ones(len(av), dtype=bool))
+                rb = (bvalid if bvalid is not None
+                      else np.ones(len(bv), dtype=bool))
+                valid = np.concatenate([la, rb])
+            out[name] = (values, valid)
+        return out
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<{type(self).__name__} {self.name!r}>"

@@ -1,0 +1,142 @@
+"""The row-loop reference backend — the differential-testing oracle.
+
+This is the table layer's original interpreted implementation (PR 2
+semantics), extracted verbatim from ``repro.data.tables`` and extended
+with ``how="left"``. It is deliberately naive: Python dicts of boxed
+key tuples, per-row loops, first-appearance group ordering via dict
+insertion. Its value is *semantic*, not performance — every other
+backend must reproduce its output bit-for-bit (values, validity masks,
+row order, and the typed fills in invalid lanes), which is what
+``tests/test_exec_backends.py`` asserts.
+
+Because keys are compared with Python dict/tuple equality, the oracle
+pins down the edge semantics the vectorized backends must reproduce:
+``NULL`` (mask or ``None`` payload) matches nothing in joins; NaN keys
+match nothing (``NaN != NaN``); GROUP BY collapses all NULL keys into
+one group while each NaN key stays its own group.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.exec.base import (Backend, Columns, _column_length, fill_value,
+                             payload_validity)
+
+__all__ = ["ReferenceBackend"]
+
+# Sentinel marking a NULL group key in group_by_sum: SQL GROUP BY puts
+# all NULL keys in one group (unlike join equality, which matches none).
+_NULL = object()
+
+
+class ReferenceBackend(Backend):
+    name = "reference"
+
+    # -- join -----------------------------------------------------------
+    def hash_join(self, left: Columns, right: Columns,
+                  on: Sequence[str], how: str = "inner") -> Columns:
+        # SQL semantics: NULL join keys match nothing (NULL = NULL is
+        # not true). Inner: null-keyed rows are dropped from both sides;
+        # left: null-keyed/unmatched left rows survive with NULL right
+        # columns.
+        lok = self._key_validity(left, on)
+        rok = self._key_validity(right, on)
+        lkeys = list(zip(*(left[k][0] for k in on)))
+        rindex: dict[tuple, list[int]] = {}
+        rkeys = list(zip(*(right[k][0] for k in on)))
+        for i, k in enumerate(rkeys):
+            if rok[i]:
+                rindex.setdefault(k, []).append(i)
+        li, ri = [], []
+        for i, k in enumerate(lkeys):
+            matches = rindex.get(k, ()) if lok[i] else ()
+            if not matches:
+                if how == "left":       # unmatched: keep, right = NULL
+                    li.append(i)
+                    ri.append(-1)
+                continue
+            for j in matches:
+                li.append(i)
+                ri.append(j)
+        li_arr = np.array(li, dtype=int)
+        ri_arr = np.array(ri, dtype=int)
+        out: dict[str, tuple[np.ndarray, np.ndarray | None]] = {}
+        for n, (values, valid) in left.items():
+            out[n] = (values[li_arr] if len(li_arr) else values[:0],
+                      None if valid is None else valid[li_arr])
+        matched = ri_arr >= 0
+        safe = np.where(matched, ri_arr, 0)
+        for n, (values, valid) in right.items():
+            if n in out:                # join keys: keep left copy
+                continue
+            if how == "inner":
+                out[n] = (values[ri_arr] if len(ri_arr) else values[:0],
+                          None if valid is None else valid[ri_arr])
+                continue
+            if len(values):
+                gathered = (values[safe] if len(safe) else values[:0])
+                gathered[~matched] = fill_value(values.dtype)
+                ok = (valid[safe] if valid is not None
+                      else np.ones(len(safe), dtype=bool)) & matched
+            else:                       # empty right side: all-NULL col
+                gathered = np.full(len(safe), fill_value(values.dtype),
+                                   dtype=values.dtype)
+                ok = np.zeros(len(safe), dtype=bool)
+            out[n] = (gathered, ok)
+        return out
+
+    @staticmethod
+    def _key_validity(cols: Columns, on: Sequence[str]) -> np.ndarray:
+        """Rows whose every join key is non-NULL (validity mask AND no
+        ``None`` payload in object columns)."""
+        ok = np.ones(_column_length(cols), dtype=bool)
+        for k in on:
+            values, valid = cols[k]
+            ok &= payload_validity(values, valid)
+        return ok
+
+    # -- aggregation ----------------------------------------------------
+    def group_by_sum(self, cols: Columns, keys: Sequence[str],
+                     value: str, out: str) -> Columns:
+        # SQL aggregate semantics over nullable columns: NULL values are
+        # skipped by SUM (a group whose values are all NULL sums to
+        # NULL), and NULL keys form their own single group.
+        n = _column_length(cols)
+        kcols = [cols[k][0] for k in keys]
+        kvalid = [self._validity(cols[k]) for k in keys]
+        vals, vvalid_mask = cols[value]
+        vvalid = self._validity(cols[value])
+        groups: dict[tuple, Any] = {}
+        order: list[tuple] = []
+        for i in range(n):
+            k = tuple(c[i] if kvalid[j][i] and c[i] is not None else _NULL
+                      for j, c in enumerate(kcols))
+            if k not in groups:
+                groups[k] = None          # SUM over no non-NULL values
+                order.append(k)
+            v = vals[i]
+            if vvalid[i] and v is not None:
+                groups[k] = v if groups[k] is None else groups[k] + v
+        data: dict[str, tuple[np.ndarray, np.ndarray | None]] = {}
+        for j, kname in enumerate(keys):
+            dt = kcols[j].dtype
+            fill = fill_value(dt)
+            colvals = np.array([fill if k[j] is _NULL else k[j]
+                                for k in order], dtype=dt)
+            mask = np.array([k[j] is not _NULL for k in order], dtype=bool)
+            data[kname] = (colvals, mask)
+        vdt = vals.dtype
+        vfill = fill_value(vdt)
+        data[out] = (
+            np.array([vfill if groups[k] is None else groups[k]
+                      for k in order], dtype=vdt),
+            np.array([groups[k] is not None for k in order], dtype=bool))
+        return data
+
+    @staticmethod
+    def _validity(col: tuple[np.ndarray, "np.ndarray | None"]) -> np.ndarray:
+        values, valid = col
+        return (valid if valid is not None
+                else np.ones(len(values), dtype=bool))

@@ -1,0 +1,105 @@
+"""Masked segment-sum Pallas TPU kernel (the GROUP BY SUM hot loop).
+
+Tiling: grid = (n_seg_tiles, n_row_tiles) with the *row* dimension
+minor (sequential), so each segment tile's accumulator lives in the
+revisited output block across row steps — the same carried-accumulator
+pattern as the flash-attention kernel's n_kv dimension. Inputs are
+reshaped to (n_row_tiles, block_n) so every BlockSpec stays 2D
+(TPU-friendly; 1D iota is illegal on TPU — the guide's broadcasted_iota
+rule).
+
+Per grid step the body scatters one (block_n,) slab of values into one
+(block_s,) slab of segments via a one-hot mask + VPU reduction — no MXU
+matmul, so integer sums stay exact (integer addition is associative
+even under wraparound; only float sums are order-sensitive, covered by
+tolerance in tests). Lanes outside [seg_start, seg_end), invalid lanes,
+and row padding all fall out of the same one-hot mask.
+
+VMEM at (block_n=1024, block_s=512), f32: in slabs 3·4KB + one-hot
+bool 512KB + out 2·2KB ≈ 0.53MB « 16MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segsum_body(v_ref, id_ref, m_ref, sum_ref, cnt_ref, *,
+                 block_n: int, block_s: int):
+    si = pl.program_id(0)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    vals = v_ref[0, :]                       # (block_n,)
+    ids = id_ref[0, :]
+    msk = m_ref[0, :] != 0
+    local = ids - si * block_s               # segment id within this tile
+    # one-hot scatter mask: lane i contributes to segment column j iff
+    # its (valid, in-tile) id equals j. 2D iota per the TPU guide.
+    seg = jax.lax.broadcasted_iota(jnp.int32, (block_n, block_s), 1)
+    onehot = ((seg == local[:, None])
+              & msk[:, None]
+              & (local >= 0)[:, None]
+              & (local < block_s)[:, None])
+    zero = jnp.zeros((), sum_ref.dtype)
+    contrib = jnp.where(onehot, vals[:, None].astype(sum_ref.dtype),
+                        zero)
+    sum_ref[0, :] += jnp.sum(contrib, axis=0)
+    cnt_ref[0, :] += jnp.sum(onehot.astype(jnp.int32), axis=0)
+
+
+def masked_segment_sum_kernel(values, segment_ids, valid,
+                              num_segments: int, *,
+                              block_n: int = 1024, block_s: int = 512,
+                              interpret: bool = True):
+    """values: (n,); segment_ids: (n,) int32; valid: (n,) bool.
+
+    Pads n to a block_n multiple (padding lanes masked invalid) and
+    num_segments to a block_s multiple (sliced off on return).
+    Returns (sums (num_segments,) values.dtype, counts (num_segments,)
+    int32).
+    """
+    n = values.shape[0]
+    block_n = max(1, min(block_n, n)) if n else 1
+    block_s = max(1, min(block_s, num_segments))
+    pad_n = (-n) % block_n if n else block_n
+    if pad_n:
+        values = jnp.pad(values, (0, pad_n))
+        segment_ids = jnp.pad(segment_ids, (0, pad_n))
+        valid = jnp.pad(valid, (0, pad_n))   # False: padding is masked
+    s_pad = ((num_segments + block_s - 1) // block_s) * block_s
+    n_row_tiles = values.shape[0] // block_n
+    n_seg_tiles = s_pad // block_s
+
+    v2 = values.reshape(n_row_tiles, block_n)
+    id2 = segment_ids.astype(jnp.int32).reshape(n_row_tiles, block_n)
+    m2 = valid.astype(jnp.int32).reshape(n_row_tiles, block_n)
+
+    body = functools.partial(_segsum_body, block_n=block_n,
+                             block_s=block_s)
+    sums, counts = pl.pallas_call(
+        body,
+        grid=(n_seg_tiles, n_row_tiles),
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda s, r: (r, 0)),
+            pl.BlockSpec((1, block_n), lambda s, r: (r, 0)),
+            pl.BlockSpec((1, block_n), lambda s, r: (r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_s), lambda s, r: (s, 0)),
+            pl.BlockSpec((1, block_s), lambda s, r: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_seg_tiles, block_s), values.dtype),
+            jax.ShapeDtypeStruct((n_seg_tiles, block_s), jnp.int32),
+        ],
+        interpret=interpret,
+    )(v2, id2, m2)
+    return (sums.reshape(-1)[:num_segments],
+            counts.reshape(-1)[:num_segments])

@@ -1,0 +1,30 @@
+"""Jit'd public wrapper: XLA segment_sum or the Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.segment_sum.kernel import masked_segment_sum_kernel
+from repro.kernels.segment_sum.ref import masked_segment_sum_ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_segments", "use_pallas", "block_n", "block_s", "interpret"))
+def masked_segment_sum(values, segment_ids, valid, num_segments: int, *,
+                       use_pallas: bool = False,
+                       block_n: int = 1024, block_s: int = 512,
+                       interpret: bool = True):
+    """Per-segment SUM over valid lanes + valid-lane counts.
+
+    ``use_pallas=False`` (default) lowers to XLA's scatter-add
+    (``jax.ops.segment_sum``); ``use_pallas=True`` runs the tiled
+    Pallas kernel (``interpret=True`` on CPU containers — TPU is the
+    compile target). Both return (sums values.dtype, counts int32).
+    """
+    if not use_pallas:
+        return masked_segment_sum_ref(values, segment_ids, valid,
+                                      num_segments)
+    return masked_segment_sum_kernel(
+        values, segment_ids, valid, num_segments,
+        block_n=block_n, block_s=block_s, interpret=interpret)

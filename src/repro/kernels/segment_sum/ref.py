@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the masked segment-sum kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_segment_sum_ref(values, segment_ids, valid,
+                           num_segments: int):
+    """Per-segment SUM over valid lanes + per-segment valid-lane counts.
+
+    values: (n,) numeric; segment_ids: (n,) int32 in [0, num_segments);
+    valid: (n,) bool. Returns (sums (num_segments,) values.dtype,
+    counts (num_segments,) int32). SQL SUM semantics live one level up:
+    a segment with count 0 is a NULL sum (the caller masks it).
+    """
+    masked = jnp.where(valid, values, jnp.zeros((), values.dtype))
+    sums = jax.ops.segment_sum(masked, segment_ids,
+                               num_segments=num_segments)
+    counts = jax.ops.segment_sum(valid.astype(jnp.int32), segment_ids,
+                                 num_segments=num_segments)
+    return sums, counts

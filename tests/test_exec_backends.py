@@ -1,0 +1,456 @@
+"""Differential suite for the pluggable execution backends (§9).
+
+Every registered backend must reproduce the ``reference`` row-loop
+oracle bit for bit — values, validity masks, row order, and the typed
+fills in invalid lanes (all of it hashed by ``Table.fingerprint``) —
+on join / group-by / filter / concat over random nullable tables,
+including the PR 2 NULL-semantics regressions. One documented
+carve-out (base.py): float SUM results compare with tolerance, because
+summation order is not part of the semantics contract.
+
+Deliberately hypothesis-free (seeded ``default_rng`` sweeps) so the
+differential gate runs on minimal installs; the hypothesis sweep lives
+in test_exec_backends_prop.py.
+"""
+import numpy as np
+import pytest
+
+from repro import exec as exec_backends
+from repro.data.tables import Table, col, lit
+
+BACKENDS = exec_backends.available_backends()
+OTHERS = [b for b in BACKENDS if b != "reference"]
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def random_table(n: int, seed: int) -> Table:
+    """Nullable mixed-dtype table: int64/str/float64 keys (NULLs and
+    NaNs included), object-int and int32 values."""
+    r = np.random.default_rng(seed)
+    k_int = r.integers(0, 6, n).astype(np.int64)
+    k_str = np.array(
+        [None if r.random() < 0.2 else f"k{int(x) % 4}" for x in k_int],
+        dtype=object)
+    f = r.normal(size=n)
+    f[r.random(n) < 0.15] = np.nan
+    v_obj = np.array(
+        [None if r.random() < 0.25 else int(r.integers(-50, 50))
+         for _ in range(n)], dtype=object)
+    v32 = r.integers(-1000, 1000, n).astype(np.int32)
+    return Table({"ki": k_int, "ks": k_str, "f": f,
+                  "v": v_obj, "v32": v32})
+
+
+def assert_tables_equal(a: Table, b: Table, float_cols=()):
+    """Bit-for-bit equality (via repr, so NaN == NaN and None == None),
+    except ``float_cols`` which compare to 1e-9 rtol on valid lanes."""
+    assert a.column_names() == b.column_names()
+    assert len(a) == len(b)
+    for c in a.column_names():
+        assert a.validity(c).tolist() == b.validity(c).tolist(), c
+        if c in float_cols:
+            m = a.validity(c)
+            np.testing.assert_allclose(
+                a.column(c)[m].astype(float),
+                b.column(c)[m].astype(float), rtol=1e-9, atol=0)
+        else:
+            assert ([repr(x) for x in a.column(c)]
+                    == [repr(y) for y in b.column(c)]), c
+
+
+SEEDS = range(6)
+KEYSETS = (["ki"], ["ks"], ["f"], ["ki", "ks"], ["ks", "f"])
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_reference_and_vectorized_always_available():
+    assert {"reference", "vectorized"} <= set(BACKENDS)
+
+
+def test_default_backend_is_vectorized():
+    assert exec_backends.DEFAULT_BACKEND == "vectorized"
+    # the active backend resolves (may have been switched by env)
+    assert exec_backends.active_backend().name in BACKENDS
+
+
+def test_env_selects_default(monkeypatch):
+    monkeypatch.setenv("REPRO_EXEC_BACKEND", "reference")
+    assert exec_backends._default_name() == "reference"
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(KeyError, match="unknown execution backend"):
+        exec_backends.get_backend("nope")
+    t = Table({"a": np.array([1], dtype=np.int64)})
+    with pytest.raises(KeyError):
+        t.filter(col("a") >= lit(0), backend="nope")
+
+
+def test_use_backend_scopes_and_restores():
+    before = exec_backends.active_backend().name
+    with exec_backends.use_backend("reference") as be:
+        assert be.name == "reference"
+        assert exec_backends.active_backend().name == "reference"
+    assert exec_backends.active_backend().name == before
+
+
+def test_per_call_override_beats_active():
+    t = Table({"k": np.array([1, 1, 2], dtype=np.int64),
+               "v": np.array([1, 2, 3], dtype=np.int64)})
+    with exec_backends.use_backend("vectorized"):
+        g = t.group_by_sum(["k"], "v", out="s", backend="reference")
+    assert g.to_pydict() == {"k": [1, 2], "s": [3, 3]}
+
+
+def test_unavailable_backend_reports_cleanly():
+    exec_backends.register(
+        "broken", lambda: (_ for _ in ()).throw(ImportError("no dep")))
+    try:
+        with pytest.raises(exec_backends.BackendUnavailable,
+                           match="no dep"):
+            exec_backends.get_backend("broken")
+        assert "broken" not in exec_backends.available_backends()
+    finally:
+        exec_backends._factories.pop("broken", None)
+
+
+# ---------------------------------------------------------------------------
+# differential: join
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", OTHERS)
+@pytest.mark.parametrize("how", ["inner", "left"])
+@pytest.mark.parametrize("keys", KEYSETS, ids=lambda k: "+".join(k))
+def test_join_matches_reference(backend, how, keys):
+    for seed in SEEDS:
+        left = random_table(40, seed)
+        right = random_table(25, seed + 100).select(
+            [col("ki"), col("ks"), col("f"), col("v32").alias("rv")])
+        want = left.join(right, on=keys, how=how, backend="reference")
+        got = left.join(right, on=keys, how=how, backend=backend)
+        assert_tables_equal(want, got)
+        assert want.fingerprint() == got.fingerprint(), (seed, keys)
+
+
+@pytest.mark.parametrize("backend", OTHERS)
+@pytest.mark.parametrize("how", ["inner", "left"])
+def test_join_edge_shapes(backend, how):
+    left = Table({"k": np.arange(5, dtype=np.int64),
+                  "l": np.arange(5, dtype=np.int64)})
+    empty = Table({"k": np.array([], dtype=np.int64),
+                   "r": np.array([], dtype=np.int64)})
+    nomatch = Table({"k": np.array([99], dtype=np.int64),
+                     "r": np.array([1], dtype=np.int64)})
+    sparse = Table({"k": np.array([2**40, 3], dtype=np.int64),
+                    "r": np.array([7, 8], dtype=np.int64)})
+    for right in (empty, nomatch, sparse):
+        want = left.join(right, on=["k"], how=how, backend="reference")
+        got = left.join(right, on=["k"], how=how, backend=backend)
+        assert_tables_equal(want, got)
+        # and the mirrored direction (empty/probe-side asymmetries)
+        want = right.join(left, on=["k"], how=how, backend="reference")
+        got = right.join(left, on=["k"], how=how, backend=backend)
+        assert_tables_equal(want, got)
+
+
+@pytest.mark.parametrize("backend", OTHERS)
+def test_join_cross_kind_keys_compare_exactly(backend):
+    """int64 vs float64 keys must match by exact Python equality — a
+    float64 promotion would collapse 2**53 with 2**53 + 1."""
+    left = Table({"k": np.array([2**53, 2**53 + 1], dtype=np.int64),
+                  "l": np.array([1, 2], dtype=np.int64)})
+    right = Table({"k": np.array([float(2**53)]),
+                   "r": np.array([10], dtype=np.int64)})
+    for how in ("inner", "left"):
+        want = left.join(right, on=["k"], how=how, backend="reference")
+        got = left.join(right, on=["k"], how=how, backend=backend)
+        assert_tables_equal(want, got)
+    assert left.join(right, on=["k"], backend=backend).num_rows == 1
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_group_by_sum_zero_rows(backend):
+    """A filter that matches nothing must aggregate to an empty table,
+    not crash (empty-codes IndexError regression)."""
+    t = Table({"k": np.array([1, 2], dtype=np.int64),
+               "v": np.array([3, 4], dtype=np.int64)})
+    empty = t.filter(col("v") > lit(100))
+    g = empty.group_by_sum(["k"], "v", out="s", backend=backend)
+    assert g.num_rows == 0
+    assert g.column("s").dtype == np.int64
+    assert g.column_names() == ["k", "s"]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_join_fanout_duplicate_right_keys(backend):
+    """Matches expand in right-occurrence order per left row."""
+    left = Table({"k": np.array([2, 1, 2], dtype=np.int64),
+                  "l": np.array([0, 1, 2], dtype=np.int64)})
+    right = Table({"k": np.array([2, 1, 2], dtype=np.int64),
+                   "r": np.array([20, 10, 21], dtype=np.int64)})
+    j = left.join(right, on=["k"], backend=backend)
+    assert j.to_pydict() == {
+        "k": [2, 2, 1, 2, 2], "l": [0, 0, 1, 2, 2],
+        "r": [20, 21, 10, 20, 21]}
+
+
+# ---------------------------------------------------------------------------
+# differential: group_by_sum / filter / concat
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", OTHERS)
+@pytest.mark.parametrize("keys", KEYSETS, ids=lambda k: "+".join(k))
+def test_group_by_sum_matches_reference(backend, keys):
+    for seed in SEEDS:
+        t = random_table(50, seed)
+        for value, float_sum in (("v", False), ("v32", False),
+                                 ("f", True)):
+            want = t.group_by_sum(keys, value, out="s",
+                                  backend="reference")
+            got = t.group_by_sum(keys, value, out="s", backend=backend)
+            assert_tables_equal(want, got,
+                                float_cols=("s",) if float_sum else ())
+            if not float_sum:
+                assert want.fingerprint() == got.fingerprint()
+
+
+@pytest.mark.parametrize("backend", OTHERS)
+def test_filter_and_concat_match_reference(backend):
+    for seed in SEEDS:
+        t = random_table(30, seed)
+        pred = col("v32") > lit(0)
+        assert_tables_equal(t.filter(pred, backend="reference"),
+                            t.filter(pred, backend=backend))
+        u = random_table(20, seed + 7)
+        assert_tables_equal(t.concat(u, backend="reference"),
+                            t.concat(u, backend=backend))
+
+
+# ---------------------------------------------------------------------------
+# PR 2 NULL-semantics regressions, re-run against every backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_join_null_keys_match_nothing(backend):
+    left = Table({"k": np.array([None, "a"], dtype=object),
+                  "l": np.array([1, 2], dtype=np.int64)})
+    right = Table({"k": np.array([None, "a"], dtype=object),
+                   "r": np.array([10, 20], dtype=np.int64)})
+    j = left.join(right, on=["k"], backend=backend)
+    assert j.to_pydict() == {"k": ["a"], "l": [2], "r": [20]}
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_group_by_sum_null_semantics(backend):
+    t = Table({"k": np.array([None, "a", None], dtype=object),
+               "v": np.array([1, 2, 4], dtype=np.int64)})
+    g = t.group_by_sum(["k"], "v", out="s", backend=backend)
+    assert g.to_pydict() == {"k": [None, "a"], "s": [5, 2]}
+    t2 = Table({"k": np.array(["a", "b"], dtype=object),
+                "v": np.array([None, 3], dtype=object)})
+    g2 = t2.group_by_sum(["k"], "v", out="s", backend=backend)
+    assert g2.to_pydict() == {"k": ["a", "b"], "s": [None, 3]}
+    assert g2.has_nulls("s")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_join_respects_validity_masks_after_roundtrip(backend):
+    from repro.core.store import MemoryStore
+    store = MemoryStore()
+    left = Table({"k": np.array([None, "a"], dtype=object),
+                  "l": np.array([1, 2], dtype=np.int64)})
+    left = Table.from_blobs(store, left.to_blobs(store))
+    right = Table({"k": np.array(["a"], dtype=object),
+                   "r": np.array([20], dtype=np.int64)})
+    assert left.join(right, on=["k"], backend=backend).num_rows == 1
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_nan_keys_match_nothing_in_joins(backend):
+    """NaN != NaN: float NaN keys behave like NULLs in join equality."""
+    left = Table({"k": np.array([np.nan, 1.5]),
+                  "l": np.array([1, 2], dtype=np.int64)})
+    right = Table({"k": np.array([np.nan, 1.5]),
+                   "r": np.array([10, 20], dtype=np.int64)})
+    j = left.join(right, on=["k"], backend=backend)
+    assert j.to_pydict() == {"k": [1.5], "l": [2], "r": [20]}
+    jl = left.join(right, on=["k"], how="left", backend=backend)
+    assert jl.num_rows == 2 and jl.to_pydict()["r"] == [None, 20]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_nan_keys_group_separately(backend):
+    """Each NaN key is its own group (NaN != NaN), while NULLs
+    collapse into one — the reference dict semantics."""
+    t = Table({"k": np.array([np.nan, 1.0, np.nan]),
+               "v": np.array([1, 2, 4], dtype=np.int64)})
+    g = t.group_by_sum(["k"], "v", out="s", backend=backend)
+    assert g.num_rows == 3
+    assert g.to_pydict()["s"] == [1, 2, 4]
+
+
+# ---------------------------------------------------------------------------
+# left join semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_left_join_unmatched_rows_null_right(backend):
+    left = Table({"k": np.array(["a", None, "b"], dtype=object),
+                  "l": np.array([1, 2, 3], dtype=np.int64)})
+    right = Table({"k": np.array(["a", "a"], dtype=object),
+                   "r": np.array([10, 11], dtype=np.int64)})
+    j = left.join(right, on=["k"], how="left", backend=backend)
+    assert j.to_pydict() == {
+        "k": ["a", "a", None, "b"], "l": [1, 1, 2, 3],
+        "r": [10, 11, None, None]}
+    assert j.has_nulls("r") and j.logical_dtype("r") == "int64"
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_left_join_validity_mask_of_right_columns(backend):
+    """Introduced NULLs are mask-NULLs with the canonical typed fill."""
+    left = Table({"k": np.array([5, 7], dtype=np.int64)})
+    right = Table({"k": np.array([5], dtype=np.int64),
+                   "r": np.array([1.5])})
+    j = left.join(right, on=["k"], how="left", backend=backend)
+    assert j.validity("r").tolist() == [True, False]
+    assert j.column("r")[1] == 0.0        # canonical numeric fill
+
+
+def test_join_rejects_unknown_how():
+    t = Table({"k": np.array([1], dtype=np.int64)})
+    with pytest.raises(NotImplementedError, match="inner, left"):
+        t.join(t, on=["k"], how="outer")
+
+
+# ---------------------------------------------------------------------------
+# group_by_sum output-name satellite
+# ---------------------------------------------------------------------------
+
+def test_group_by_sum_default_output_name():
+    t = Table({"k": np.array([1, 1], dtype=np.int64),
+               "v": np.array([2, 3], dtype=np.int64)})
+    g = t.group_by_sum(["k"], "v")
+    assert g.column_names() == ["k", "v_sum"]
+    assert g.to_pydict() == {"k": [1], "v_sum": [5]}
+
+
+def test_group_by_sum_default_name_decollides_against_keys():
+    t = Table({"v_sum": np.array([1, 1], dtype=np.int64),
+               "v": np.array([2, 3], dtype=np.int64)})
+    g = t.group_by_sum(["v_sum"], "v")
+    assert g.column_names() == ["v_sum", "v_sum_1"]
+
+
+def test_group_by_sum_explicit_collision_raises():
+    t = Table({"k": np.array([1], dtype=np.int64),
+               "v": np.array([2], dtype=np.int64)})
+    with pytest.raises(ValueError, match="collides with a group key"):
+        t.group_by_sum(["k"], "v", out="k")
+
+
+# ---------------------------------------------------------------------------
+# Expr._binop object-dtype hardening satellite
+# ---------------------------------------------------------------------------
+
+def test_binop_arithmetic_over_nullable_object_column():
+    """None payloads in masked lanes must not reach the ufunc: this
+    used to raise TypeError from None - 1."""
+    t = Table({"v": np.array([None, 2, 5], dtype=object)})
+    f = t.filter((col("v") - 1) > lit(1))
+    assert f.to_pydict() == {"v": [5]}
+
+
+def test_binop_comparison_over_nullable_object_column():
+    t = Table({"v": np.array([None, 2, 5], dtype=object)})
+    assert t.filter(col("v") < lit(3)).to_pydict() == {"v": [2]}
+
+
+def test_binop_two_nullable_object_columns():
+    t = Table({"a": np.array([None, 2, 4], dtype=object),
+               "b": np.array([1, None, 4], dtype=object)})
+    f = t.filter((col("a") + col("b")) >= lit(8))
+    assert f.to_pydict() == {"a": [4], "b": [4]}
+
+
+def test_binop_null_lanes_carry_canonical_fill():
+    """Arithmetic over nullable object columns leaves None (the
+    canonical object fill) in masked lanes, so logically identical
+    tables fingerprint identically regardless of construction path."""
+    t = Table({"a": np.array([1, None], dtype=object),
+               "b": np.array([2, 3], dtype=object)})
+    built = t.select([(col("a") + col("b")).alias("s")])
+    direct = Table({"s": np.array([3, None], dtype=object)})
+    assert built.to_pydict() == direct.to_pydict() == {"s": [3, None]}
+    assert built.fingerprint() == direct.fingerprint()
+
+
+def test_binop_fully_valid_numeric_path_unchanged():
+    t = Table({"a": np.array([1.0, 2.0])})
+    out = t.select([(col("a") * 2).alias("d")])
+    assert out.column("d").dtype == np.float64
+    np.testing.assert_array_equal(out.column("d"), [2.0, 4.0])
+
+
+# ---------------------------------------------------------------------------
+# engine cache keys record the backend
+# ---------------------------------------------------------------------------
+
+def _toy_client_and_plan():
+    from repro.core import schema as S
+    from repro.core.dag import Pipeline
+    from repro.core.planner import plan
+    from repro.core.runner import Client
+
+    Src = S.Schema.of("Src", k=int, v=int)
+    Agg = S.Schema.of("Agg", k=S.Nullable[int], s=S.Nullable[int])
+
+    p = Pipeline("backend_fp")
+    p.source("src", Src)
+
+    @p.node()
+    def agg(df: Src = "src") -> Agg:
+        return df.group_by_sum(["k"], "v", out="s")
+
+    client = Client()
+    client.write_source_table("main", "src", Table({
+        "k": np.array([1, 1, 2], dtype=np.int64),
+        "v": np.array([10, 20, 30], dtype=np.int64)}))
+    return client, plan(p)
+
+
+def test_cache_key_moves_with_backend_switch():
+    from repro.core.engine import cache_key
+
+    client, pl = _toy_client_and_plan()
+    step = pl.steps[0]
+    snaps = {"df": "snap0"}
+    with exec_backends.use_backend("vectorized"):
+        k_vec = cache_key(step, snaps)
+    with exec_backends.use_backend("reference"):
+        k_ref = cache_key(step, snaps)
+    assert k_vec is not None and k_ref is not None
+    assert k_vec != k_ref
+
+
+def test_backend_switch_never_serves_cross_backend_cache_hit():
+    client, pl = _toy_client_and_plan()
+    with exec_backends.use_backend("vectorized"):
+        r1 = client.run(pl, "main")
+        assert r1.executed == ("agg",)
+        r2 = client.run(pl, "main")
+        assert r2.executed == () and r2.cached == ("agg",)
+    with exec_backends.use_backend("reference"):
+        r3 = client.run(pl, "main")       # other backend: key moved
+        assert r3.executed == ("agg",)
+        r4 = client.run(pl, "main")       # same backend: hits again
+        assert r4.executed == ()
+    with exec_backends.use_backend("vectorized"):
+        r5 = client.run(pl, "main")       # original entry still live
+        assert r5.executed == ()

@@ -1,0 +1,83 @@
+"""Hypothesis property sweep over the execution backends (§9).
+
+Generates random nullable tables (NULL keys AND NULL values, string
+and integer dtypes — the exact-equality subset of the semantics
+contract) and asserts every registered backend agrees with the
+``reference`` oracle bit for bit, via ``Table.fingerprint`` (which
+hashes values, validity masks, and the fills in invalid lanes).
+
+Mirrors test_tables.py: skips cleanly without hypothesis; the seeded
+deterministic sweep in test_exec_backends.py runs everywhere.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property sweeps need hypothesis (pip install -r "
+           "requirements-dev.txt)")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import exec as exec_backends
+from repro.data.tables import Table
+
+BACKENDS = exec_backends.available_backends()
+
+keys_st = st.lists(
+    st.one_of(st.none(), st.sampled_from(["a", "b", "c", "d"])),
+    min_size=0, max_size=25)
+vals_st = st.lists(st.one_of(st.none(), st.integers(-100, 100)),
+                   min_size=0, max_size=25)
+
+
+def _table(keys, vals):
+    n = min(len(keys), len(vals))
+    return Table({
+        "k": np.array(keys[:n], dtype=object),
+        "v": np.array(vals[:n], dtype=object),
+        "i": np.arange(n, dtype=np.int64),
+    })
+
+
+@settings(max_examples=40, deadline=None)
+@given(lk=keys_st, lv=vals_st, rk=keys_st, rv=vals_st,
+       how=st.sampled_from(["inner", "left"]))
+def test_property_join_backends_agree(lk, lv, rk, rv, how):
+    from repro.data.tables import col
+    left = _table(lk, lv)
+    right = _table(rk, rv).select([col("k"), col("v").alias("w"),
+                                   col("i").alias("j")])
+    want = left.join(right, on=["k"], how=how, backend="reference")
+    for b in BACKENDS:
+        got = left.join(right, on=["k"], how=how, backend=b)
+        assert got.fingerprint() == want.fingerprint(), (b, how)
+
+
+@settings(max_examples=40, deadline=None)
+@given(k=keys_st, v=vals_st,
+       keyset=st.sampled_from([["k"], ["i"], ["k", "i"]]))
+def test_property_group_by_backends_agree(k, v, keyset):
+    t = _table(k, v)
+    # i is int64 mod 3: small int groups exercise the fast path
+    t = Table({"k": t.column("k"), "v": t.column("v"),
+               "i": t.column("i") % 3})
+    want = t.group_by_sum(keyset, "v", out="s", backend="reference")
+    for b in BACKENDS:
+        got = t.group_by_sum(keyset, "v", out="s", backend=b)
+        assert got.fingerprint() == want.fingerprint(), (b, keyset)
+    # invariant: non-NULL values sum is preserved across groups
+    total = sum(x for x in t.to_pydict()["v"] if x is not None)
+    got_total = sum(x for x in want.to_pydict()["s"] if x is not None)
+    assert total == got_total
+
+
+@settings(max_examples=30, deadline=None)
+@given(k=keys_st, v=vals_st, thresh=st.integers(-100, 100))
+def test_property_filter_backends_agree(k, v, thresh):
+    from repro.data.tables import col, lit
+    t = _table(k, v)
+    want = t.filter(col("v") >= lit(thresh), backend="reference")
+    for b in BACKENDS:
+        got = t.filter(col("v") >= lit(thresh), backend=b)
+        assert got.fingerprint() == want.fingerprint(), b
