@@ -7,13 +7,66 @@ checking moments. Each benchmark prints a CSV row:
 
     name,metric,value,unit,notes
 
+Benchmarks that emit a BENCH JSON document (columnar kernels, the
+sharded join) additionally have their documents written to canonical
+``BENCH_<name>.json`` files at the repo root — committed per PR, so
+``BENCH_*.json`` records the perf trajectory over time, not just in
+ephemeral CI artifacts.
+
 Run: ``PYTHONPATH=src python -m benchmarks.run``
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def write_bench_doc(doc: dict) -> str:
+    """Persist one benchmark's BENCH JSON to BENCH_<name>.json at the
+    repo root (the perf trajectory; see module docstring)."""
+    path = os.path.join(_REPO_ROOT, f"BENCH_{doc['bench']}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def bench_sharded_join_subprocess() -> "dict | None":
+    """The sharded-join gate needs XLA_FLAGS set before jax imports,
+    which this process has long passed — run it as a subprocess (smoke
+    size) and collect its BENCH document."""
+    out = os.path.join(_REPO_ROOT, "bench_sharded_join.tmp.json")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    # the forced-host mesh only multiplies the CPU platform: on
+    # accelerator hosts the child must also pin jax to cpu, or the
+    # default gpu/tpu backend keeps device_count()==1 and the gate
+    # aborts.
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = (os.path.join(_REPO_ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    try:
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.sharded_join",
+             "--smoke", "--json", out],
+            cwd=_REPO_ROOT, env=env, capture_output=True, text=True,
+            timeout=1800)
+        sys.stdout.write(r.stdout)
+        if r.returncode != 0:
+            raise RuntimeError(
+                f"sharded_join gate failed:\n{r.stderr[-2000:]}")
+        with open(out) as f:
+            return json.load(f)
+    finally:
+        if os.path.exists(out):
+            os.remove(out)
 
 
 def _t(fn, n=100, warmup=3):
@@ -270,7 +323,11 @@ def main() -> None:
     bench_validation()
     # execution-backend gate (DESIGN.md §9): asserts the vectorized
     # backend's speedup over the row-loop reference, smoke-sized.
-    bench_columnar(smoke=True)
+    write_bench_doc(bench_columnar(smoke=True))
+    # distributed-join gate (DESIGN.md §10): asserts the sharded
+    # backend's speedup over vectorized on the forced 8-device mesh
+    # (subprocess: the mesh must exist before jax initializes).
+    write_bench_doc(bench_sharded_join_subprocess())
     bench_pipeline_run()
     bench_train_step()
     bench_decode_step()

@@ -53,11 +53,16 @@ def cache_key(step: PlanStep,
     fingerprint, and declared casts (``Node.cache_material``). Dynamic
     half: the snapshot key of every input, keyed by *parameter* name —
     not merely the sorted key set, because a binary node applied to
-    ``(A, B)`` and ``(B, A)`` is a different evaluation — plus the name
-    of the active execution backend (DESIGN.md §9): all backends are
-    *supposed* to agree bit-for-bit, but a cache hit must never be the
-    mechanism that launders a divergent backend's output past that
-    claim, so switching backends moves every key. ``None`` if the node
+    ``(A, B)`` and ``(B, A)`` is a different evaluation — plus the
+    *cache token* of the active execution backend (DESIGN.md §9/§10):
+    all backends are *supposed* to agree bit-for-bit, but a cache hit
+    must never be the mechanism that launders a divergent backend's
+    output past that claim, so switching backends moves every key. The
+    token extends the bare name with ambient execution state the
+    backend depends on — device-mesh shape / shard count for the
+    ``jax``/``sharded``/``auto`` backends — because a mesh change
+    regroups float SUM summation order under the documented carve-out
+    and must never serve a stale cross-mesh hit. ``None`` if the node
     is not content-addressable (e.g. it captures state that cannot be
     fingerprinted stably): such nodes always execute.
     """
@@ -66,7 +71,8 @@ def cache_key(step: PlanStep,
         return None
     h = hashlib.sha256()
     h.update(material.encode())
-    h.update(f"|backend={exec_backends.active_backend().name}".encode())
+    h.update(
+        f"|backend={exec_backends.active_backend().cache_token()}".encode())
     for param in sorted(input_snapshots):
         h.update(f"|{param}={input_snapshots[param]}".encode())
     return h.hexdigest()[:32]

@@ -37,6 +37,13 @@ class PlanStep:
     report: EdgeReport
     elided_null_checks: frozenset[str]  # statically discharged (App. A)
     wave: int = 0                       # dependency level (DESIGN.md §8)
+    # per-input table statistics (repro.exec.stats.TableStats), keyed
+    # by table name — recorded when the caller supplies stats for the
+    # tables it can see (sources; intermediate outputs are unknown at
+    # the control-plane moment). Feeds observability and the ``auto``
+    # execution backend's decision table (DESIGN.md §10); absence means
+    # "unknown", never "empty".
+    input_stats: "Mapping[str, object] | None" = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,14 +84,25 @@ class Plan:
         for s in self.steps:
             el = (f" [elided null-checks: {sorted(s.elided_null_checks)}]"
                   if s.elided_null_checks else "")
-            lines.append(f"  [wave {s.wave}] {s.report.describe()}{el}")
+            st = ""
+            if s.input_stats:
+                st = " [stats: " + "; ".join(
+                    f"{t} {v.describe() if hasattr(v, 'describe') else v}"
+                    for t, v in sorted(s.input_stats.items())) + "]"
+            lines.append(f"  [wave {s.wave}] {s.report.describe()}{el}{st}")
         return "\n".join(lines)
 
 
-def plan(pipeline: Pipeline) -> Plan:
+def plan(pipeline: Pipeline,
+         table_stats: "Mapping[str, object] | None" = None) -> Plan:
     """Validate and compile a pipeline into an executable Plan.
 
     Raises errors at Moment.CONTROL_PLANE; nothing here touches data.
+    ``table_stats`` optionally maps table names to
+    :class:`repro.exec.stats.TableStats` (e.g. collected from catalog
+    snapshots): each step records the stats of the inputs it reads in
+    ``PlanStep.input_stats`` — control-plane metadata for the scheduler
+    and the ``auto`` execution backend, never a correctness input.
     """
     # 1. structure: topo sort raises on cycles / missing inputs.
     order = pipeline.topo_order()
@@ -123,8 +141,13 @@ def plan(pipeline: Pipeline) -> Plan:
         wave = max((node_wave[t] + 1 for t in node.inputs.values()
                     if t in node_wave), default=0)
         node_wave[node.name] = wave
+        stats = None
+        if table_stats:
+            stats = {t: table_stats[t] for t in node.inputs.values()
+                     if t in table_stats} or None
         steps.append(PlanStep(node=node, report=report,
-                              elided_null_checks=elided, wave=wave))
+                              elided_null_checks=elided, wave=wave,
+                              input_stats=stats))
         published[node.name] = node.output_schema
 
     return Plan(pipeline_name=pipeline.name,

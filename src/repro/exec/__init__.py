@@ -10,7 +10,14 @@ is swappable:
   differential-testing oracle;
 - ``vectorized`` — numpy factorize/sort kernels, the default;
 - ``jax``       — accelerator segment-sum aggregation (XLA or the
-  Pallas kernel), registered only when JAX imports.
+  Pallas kernel), registered only when JAX imports;
+- ``sharded``   — mesh-partitioned distributed hash join (radix
+  all_to_all exchange + per-shard probe under ``shard_map``, Pallas
+  hash-probe kernel available), inheriting the jax aggregation;
+  registered only when JAX imports (DESIGN.md §10);
+- ``auto``      — statistics-driven per-call selection among the
+  above (exec/auto.py's decision table); always constructs, degrades
+  to the host backends on JAX-less installs.
 
 Selection, in precedence order:
 
@@ -151,6 +158,18 @@ def _jax_factory() -> Backend:
     return JaxBackend()
 
 
+def _sharded_factory() -> Backend:
+    from repro.exec.sharded import ShardedBackend  # imports jax
+    return ShardedBackend()
+
+
+def _auto_factory() -> Backend:
+    from repro.exec.auto import AutoBackend  # no hard deps
+    return AutoBackend()
+
+
 register("reference", _reference_factory)
 register("vectorized", _vectorized_factory)
 register("jax", _jax_factory)
+register("sharded", _sharded_factory)
+register("auto", _auto_factory)

@@ -1,0 +1,175 @@
+"""Statistics-driven backend auto-selection (the ``auto`` policy).
+
+``auto`` is a registered backend that never executes an operator
+itself: each call collects :mod:`~repro.exec.stats` for its inputs and
+delegates to the registered backend the decision table picks. The
+table is deliberately small and fully unit-tested
+(``tests/test_sharded_join.py``):
+
+====================  ==========================================  =========
+operation             condition (first match wins)                backend
+====================  ==========================================  =========
+join / group_by_sum   total rows <= tiny (64)                     reference
+join                  single int key, span <= 4*(nl+nr)+1024      vectorized
+join                  rows >= shard_rows AND >1 device            sharded
+join                  anything else                               vectorized
+group_by_sum          rows >= device_rows AND dtype lowers        jax
+group_by_sum          anything else                               vectorized
+====================  ==========================================  =========
+
+Rationale per row: tiny tables are dominated by per-call constants,
+where the interpreted reference's plain dicts beat any array setup;
+dense single-int-key joins hit the vectorized backend's direct-address
+bincount probe, which no device round-trip amortizes; large joins are
+the one place the mesh pays (the sharded radix exchange); large
+aggregations lower to the segment-sum kernel when the value dtype can
+live on the device. A picked backend that turns out unavailable on
+this install (no JAX) degrades one row down, never errors.
+
+Thresholds are tunable by env (``REPRO_AUTO_TINY_ROWS``,
+``REPRO_AUTO_SHARD_ROWS``, ``REPRO_AUTO_DEVICE_ROWS``) because they
+are machine constants, not semantics: every candidate agrees with
+``reference`` bit for bit, so a wrong pick costs time, never
+correctness. The engine folds :meth:`AutoBackend.cache_token` — policy
+version, thresholds, and device count — into node cache keys, so a
+policy or mesh change can never serve a stale cross-backend cache hit.
+"""
+from __future__ import annotations
+
+import os
+from typing import Sequence
+
+import numpy as np
+
+from repro.exec.base import Backend, Columns
+from repro.exec.stats import TableStats, collect_stats
+
+__all__ = ["AutoBackend", "choose_join", "choose_group_by"]
+
+_POLICY_VERSION = 1
+
+TINY_ROWS = int(os.environ.get("REPRO_AUTO_TINY_ROWS", "64"))
+SHARD_ROWS = int(os.environ.get("REPRO_AUTO_SHARD_ROWS", "200000"))
+DEVICE_ROWS = int(os.environ.get("REPRO_AUTO_DEVICE_ROWS", "100000"))
+
+
+def _dense_span(left: TableStats, right: TableStats) -> bool:
+    """The vectorized backend's own direct-address affordability
+    predicate over the JOINT key span (from the stats' key bounds —
+    per-side spans alone underestimate without bound when the two
+    sides' key ranges are disjoint, e.g. ids vs ids + 1e9, and would
+    mis-route exactly the cache-missing joins the sharded row
+    exists to catch)."""
+    from repro.exec.vectorized import dense_span_affordable
+    if None in (left.int_key_lo, left.int_key_hi,
+                right.int_key_lo, right.int_key_hi):
+        return False
+    span = (max(left.int_key_hi, right.int_key_hi)
+            - min(left.int_key_lo, right.int_key_lo) + 1)
+    return dense_span_affordable(span, left.n_rows + right.n_rows)
+
+
+def choose_join(left: TableStats, right: TableStats, *,
+                n_devices: int = 1,
+                sharded_available: bool = False) -> str:
+    """The stats -> backend decision table for joins (pure function —
+    the unit under test)."""
+    total = left.n_rows + right.n_rows
+    if total <= TINY_ROWS:
+        return "reference"
+    if (left.single_int_key and right.single_int_key
+            and _dense_span(left, right)):
+        return "vectorized"
+    if total >= SHARD_ROWS and n_devices > 1 and sharded_available:
+        return "sharded"
+    return "vectorized"
+
+
+def choose_group_by(stats: TableStats, value_dtype: np.dtype, *,
+                    jax_available: bool = False) -> str:
+    """The stats -> backend decision table for aggregation."""
+    if stats.n_rows <= TINY_ROWS:
+        return "reference"
+    if stats.n_rows >= DEVICE_ROWS and jax_available \
+            and _lowers(value_dtype):
+        return "jax"
+    return "vectorized"
+
+
+def _lowers(dtype: np.dtype) -> bool:
+    from repro.kernels import fallback
+    return fallback.device_supports_dtype(dtype)
+
+
+class AutoBackend(Backend):
+    name = "auto"
+
+    def __init__(self):
+        self._n_devices: int | None = None
+
+    # -- registry probes (lazy: auto must construct on JAX-less installs)
+    def _available(self, name: str) -> bool:
+        from repro import exec as exec_backends
+        try:
+            exec_backends.get_backend(name)
+        except (KeyError, exec_backends.BackendUnavailable):
+            return False
+        return True
+
+    def _devices(self) -> int:
+        if self._n_devices is None:
+            try:
+                import jax
+                self._n_devices = len(jax.devices())
+            except ImportError:
+                self._n_devices = 1
+        return self._n_devices
+
+    def _delegate(self, name: str) -> Backend:
+        from repro import exec as exec_backends
+        if name != "vectorized" and not self._available(name):
+            name = "vectorized"
+        return exec_backends.get_backend(name)
+
+    def cache_token(self) -> str:
+        # compose the possible delegates' own tokens: a per-call
+        # policy means any state that would move a delegate's key
+        # (device count, segment-sum Pallas flag, jax appearing on the
+        # install) must move auto's key too — otherwise a regrouped
+        # float SUM could be served from a pre-regrouping cache entry.
+        delegated = ",".join(
+            self._delegate_token(n) for n in ("jax", "sharded"))
+        return (f"auto[v{_POLICY_VERSION};tiny={TINY_ROWS};"
+                f"shard={SHARD_ROWS};device={DEVICE_ROWS};"
+                f"devices={self._devices()};{delegated}]")
+
+    def _delegate_token(self, name: str) -> str:
+        from repro import exec as exec_backends
+        if not self._available(name):
+            return f"{name}=-"
+        return exec_backends.get_backend(name).cache_token()
+
+    # -- operators -------------------------------------------------------
+    def hash_join(self, left: Columns, right: Columns,
+                  on: Sequence[str], how: str = "inner") -> Columns:
+        # the decision table reads rows/kinds/span only — skip the
+        # cardinality sampling pass on the dispatch hot path.
+        choice = choose_join(
+            collect_stats(left, on, estimate_cardinality=False),
+            collect_stats(right, on, estimate_cardinality=False),
+            n_devices=self._devices(),
+            sharded_available=self._available("sharded"))
+        return self._delegate(choice).hash_join(left, right, on, how)
+
+    def group_by_sum(self, cols: Columns, keys: Sequence[str],
+                     value: str, out: str) -> Columns:
+        values, _ = cols[value]
+        choice = choose_group_by(
+            collect_stats(cols, keys, estimate_cardinality=False),
+            values.dtype,
+            jax_available=self._available("jax"))
+        return self._delegate(choice).group_by_sum(cols, keys, value,
+                                                   out)
+
+    # filter_select / concat: the shared default implementations are
+    # already a plain gather/concatenate — nothing to select between.

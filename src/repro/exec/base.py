@@ -80,6 +80,17 @@ class Backend:
 
     name: str = "?"
 
+    def cache_token(self) -> str:
+        """What the engine folds into node cache keys (DESIGN.md §9/§10).
+
+        The name alone for host backends; backends whose execution
+        depends on ambient machine state (device mesh shape, shard
+        count, auto-selection policy) must extend it so that state
+        change moves every key — a cache hit must never survive a
+        regrouping that the float-SUM summation-order carve-out makes
+        observable."""
+        return self.name
+
     # -- joins ----------------------------------------------------------
     def hash_join(self, left: Columns, right: Columns,
                   on: Sequence[str], how: str = "inner") -> Columns:

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.exec.vectorized import VectorizedBackend
+from repro.kernels import fallback
 from repro.kernels.segment_sum.ops import masked_segment_sum
 
 __all__ = ["JaxBackend"]
@@ -46,10 +47,24 @@ class JaxBackend(VectorizedBackend):
         self.use_pallas = use_pallas
         self.interpret = interpret
 
+    def cache_token(self) -> str:
+        # device reductions regroup float SUMs (the documented
+        # carve-out), and the Pallas kernel tiles differently from XLA
+        # scatter-add — both are summation-order state a cache hit must
+        # not survive.
+        suffix = "+pallas" if self.use_pallas else ""
+        return f"{self.name}{suffix}[devices={len(jax.devices())}]"
+
     def _supported(self, dtype: np.dtype) -> bool:
-        if dtype == object or dtype.kind not in "iuf":
-            return False
-        if dtype.itemsize > 4 and not jax.config.jax_enable_x64:
+        """Route through the shared numpy-fallback plumbing
+        (kernels.fallback): a 64-bit dtype that cannot lower because
+        ``jax_enable_x64`` is off warns ONCE naming the env fix —
+        degraded perf used to be silent (the whole op quietly ran the
+        numpy path)."""
+        if not fallback.device_supports_dtype(dtype):
+            if fallback.x64_is_the_fix(dtype):
+                fallback.warn_numpy_fallback(
+                    f"{self.name}.group_by_sum", dtype)
             return False
         return True
 

@@ -1,0 +1,528 @@
+"""Shard-aware distributed hash join across the JAX device mesh.
+
+Extends the ``jax`` backend (which already runs aggregation through
+``kernels/segment_sum``) with a mesh-parallel ``hash_join``: the join
+inner loop — the dominant cost of every pipeline wave — is partitioned
+over a 1-D ``("shard",)`` mesh so each device owns one key range and
+probes only its cache-resident slice, instead of the vectorized
+backend's whole-table binary search whose every step misses cache at
+1e6+ rows. DESIGN.md §10.
+
+Division of labor (host steps are numpy, device steps run under
+``shard_map``):
+
+1. **Key coding** (host). Single same-kind integer keys are rebased to
+   ``key - min`` and ship raw when the span fits int32 — no
+   factorization at all, the sharded twin of the vectorized backend's
+   direct-address fast path, except the key space is *distributed*:
+   each shard owns ``span/ndev`` of it, so the trick keeps working at
+   spans where the single-host bincount heuristic gives up. Everything
+   else (multi-column, object, cross-kind, wide-span keys) goes
+   through the existing joint factorization
+   (``vectorized._join_codes``) to dense codes — the factorization IS
+   the hash, so the per-shard slot space is perfect (collision-free).
+   64-bit keys that cannot lower because ``jax_enable_x64`` is off
+   degrade to the vectorized backend through the shared
+   ``kernels.fallback`` plumbing — loudly, not silently. Unmatchable
+   rows (NULL / NaN keys) are coded to the dtype-max sentinel.
+2. **Radix partition** (host). Rows are counting-sorted (a per-chunk
+   byte radix pass — no comparison sort anywhere on the host path)
+   into ``(src_device, owner_shard, capacity)`` slabs — owner =
+   contiguous key range, or a mixing hash for wide-span raw keys.
+   Capacity is exact (one bincount), so the exchange can never
+   overflow; shapes round to powers of two so the jit cache stays
+   small. The host keeps the permutation, so devices exchange *keys
+   only* and results map back with pure index arithmetic.
+3. **all_to_all + per-shard probe** (device). A tiled ``all_to_all``
+   turns the src-major slabs into owner-major rows (arrival order ==
+   global row order — this is what preserves the reference's
+   right-occurrence order). Each shard sorts its build keys (one
+   single-operand sort; sentinels sink to the end) and emits per probe
+   lane the (start, count) of its match run. Two probe strategies:
+
+   - default: two ``searchsorted`` passes over the shard-local sorted
+     run — with build sides deduplicated by construction (the common
+     FK shape, detected on device by an adjacent-equal scan) the
+     grouped layout is the sorted order itself and per-lane ranks come
+     from one more binary search; duplicate build keys take a
+     ``lax.cond`` branch that stable-sorts (key, arrival) pairs
+     instead.
+   - ``REPRO_HASHJOIN_PALLAS=1`` (the TPU compile target): build the
+     open-addressing (start, count) direct-address table over the
+     shard's slot range and probe it through ``kernels/hash_join`` —
+     the Pallas one-hot probe kernel, or its XLA gather oracle under
+     ``interpret``-less CPU runs. Mirrors ``kernels/segment_sum``:
+     the kernel is the accelerator path, the host default is whatever
+     measures fastest there.
+4. **Ragged emission** (host). Per-shard (start, count) pairs are
+   offset by the shard's stride, scattered back to original left row
+   order through the kept permutation, and expanded by the vectorized
+   backend's ``_emit_join`` — which is what makes the output
+   bit-for-bit identical to ``reference``, row order included.
+
+Aggregation, filter and concat are inherited (segment-sum kernel /
+numpy): the ROADMAP item this implements is specifically the
+distributed join.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_map
+from repro.exec.base import Columns, _column_length, payload_validity
+from repro.exec.jax_backend import JaxBackend
+from repro.exec.vectorized import _join_codes
+from repro.kernels import fallback
+from repro.kernels.hash_join.ops import hash_probe
+
+__all__ = ["ShardedBackend"]
+
+# Key spans up to this use contiguous-range partitioning with a
+# power-of-two per-shard slot space ("table" mode — required for the
+# Pallas direct-address path; also keeps the bucket computation a pure
+# shift with the dtype-max sentinel safely out of shard range). Wider
+# key spaces hash-partition ("hash" mode); anything that fits int32
+# still ships as int32.
+MAX_TABLE_SPAN = 1 << 26
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
+
+
+def _round_cap(n: int) -> int:
+    """Slab capacity rounding: up to the next multiple of the value's
+    third-highest bit — at most 12.5% padding (a pure power of two
+    wastes up to 2x at awkward sizes), while keeping the set of
+    distinct jit shapes small."""
+    n = max(int(n), 64)
+    gran = max(64, 1 << (n.bit_length() - 3))
+    return -(-n // gran) * gran
+
+
+def _mix32(h: np.ndarray) -> np.ndarray:
+    """Deterministic int32 mixing hash (wraparound multiply)."""
+    h = h ^ (h >> np.int32(16))
+    with np.errstate(over="ignore"):
+        h = (h * np.int32(0x45D9F3B)).astype(np.int32)
+    h = h ^ (h >> np.int32(13))
+    return h & np.int32(0x7FFFFFFF)
+
+
+@functools.lru_cache(maxsize=None)
+def _get_mesh(ndev: int):
+    return jax.make_mesh((ndev,), ("shard",),
+                         devices=jax.devices()[:ndev])
+
+
+@functools.lru_cache(maxsize=64)
+def _probe_fn(ndev: int, cap_l: int, cap_r: int, span_shard: int,
+              np_dtype: str, use_pallas: bool, interpret: bool):
+    """Build + jit the shard_map'd exchange-and-probe for one static
+    signature. Unmatchable lanes (NULL/NaN keys and slab padding)
+    carry the dtype-max sentinel and can match nothing: they sort to
+    the end, fall outside every table slot, and are masked out of
+    counts. ``span_shard`` > 0 selects the direct-address slot space
+    of "table" mode (required for the Pallas path); 0 means wide-span
+    raw keys."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = _get_mesh(ndev)
+    dtype = np.dtype(np_dtype)
+    sent = dtype.type(np.iinfo(dtype).max)
+
+    def exchange(slab):                  # (1, ndev, cap) -> (ndev*cap,)
+        x = jax.lax.all_to_all(slab[0], "shard", split_axis=0,
+                               concat_axis=0, tiled=True)
+        # src-major flatten: arrival order == global row order, which
+        # is what lets the grouped layouts below reproduce the
+        # reference's right-occurrence order within a key.
+        return x.reshape(-1)
+
+    def probe_packed(lk, rk):
+        """Packed-sort strategy for int32 keys (the CPU-mesh default).
+
+        One single-operand sort of ``key << 32 | arrival`` orders the
+        build side by key with ties in arrival — i.e. global row —
+        order, so the grouped layout AND its arrival translation
+        (``gidx``) fall out of the same sort with no stable pair sort,
+        no scatter, and no separate duplicate-key path. Sentinel lanes
+        (padding / NULL keys) pack highest and sink to the tail. The
+        probe is one binary search; the count is a hit-check gather
+        when the build keys are unique (the common FK shape) and a
+        second binary search otherwise."""
+        m = rk.shape[0]
+        iota = jnp.arange(m, dtype=jnp.int64)
+        packed = (rk.astype(jnp.int64) << 32) | iota
+        p_srt = jax.lax.sort(packed)
+        k_srt = (p_srt >> 32).astype(jnp.int32)
+        gidx = (p_srt & jnp.int64(0xFFFFFFFF)).astype(jnp.int32)
+        starts = jnp.searchsorted(k_srt, lk).astype(jnp.int32)
+        dup = jnp.any((k_srt[1:] == k_srt[:-1]) & (k_srt[1:] != sent))
+
+        def fast(_):
+            hit = (k_srt[jnp.minimum(starts, m - 1)] == lk) \
+                & (lk != sent)
+            return hit.astype(jnp.int32)
+
+        def slow(_):
+            ends = jnp.searchsorted(k_srt, lk, side="right")
+            return jnp.where(lk != sent,
+                             ends - starts.astype(ends.dtype),
+                             0).astype(jnp.int32)
+
+        counts = jax.lax.cond(dup, slow, fast, None)
+        return starts, counts, gidx
+
+    def probe_wide(lk, rk):
+        """int64 keys (jax_enable_x64 verified upstream): stable
+        (key, arrival) pair sort + two binary searches."""
+        m = rk.shape[0]
+        iota = jnp.arange(m, dtype=jnp.int32)
+        k_srt, gidx = jax.lax.sort((rk, iota), num_keys=1,
+                                   is_stable=True)
+        starts = jnp.searchsorted(k_srt, lk, side="left")
+        ends = jnp.searchsorted(k_srt, lk, side="right")
+        counts = jnp.where(lk != sent, ends - starts, 0)
+        return (starts.astype(jnp.int32), counts.astype(jnp.int32),
+                gidx)
+
+    def probe_table(lk, rk):
+        """Direct-address strategy (the Pallas/TPU path): build the
+        open-addressing (start, count) table over this shard's slot
+        range, probe through kernels/hash_join. Grouped layout is
+        arrival order (unique) or sorted order (duplicates)."""
+        m = rk.shape[0]
+        iota = jnp.arange(m, dtype=jnp.int32)
+        base = (jax.lax.axis_index("shard") * span_shard).astype(
+            jnp.int32)
+        slot_r = rk - base               # sentinel -> far out of range
+        slot_l = lk - base
+        counts_tab = jnp.zeros(span_shard, jnp.int32).at[slot_r].add(
+            1, mode="drop")
+        unique = jnp.max(counts_tab, initial=0) <= 1
+
+        def fast(_):
+            # unique build keys: the grouped layout IS arrival order;
+            # start[slot] = the one arrival position.
+            pos_tab = jnp.full(span_shard, -1, jnp.int32).at[
+                slot_r].set(iota, mode="drop")
+            return pos_tab, iota
+
+        def slow(_):
+            # duplicate keys: stable-sort the shard by slot (ties keep
+            # arrival == global row order) and scatter-min run starts.
+            srt, gidx = jax.lax.sort(
+                (jnp.where(rk != sent, slot_r, span_shard), iota),
+                num_keys=1, is_stable=True)
+            pos_tab = jnp.full(span_shard, m, jnp.int32).at[srt].min(
+                jnp.arange(m, dtype=jnp.int32), mode="drop")
+            return pos_tab, gidx
+
+        pos_tab, gidx = jax.lax.cond(unique, fast, slow, None)
+        starts, counts = hash_probe(pos_tab, counts_tab, slot_l,
+                                    use_pallas=use_pallas,
+                                    interpret=interpret)
+        return starts, counts, gidx
+
+    def body(l_slab, r_slab):
+        # build side: all_to_all so each device owns every row of its
+        # key range. Probe side: the host already laid slabs out
+        # owner-major (same src-major arrival order the exchange would
+        # produce), so probes just flatten — one collective, not two.
+        lk = l_slab[0].reshape(-1)
+        rk = exchange(r_slab)
+        if use_pallas and span_shard:
+            probe = probe_table
+        elif dtype.itemsize > 4:
+            probe = probe_wide
+        else:
+            probe = probe_packed
+        starts, counts, gidx = probe(lk, rk)
+        return starts[None, :], counts[None, :], gidx[None, :]
+
+    spec = P("shard", None, None)
+    out = P("shard", None)
+    mapped = shard_map(body, mesh=mesh, in_specs=(spec, spec),
+                       out_specs=(out, out, out), check_vma=False)
+    shard = NamedSharding(mesh, spec)
+    return jax.jit(mapped, in_shardings=(shard, shard))
+
+
+class ShardedBackend(JaxBackend):
+    name = "sharded"
+
+    def __init__(self, *, n_devices: int | None = None,
+                 use_pallas: bool | None = None,
+                 use_pallas_probe: bool | None = None,
+                 interpret: bool | None = None):
+        super().__init__(use_pallas=use_pallas, interpret=interpret)
+        if use_pallas_probe is None:
+            use_pallas_probe = os.environ.get(
+                "REPRO_HASHJOIN_PALLAS") == "1"
+        self.use_pallas_probe = use_pallas_probe
+        self.n_devices = (n_devices if n_devices is not None
+                          else len(jax.devices()))
+
+    # cache-key interaction (DESIGN.md §10): a mesh change regroups row
+    # placement (and, through the inherited device aggregation, float
+    # SUM summation order under the documented carve-out), so the shard
+    # count must move every engine cache key — and so must the
+    # inherited segment-sum Pallas flag, whose tiling regroups float
+    # sums too. The probe strategy flag is deliberately absent: probe
+    # outputs are integer-exact identical across strategies.
+    def cache_token(self) -> str:
+        suffix = "+pallas" if self.use_pallas else ""
+        return f"{self.name}{suffix}[devices={self.n_devices}]"
+
+    # -- join -----------------------------------------------------------
+    def hash_join(self, left: Columns, right: Columns,
+                  on: Sequence[str], how: str = "inner") -> Columns:
+        n_left = _column_length(left)
+        n_right = _column_length(right)
+        ndev = max(1, self.n_devices)
+        if (n_left == 0 or n_right == 0
+                or n_left >= 2**31 or n_right >= 2**31
+                or ndev > 255):          # buckets are uint8
+            return super().hash_join(left, right, on, how)
+
+        keyed = self._device_keys(left, right, on)
+        if keyed is None:               # cannot lower: vectorized path
+            return super().hash_join(left, right, on, how)
+        lk, rk, span = keyed
+        if span == 0:                   # no valid key anywhere
+            return self._emit_join(
+                left, right, how, n_left,
+                np.zeros(n_left, np.int64), np.zeros(n_left, np.int64),
+                np.array([], dtype=np.int64))
+        # power-of-two per-shard slot space: buckets become a shift and
+        # the dtype-max sentinel lands safely past the last shard.
+        span_shard = (_next_pow2(-(-span // ndev))
+                      if 0 < span <= MAX_TABLE_SPAN else 0)
+
+        lb = _buckets(lk, ndev, span_shard)
+        rb = _buckets(rk, ndev, span_shard)
+        l_slab, l_idx, cap_l = _partition(lk, lb, ndev)
+        r_slab, r_idx, cap_r = _partition(rk, rb, ndev)
+        if ndev * cap_l >= 2**31 or ndev * cap_r >= 2**31:
+            # padded per-shard lane counts must fit the int32 arrival
+            # positions the probes pack — possible past ~2e9 rows with
+            # heavy bucket skew even though the raw row counts passed
+            # the guard above.
+            return super().hash_join(left, right, on, how)
+        # probe side ships owner-major (src stays the minor axis, so
+        # per-device arrival order matches what the build side's
+        # all_to_all produces).
+        l_slab = np.ascontiguousarray(l_slab.transpose(1, 0, 2))
+
+        fn = _probe_fn(ndev, cap_l, cap_r, span_shard, lk.dtype.str,
+                       self.use_pallas_probe, self.interpret)
+        # the packed/wide probes carry int64 intermediates; the x64
+        # scope is thread-local and only governs types traced inside.
+        with jax.experimental.enable_x64():
+            out = fn(l_slab, r_slab)
+        starts, counts, gidx = (np.asarray(o) for o in out)
+
+        # map device results back through the kept permutation: the
+        # grouped layout is the per-shard arrival order permuted by
+        # gidx, and arrival order is the host's own slab layout — so
+        # the translation to global row ids is one gather, and padding
+        # arrival cells (-1) become holes the emission never reads.
+        # Per-key runs are contiguous on exactly one shard, so
+        # concatenating shard layouts (stride = ndev*cap_r) is a valid
+        # grouped layout for the shared ragged emission.
+        stride = ndev * cap_r
+        arr_l = l_idx.transpose(1, 0, 2).reshape(ndev, ndev * cap_l)
+        arr_r = r_idx.transpose(1, 0, 2).reshape(ndev, stride)
+        ridx = np.take_along_axis(
+            arr_r, gidx.astype(np.int64, copy=False), axis=1
+        ).reshape(-1)
+        # int64 accumulators: the ragged emission cumsums counts, and
+        # a >2**31-row join output must not wrap there.
+        starts_g = np.zeros(n_left, np.int64)
+        counts_g = np.zeros(n_left, np.int64)
+        m = arr_l >= 0
+        starts_g[arr_l[m]] = (starts.astype(np.int64)
+                              + (np.arange(ndev, dtype=np.int64)
+                                 * stride)[:, None])[m]
+        counts_g[arr_l[m]] = counts[m]
+        return self._emit_join(left, right, how, n_left, starts_g,
+                               counts_g,
+                               ridx.astype(np.int64, copy=False))
+
+    # -- key coding ------------------------------------------------------
+    def _device_keys(self, left: Columns, right: Columns,
+                     on: Sequence[str]):
+        """(lkeys, rkeys, span) with unmatchable rows already coded to
+        the dtype-max sentinel; span > 0 = int32 slot codes ("table"
+        mode), span < 0 = raw keys, hash partition ("hash" mode);
+        span == 0 = no valid keys at all. None when the keys cannot
+        lower to the device without losing bits (the shared
+        numpy-fallback plumbing warns)."""
+        raw = self._raw_int_keys(left, right, on)
+        if raw is not None:
+            return raw
+        lcodes, rcodes = _join_codes(left, right, on)
+        card = int(max(lcodes.max(initial=-1),
+                       rcodes.max(initial=-1))) + 1
+        if card == 0:
+            return lcodes.astype(np.int32), rcodes.astype(np.int32), 0
+        if card >= 2**31 - 64:
+            # row counts are int32-checked upstream, so a cardinality
+            # past the int32 code space is unreachable in practice —
+            # keep the guard anyway (codes must fit int32 + sentinel).
+            fallback.warn_numpy_fallback(
+                "sharded.hash_join", np.dtype(np.int64),
+                reason="joint key cardinality exceeds the int32 code "
+                       "space")
+            return None
+        sent = np.int32(np.iinfo(np.int32).max)
+        lk = lcodes.astype(np.int32)
+        rk = rcodes.astype(np.int32)
+        lk[lk < 0] = sent
+        rk[rk < 0] = sent
+        return lk, rk, card
+
+    def _raw_int_keys(self, left: Columns, right: Columns,
+                      on: Sequence[str]):
+        """Single same-kind integer key: ship rebased raw values (numpy
+        equality == Python equality for int kinds), skipping
+        factorization — the sharded twin of the vectorized
+        direct-address fast path, distributed so it scales past the
+        single-host span budget."""
+        if len(on) != 1:
+            return None
+        lv, lval = left[on[0]]
+        rv, rval = right[on[0]]
+        if (lv.dtype == object or rv.dtype == object
+                or lv.dtype.kind not in "iu"
+                or lv.dtype.kind != rv.dtype.kind):
+            return None
+        lok = payload_validity(lv, lval)
+        rok = payload_validity(rv, rval)
+        if not lok.any() or not rok.any():
+            return None                   # codes path handles trivially
+        lo = min(int(lv[lok].min()), int(rv[rok].min()))
+        hi = max(int(lv[lok].max()), int(rv[rok].max()))
+        span = hi - lo + 1
+        sent32 = np.int32(np.iinfo(np.int32).max)
+        if (0 <= lo and hi < 2**31 - 64
+                and (hi < MAX_TABLE_SPAN or span > MAX_TABLE_SPAN)):
+            # values are already valid int32 slot codes — no rebase
+            # pass; span = hi+1 keeps shard 0 a touch wider, which the
+            # exact capacity computation absorbs. NOT taken when only
+            # the rebased span fits the table budget (dense-but-offset
+            # keys): the shortcut must never cost table mode — and
+            # with it the Pallas probe path — that the rebase below
+            # would keep.
+            lk = lv.astype(np.int32)
+            rk = rv.astype(np.int32)
+            lk[~lok] = sent32
+            rk[~rok] = sent32
+            return lk, rk, hi + 1
+        if span <= 2**31 - 64:
+            # rebase to slot codes: the distributed key space absorbs
+            # the sparsity (span/ndev slots per shard). Two exact
+            # routes: uint64 subtracts in its native dtype (lo is the
+            # joint min, so no wrap — an int64 intermediate would
+            # overflow past 2**63); every other kind widens to int64
+            # first (native-width subtraction would wrap int8/int16
+            # spans, and lo — the min across BOTH sides, possibly a
+            # wider dtype — need not fit the narrow dtype at all).
+            # Either way the rebased values are < span < 2**31.
+            def rebase(v):
+                if v.dtype.kind == "u" and v.dtype.itemsize == 8:
+                    return (v - v.dtype.type(lo)).astype(np.int32)
+                return (v.astype(np.int64) - lo).astype(np.int32)
+
+            lk = rebase(lv)
+            rk = rebase(rv)
+            lk[~lok] = sent32
+            rk[~rok] = sent32
+            return lk, rk, span
+        if -2**63 <= lo and hi <= 2**63 - 2:
+            if not fallback.device_supports_dtype(np.dtype(np.int64)):
+                # NOT a whole-op fallback: the join still runs on the
+                # mesh through factorized int32 codes — what degrades
+                # is the key coding (a host np.unique pass replaces
+                # shipping raw int64 keys). Warn with the accurate
+                # scope, still naming the env fix.
+                fallback.warn_numpy_fallback(
+                    "sharded.hash_join", lv.dtype,
+                    reason="wide-span 64-bit keys take the host "
+                           "factorization path; enable jax_enable_x64 "
+                           "(e.g. JAX_ENABLE_X64=1) to ship raw int64 "
+                           "keys to the device")
+                return None               # codes path (still sharded)
+            sent = np.int64(np.iinfo(np.int64).max)
+            lk = lv.astype(np.int64)
+            rk = rv.astype(np.int64)
+            lk[~lok] = sent
+            rk[~rok] = sent
+            return lk, rk, -1
+        return None                       # uint64 tail: codes path
+
+
+def _buckets(keys: np.ndarray, ndev: int, span_shard: int
+             ) -> np.ndarray:
+    """Owner shard per row, uint8; >= ndev for unmatchable rows (they
+    sort to the tail of every chunk and are never placed).
+
+    Range mode is a single shift: span_shard is a power of two no
+    wider than MAX_TABLE_SPAN/ndev, so the int32 sentinel (all ones
+    below bit 31) shifts to >= 255 — no separate sentinel pass."""
+    if span_shard > 0:
+        sh = span_shard.bit_length() - 1
+        # valid codes shift below ndev; the sentinel shifts to at least
+        # 16*ndev, so clipping to ndev (the drop bucket) is exact.
+        return np.minimum(keys >> sh, ndev).astype(np.uint8)
+    sent = keys.dtype.type(np.iinfo(keys.dtype).max)
+    if keys.dtype.itemsize > 4:
+        folded = ((keys >> 32) ^ keys).astype(np.int32)
+    else:
+        folded = keys.astype(np.int32)
+    b = _mix32(folded).astype(np.int64) % ndev
+    return np.where(keys != sent, b, ndev).astype(np.uint8)
+
+
+def _partition(keys: np.ndarray, buckets: np.ndarray, ndev: int
+               ) -> tuple[np.ndarray, np.ndarray, int]:
+    """Host radix partition into (src, owner, cap) slabs.
+
+    One byte-radix (counting) argsort per source chunk — numpy's
+    stable integer argsort is a radix sort, so the host path never
+    pays a comparison sort. Returns (key slabs, original-row-index
+    slabs (-1 padding), cap). Stable per (src, owner) pair — rows keep
+    original order, which the device-side arrival order inherits.
+    """
+    n = len(keys)
+    chunk = -(-n // ndev)
+    counts = np.bincount(
+        (np.arange(n, dtype=np.int64) // chunk) * (ndev + 1) + buckets,
+        minlength=ndev * (ndev + 1)).reshape(ndev, ndev + 1)
+    cap = _round_cap(int(counts[:, :ndev].max()))
+    sent = keys.dtype.type(np.iinfo(keys.dtype).max)
+    slab = np.full((ndev, ndev, cap), sent, dtype=keys.dtype)
+    idx = np.full((ndev, ndev, cap), -1, dtype=np.int32)
+    for s in range(ndev):
+        lo = s * chunk
+        hi = min(n, lo + chunk)
+        if lo >= hi:
+            continue
+        order = np.argsort(buckets[lo:hi], kind="stable")
+        ks = keys[lo:hi][order]
+        rows = (order + lo).astype(np.int32)
+        off = 0
+        for d in range(ndev):
+            c = int(counts[s, d])
+            slab[s, d, :c] = ks[off:off + c]
+            idx[s, d, :c] = rows[off:off + c]
+            off += c
+    return slab, idx, cap

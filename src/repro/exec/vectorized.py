@@ -39,7 +39,15 @@ import numpy as np
 from repro.exec.base import (Backend, Columns, _column_length, fill_value,
                              payload_validity)
 
-__all__ = ["VectorizedBackend"]
+__all__ = ["VectorizedBackend", "dense_span_affordable"]
+
+
+def dense_span_affordable(span: int, n_rows: int) -> bool:
+    """Is a direct-address table over ``span`` key slots worth it for
+    ``n_rows`` total rows? The single source of truth for the
+    bincount fast path below AND for the ``auto`` policy's
+    dense-int-key row (exec/auto.py) — tune it in one place."""
+    return span <= 4 * n_rows + 1024
 
 
 # ---------------------------------------------------------------------------
@@ -210,7 +218,20 @@ class VectorizedBackend(Backend):
             starts = np.searchsorted(rsorted, lcodes, side="left")
             ends = np.searchsorted(rsorted, lcodes, side="right")
             counts = np.where(lcodes >= 0, ends - starts, 0)
+        return self._emit_join(left, right, how, n_left, starts, counts,
+                               ridx)
 
+    def _emit_join(self, left: Columns, right: Columns, how: str,
+                   n_left: int, starts: np.ndarray, counts: np.ndarray,
+                   ridx: np.ndarray) -> Columns:
+        """Ragged-match emission shared by every probe strategy.
+
+        ``ridx`` lists right rows grouped by key (matches for a key are
+        contiguous, in right-occurrence order); left row ``i``'s matches
+        are ``ridx[starts[i] : starts[i] + counts[i]]``. The grouped
+        layout need not be globally key-sorted — the sharded backend
+        concatenates per-shard runs — only per-key contiguous.
+        """
         unique_match = int(counts.max()) <= 1 if len(counts) else True
         if how == "inner":
             if unique_match:
@@ -294,7 +315,7 @@ class VectorizedBackend(Backend):
             mn = min(int(lvv.min()), int(rvv.min()))
             mx = max(int(lvv.max()), int(rvv.max()))
             span = mx - mn + 1
-            if (span <= 4 * (n_left + len(rvv)) + 1024
+            if (dense_span_affordable(span, n_left + len(rvv))
                     and -2**62 < mn and mx < 2**62):  # int64-safe math
                 # direct-address probe: per-key counts/offsets into the
                 # key-sorted ridx, then O(1) gathers per left row. The

@@ -1,0 +1,85 @@
+"""Shared numpy-fallback plumbing for the accelerator kernels.
+
+The jax-backed execution paths (``exec.jax_backend`` aggregation,
+``exec.sharded`` joins, ``kernels/hash_join`` probes) cannot represent
+every table dtype on the device: object columns never lower, and 64-bit
+numerics silently truncate to 32 bits unless ``jax_enable_x64`` is on
+(the JAX default is off). Truncation would be a *correctness* bug, so
+those paths fall back to the numpy implementation instead — but a
+silent fallback is a perf bug that nobody ever notices. Every fallback
+decision therefore routes through :func:`device_supports_dtype`, and
+the first x64-induced fallback per (op, dtype) emits a
+``warnings.warn`` naming the env fix, so degraded performance is
+observable without spamming one warning per batch.
+"""
+from __future__ import annotations
+
+import threading
+import warnings
+
+import numpy as np
+
+__all__ = ["device_supports_dtype", "warn_numpy_fallback",
+           "reset_fallback_warnings", "NumpyFallbackWarning"]
+
+
+class NumpyFallbackWarning(UserWarning):
+    """An accelerator path degraded to numpy (correctness-preserving)."""
+
+
+_lock = threading.Lock()
+_warned: set[tuple[str, str]] = set()
+
+
+def device_supports_dtype(dtype: np.dtype) -> bool:
+    """Can this dtype run on the device without losing bits?
+
+    Object columns and non-numeric kinds never lower; 64-bit numerics
+    need ``jax_enable_x64``. Callers that get ``False`` must take the
+    numpy path and SHOULD call :func:`warn_numpy_fallback` when the
+    cause is the x64 flag (i.e. the user could fix it with one env
+    var).
+    """
+    dtype = np.dtype(dtype)
+    if dtype == object or dtype.kind not in "iuf":
+        return False
+    if dtype.itemsize > 4:
+        import jax
+        return bool(jax.config.jax_enable_x64)
+    return True
+
+
+def x64_is_the_fix(dtype: np.dtype) -> bool:
+    """True when the ONLY reason ``dtype`` cannot lower is the x64 flag."""
+    dtype = np.dtype(dtype)
+    return dtype != object and dtype.kind in "iuf" and dtype.itemsize > 4
+
+
+def warn_numpy_fallback(op: str, dtype: np.dtype, *,
+                        reason: str | None = None) -> None:
+    """One-time (per op × dtype) warning that a device path degraded to
+    numpy. Names the env fix when the x64 flag is the cause."""
+    dtype = np.dtype(dtype)
+    key = (op, dtype.str)
+    with _lock:
+        if key in _warned:
+            return
+        _warned.add(key)
+    if reason is None:
+        if x64_is_the_fix(dtype):
+            reason = ("jax_enable_x64 is off; enable it (e.g. "
+                      "JAX_ENABLE_X64=1 or "
+                      "jax.config.update('jax_enable_x64', True)) to run "
+                      "this dtype on the device")
+        else:
+            reason = "dtype cannot be represented on the device"
+    warnings.warn(
+        f"{op}: falling back to the numpy path for dtype {dtype} — "
+        f"{reason}. Results are identical; only performance degrades.",
+        NumpyFallbackWarning, stacklevel=3)
+
+
+def reset_fallback_warnings() -> None:
+    """Test hook: forget which (op, dtype) pairs already warned."""
+    with _lock:
+        _warned.clear()

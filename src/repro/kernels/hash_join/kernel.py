@@ -1,0 +1,113 @@
+"""Hash-probe Pallas TPU kernel (the hash-join inner loop).
+
+Probes an open-addressing build table — (start, count) slot arrays in
+VMEM; ``ref.build_probe_table`` documents the canonical sorted-side
+construction, and ``exec.sharded.probe_table`` builds the equivalent
+arrival-order variant inline under ``shard_map`` — for a block of
+probe lanes at a time. TPU Pallas has no vector gather from VMEM, so
+the lookup is realized the same way the segment-sum kernel scatters:
+tile the table over the minor grid dimension and one-hot-reduce each
+table tile against the probe lanes' target slots. A lane's slot falls
+in exactly one tile (the hash is perfect over dense codes — see
+ref.py), so summing the masked contributions across table tiles IS
+the gather.
+
+Tiling: grid = (n_probe_tiles, n_table_tiles), table minor
+(sequential), so each probe tile's output block is revisited across
+table steps and carries the accumulated (start, count) — the same
+carried-accumulator pattern as the segment-sum kernel. All inputs are
+reshaped to 2D (TPU-friendly; 1D iota is illegal on TPU — the guide's
+broadcasted_iota rule). Invalid lanes (slot outside [0, table_size):
+NULL/NaN keys, other shards' ranges, padding) match no tile and emit
+count 0 — the masked probe.
+
+VMEM at (block_n=256, block_t=512), int32: slots 1KB + table slabs
+2·2KB + one-hot int32 512KB + out 2·1KB ≈ 0.52MB « 16MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probe_body(slot_ref, ts_ref, tc_ref, start_ref, cnt_ref, *,
+                block_n: int, block_t: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        start_ref[...] = jnp.zeros_like(start_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    slots = slot_ref[0, :]                   # (block_n,)
+    local = slots - ti * block_t             # slot within this table tile
+    # one-hot lookup mask: probe lane i reads table column j iff its
+    # slot lands on j in this tile. 2D iota per the TPU guide.
+    col = jax.lax.broadcasted_iota(jnp.int32, (block_n, block_t), 1)
+    onehot = ((col == local[:, None])
+              & (local >= 0)[:, None]
+              & (local < block_t)[:, None])
+    zero = jnp.zeros((), jnp.int32)
+    # dtype pinned: under an ambient jax_enable_x64 scope jnp.sum
+    # would otherwise accumulate int64 and fail the int32 ref store.
+    start_ref[0, :] += jnp.sum(
+        jnp.where(onehot, ts_ref[0, :][None, :], zero), axis=1,
+        dtype=jnp.int32)
+    cnt_ref[0, :] += jnp.sum(
+        jnp.where(onehot, tc_ref[0, :][None, :], zero), axis=1,
+        dtype=jnp.int32)
+
+
+def hash_probe_kernel(table_start, table_count, probe_slots, *,
+                      block_n: int = 256, block_t: int = 512,
+                      interpret: bool = True):
+    """probe_slots: (n,) int32; table_start/table_count: (T,) int32.
+
+    Pads n to a block_n multiple (padding lanes get slot -1, i.e.
+    masked) and T to a block_t multiple (empty slots carry count 0).
+    Returns (starts (n,) int32, counts (n,) int32) — bit-identical to
+    ``ref.hash_probe_ref``.
+    """
+    n = probe_slots.shape[0]
+    t = table_start.shape[0]
+    block_n = max(1, min(block_n, n)) if n else 1
+    block_t = max(1, min(block_t, t)) if t else 1
+    pad_n = (-n) % block_n if n else block_n
+    if pad_n:
+        probe_slots = jnp.pad(probe_slots, (0, pad_n),
+                              constant_values=-1)
+    pad_t = (-t) % block_t if t else block_t
+    if pad_t:
+        table_start = jnp.pad(table_start, (0, pad_t))
+        table_count = jnp.pad(table_count, (0, pad_t))
+    n_probe_tiles = probe_slots.shape[0] // block_n
+    n_table_tiles = table_start.shape[0] // block_t
+
+    s2 = probe_slots.astype(jnp.int32).reshape(n_probe_tiles, block_n)
+    ts2 = table_start.astype(jnp.int32).reshape(n_table_tiles, block_t)
+    tc2 = table_count.astype(jnp.int32).reshape(n_table_tiles, block_t)
+
+    body = functools.partial(_probe_body, block_n=block_n,
+                             block_t=block_t)
+    starts, counts = pl.pallas_call(
+        body,
+        grid=(n_probe_tiles, n_table_tiles),
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda p, ti: (p, 0)),
+            pl.BlockSpec((1, block_t), lambda p, ti: (ti, 0)),
+            pl.BlockSpec((1, block_t), lambda p, ti: (ti, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda p, ti: (p, 0)),
+            pl.BlockSpec((1, block_n), lambda p, ti: (p, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_probe_tiles, block_n), jnp.int32),
+            jax.ShapeDtypeStruct((n_probe_tiles, block_n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(s2, ts2, tc2)
+    return starts.reshape(-1)[:n], counts.reshape(-1)[:n]

@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for the hash-probe kernel (the join inner loop).
+
+The probe primitive answers, for every probe-side row, "where do my
+matches live?" against a *grouped build layout*: the build side's rows
+sorted by key slot, so all rows of one key are contiguous. The table is
+an open-addressing (start, count) slot array addressed by the key's
+slot. Because the execution backends probe *dense codes* produced by
+the joint key factorization (``exec.vectorized._join_codes``) rebased
+to the shard's key range, the hash is perfect — slot = code - base,
+collision chains have length one by construction — which is what lets
+the Pallas kernel probe with a single masked lookup per lane while
+keeping the (key, start, count) slot layout that a chained probe over
+non-dense keys would need.
+
+``build_probe_table`` builds the table from the slot array of the
+*sorted* build side: per-slot counts by scatter-add, per-slot starts by
+exclusive cumsum (valid exactly because the build rows are sorted by
+slot, so a slot's run begins after all smaller slots' rows).
+``hash_probe_ref`` is the XLA gather lookup — the oracle the Pallas
+kernel must reproduce exactly (int32 in, int32 out: no float, no
+carve-out).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def build_probe_table(slots_sorted, table_size: int):
+    """(table_start, table_count) int32 arrays of length ``table_size``.
+
+    ``slots_sorted``: (m,) int32 — shard-local slot per build row,
+    ascending over valid rows; invalid rows carry a slot outside
+    ``[0, table_size)`` (they sort to the end and are dropped by the
+    scatter). Empty slots read (start=whatever, count=0) — the probe
+    masks on count.
+    """
+    slots_sorted = slots_sorted.astype(jnp.int32)
+    in_range = (slots_sorted >= 0) & (slots_sorted < table_size)
+    idx = jnp.where(in_range, slots_sorted, table_size)
+    counts = jnp.zeros(table_size, jnp.int32).at[idx].add(
+        1, mode="drop")
+    starts = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    return starts, counts
+
+
+def hash_probe_ref(table_start, table_count, probe_slots):
+    """Masked probe: per probe lane, the (start, count) of its match run
+    in the slot-sorted build array; lanes whose slot is outside the
+    table (NULL/NaN keys, other shards' key ranges, padding) emit
+    count 0 — the ragged-match emission happens one level up, on the
+    host, exactly like the vectorized backend's expansion.
+    """
+    table_size = table_start.shape[0]
+    probe_slots = probe_slots.astype(jnp.int32)
+    ok = (probe_slots >= 0) & (probe_slots < table_size)
+    idx = jnp.where(ok, probe_slots, 0)
+    starts = jnp.where(ok, table_start[idx], 0)
+    counts = jnp.where(ok, table_count[idx], 0)
+    return starts, counts

@@ -73,6 +73,16 @@ def test_reference_and_vectorized_always_available():
     assert {"reference", "vectorized"} <= set(BACKENDS)
 
 
+def test_sharded_and_auto_register_with_jax():
+    """The whole differential suite below parametrizes over
+    available_backends(); this guard makes a silent deregistration of
+    the distributed backends fail loudly instead of shrinking the
+    sweep."""
+    assert "auto" in BACKENDS          # auto has no hard deps
+    pytest.importorskip("jax")
+    assert {"jax", "sharded"} <= set(BACKENDS)
+
+
 def test_default_backend_is_vectorized():
     assert exec_backends.DEFAULT_BACKEND == "vectorized"
     # the active backend resolves (may have been switched by env)
