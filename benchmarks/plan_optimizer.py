@@ -1,0 +1,182 @@
+"""Plan-optimizer gate (DESIGN.md §11): optimized vs unoptimized
+execution of a pushdown-heavy three-table pipeline.
+
+The workload is shaped so every rewrite the optimizer owns has teeth:
+a selective filter authored ABOVE a two-join chain (pushdown + probe
+fusion move it into the users-side masked probe), wide fact/users
+tables whose payload columns the output never references (dead-column
+elision skips gathering them — including an object-dtype column, the
+expensive one), and a final three-column projection. Join sizes keep
+the greedy reorder at the authored order, so the timed delta is
+pushdown + fusion + pruning — not the ``Reorder`` restoration lexsort.
+
+Correctness first, speed second: before timing, the optimized plan's
+published table must fingerprint identically to the unoptimized one
+(the differential-suite obligation, re-checked at benchmark scale).
+The gate asserts ``optimized >= 1.5x`` (``--smoke``: 1.2x) and that
+the optimizer actually rewrote the plan — a silently pass-free
+optimizer must fail the gate, not coast on equality.
+
+Run: ``PYTHONPATH=src python -m benchmarks.plan_optimizer [--smoke]``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+MIN_SPEEDUP = 1.5
+MIN_SPEEDUP_SMOKE = 1.2
+
+N_DEAD_COLS = 8
+
+
+def row(name, metric, value, unit, notes=""):
+    print(f"{name},{metric},{value:.6g},{unit},{notes}")
+
+
+def _best_of_interleaved(reps, fns):
+    """Best-of timing with the candidates interleaved per rep, so a
+    throttled / noisy host (CI runners, cgroup cpu shares) degrades
+    every candidate's reps alike instead of whichever ran last."""
+    best = {name: float("inf") for name in fns}
+    for _ in range(reps):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            fn()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return best
+
+
+def _pipeline():
+    from repro.core import schema as S
+    from repro.core.dag import Pipeline
+    from repro.data.tables import col
+
+    fact_cols = {"user_id": int, "item_id": int, "amount": float}
+    fact_cols.update({f"pay{i}": float for i in range(N_DEAD_COLS)})
+    Fact = S.Schema.of("Fact", **fact_cols)
+    Users = S.Schema.of("Users", user_id=int, segment=int, bio=str)
+    Items = S.Schema.of("Items", item_id=int, weight=float)
+    Out = S.Schema.of("Out", user_id=int, amount=float, weight=float)
+
+    p = Pipeline("pushdown_heavy")
+    p.source("fact", Fact)
+    p.source("users", Users)
+    p.source("items", Items)
+    p.sql(name="out", inputs={"f": "fact", "u": "users", "i": "items"},
+          input_schemas={"f": Fact, "u": Users, "i": Items},
+          output_schema=Out,
+          joins=[("users", ["user_id"]), ("items", ["item_id"])],
+          filter_expr=(col("segment") == 3),
+          exprs=[col("user_id"), col("amount"), col("weight")])
+    return p
+
+
+def _sources(n_fact, n_users, n_items):
+    from repro.data.tables import Table
+
+    rng = np.random.default_rng(0)
+    fact = {"user_id": rng.integers(0, n_users, n_fact),
+            "item_id": rng.integers(0, n_items, n_fact),
+            "amount": rng.normal(size=n_fact)}
+    for i in range(N_DEAD_COLS):
+        fact[f"pay{i}"] = rng.normal(size=n_fact)
+    users = {"user_id": np.arange(n_users, dtype=np.int64),
+             "segment": (np.arange(n_users) % 64).astype(np.int64),
+             "bio": np.array([f"user-{i}-bio" for i in range(n_users)],
+                             dtype=object)}
+    items = {"item_id": np.arange(n_items, dtype=np.int64),
+             "weight": rng.normal(size=n_items)}
+    return {"fact": Table(fact), "users": Table(users),
+            "items": Table(items)}
+
+
+def bench_plan_optimizer(smoke: bool = False,
+                         json_path: str | None = None,
+                         reps: int | None = None) -> dict:
+    from repro import exec as exec_backends
+    from repro.core.planner import plan
+    from repro.exec.stats import collect_stats
+    from repro.optimizer import DEFAULT_PASSES, optimize
+
+    n_fact = 120_000 if smoke else 400_000
+    n_users, n_items = ((30_000, 15_000) if smoke
+                       else (100_000, 50_000))
+    floor = MIN_SPEEDUP_SMOKE if smoke else MIN_SPEEDUP
+    reps = reps if reps is not None else (5 if smoke else 4)
+
+    tables = _sources(n_fact, n_users, n_items)
+    stats = {t: collect_stats(tab._to_cols())
+             for t, tab in tables.items()}
+    pl = plan(_pipeline(), table_stats=stats)
+    opt = optimize(pl)
+
+    rewrites = [m for s in opt.steps for m in s.provenance]
+    assert rewrites, "optimizer fired no rewrite on the gate workload"
+    row("plan_optimizer", "rewrites", len(rewrites), "count",
+        "; ".join(m.split(":")[1].strip()[:40] for m in rewrites))
+
+    def run(p):
+        return p.steps[0].execute(tables)
+
+    # correctness first: bit-for-bit at benchmark scale, on the
+    # default (vectorized) backend AND the auto policy backend.
+    want = run(pl).fingerprint()
+    for be in ("vectorized", "auto"):
+        with exec_backends.use_backend(be):
+            got = run(opt).fingerprint()
+        assert got == want, (
+            f"optimized plan diverges from unoptimized on {be!r} "
+            f"({got} != {want})")
+
+    timings = _best_of_interleaved(
+        reps, {"unoptimized": lambda: run(pl),
+               "optimized": lambda: run(opt)})
+    for name, t in timings.items():
+        row("plan_optimizer", name, t * 1e3, "ms/run",
+            f"fact={n_fact} users={n_users} items={n_items}")
+    speedup = timings["unoptimized"] / timings["optimized"]
+    row("plan_optimizer", "speedup", speedup, "x",
+        f"optimized over unoptimized; gate >= {floor}x")
+
+    doc = {
+        "bench": "plan_optimizer",
+        "smoke": smoke,
+        "n_fact": n_fact,
+        "n_users": n_users,
+        "n_items": n_items,
+        "passes": list(DEFAULT_PASSES),
+        "rewrites": len(rewrites),
+        "timings_s": timings,
+        "speedup": speedup,
+        "gate_min_speedup": floor,
+    }
+    print("BENCH " + json.dumps(doc, sort_keys=True))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+
+    assert speedup >= floor, (
+        f"optimized plan must be >= {floor}x over unoptimized at "
+        f"fact={n_fact}, got {speedup:.2f}x "
+        f"({timings['unoptimized'] * 1e3:.0f}ms vs "
+        f"{timings['optimized'] * 1e3:.0f}ms)")
+    return doc
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: smaller tables, relaxed 1.2x gate")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the BENCH JSON document to PATH")
+    args = ap.parse_args(argv)
+    print("name,metric,value,unit,notes")
+    bench_plan_optimizer(smoke=args.smoke, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

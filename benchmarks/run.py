@@ -328,6 +328,11 @@ def main() -> None:
     # backend's speedup over vectorized on the forced 8-device mesh
     # (subprocess: the mesh must exist before jax initializes).
     write_bench_doc(bench_sharded_join_subprocess())
+    # plan-optimizer gate (DESIGN.md §11): optimized plans must match
+    # unoptimized bit-for-bit and beat them on the pushdown-heavy
+    # three-table pipeline, smoke-sized.
+    from benchmarks.plan_optimizer import bench_plan_optimizer
+    write_bench_doc(bench_plan_optimizer(smoke=True))
     bench_pipeline_run()
     bench_train_step()
     bench_decode_step()

@@ -127,6 +127,30 @@ def _resolve_upstream(
     return candidates[0]
 
 
+def referenced_columns(
+    inputs: Mapping[str, type[S.Schema]],
+    output: type[S.Schema],
+) -> dict[str, set[str]]:
+    """Per-input sets of upstream columns the output contract references.
+
+    The elision-soundness input for the optimizer (Appendix A): a source
+    column may be dropped from a scan only when it is outside BOTH the
+    step's own expression/key references AND this set — contract
+    verifiers (``validate_table``) check declared columns of the output,
+    and each declared column resolves to at most one upstream column per
+    :func:`_resolve_upstream` (explicit lineage first, then by-name).
+    Fresh columns (computed, no upstream) reference nothing. Keys are
+    the input names used in ``inputs``; every input appears, possibly
+    with an empty set.
+    """
+    out: dict[str, set[str]] = {iname: set() for iname in inputs}
+    for column in output.columns().values():
+        src = _resolve_upstream(column, inputs)
+        if src is not None:
+            out[src[0]].add(src[1].name)
+    return out
+
+
 def check_edge(
     upstream: type[S.Schema],
     downstream: type[S.Schema],

@@ -215,21 +215,38 @@ class PythonNode(Node):
 
 @dataclasses.dataclass(frozen=True)
 class DeclarativeNode(Node):
-    """select(exprs) [after optional filter / join] — inspectable."""
+    """select(exprs) [after optional filter / join(s)] — inspectable.
+
+    Joins form a left-deep chain: ``joins`` lists ``(table, on)`` pairs
+    folded in order onto the first input (``join_with``/``join_on`` are
+    the single-join sugar, normalized into ``joins``). The body is a
+    fixed join -> filter -> select shape, which is exactly what lowers
+    to the logical IR (:meth:`logical_tree`) — the optimizer rewrites
+    the IR, never this node."""
 
     exprs: tuple[Expr, ...] = ()
     filter_expr: Expr | None = None
     join_with: str | None = None        # second input table name
     join_on: tuple[str, ...] = ()
+    joins: tuple[tuple[str, tuple[str, ...]], ...] = ()
+    join_how: str = "inner"
 
     def __post_init__(self):
+        if not self.joins and self.join_with is not None:
+            object.__setattr__(
+                self, "joins",
+                ((self.join_with, tuple(self.join_on)),))
         # extract casts from arrow_cast markers; mark inspectable.
+        # Membership-checked so the extraction is idempotent —
+        # dataclasses.replace() re-runs __post_init__ on already-
+        # extracted casts.
         casts = list(self.casts)
         for e in self.exprs:
             target = getattr(e, "cast_target", None)
             if target is not None:
-                casts.append(CastDecl(e.output_name(),
-                                      S.as_dtype(target)))
+                decl = CastDecl(e.output_name(), S.as_dtype(target))
+                if decl not in casts:
+                    casts.append(decl)
         object.__setattr__(self, "casts", tuple(casts))
         object.__setattr__(self, "inspectable", True)
         # select/filter/inner-join cannot introduce nulls into inherited
@@ -238,18 +255,29 @@ class DeclarativeNode(Node):
         # null-keyed rows (NULL matches nothing), so an inner join only
         # ever *selects* existing rows. tests/test_engine.py keeps the
         # elided checks honest against the physical implementation.
-        object.__setattr__(self, "null_preserving", True)
+        # A LEFT join manufactures NULLs in unmatched right columns, so
+        # it does not preserve.
+        object.__setattr__(self, "null_preserving",
+                           self.join_how == "inner")
+
+    def logical_tree(self):
+        """Lower to the logical IR (join(s) -> filter -> select)."""
+        from repro.core import logical as L
+        (_, first_table), *_rest = list(self.inputs.items())
+        op: "L.LogicalOp" = L.Scan(first_table)
+        for t, on in self.joins:
+            op = L.Join(op, L.Scan(t), on=tuple(on), how=self.join_how)
+        if self.filter_expr is not None:
+            op = L.Filter(op, self.filter_expr)
+        if self.exprs:
+            op = L.Project(op, tuple(self.exprs))
+        return op
 
     def run(self, tables: Mapping[str, Table]) -> Table:
-        (first_param, first_table), *rest = list(self.inputs.items())
-        t = tables[first_table]
-        if self.join_with is not None:
-            t = t.join(tables[self.join_with], on=list(self.join_on))
-        if self.filter_expr is not None:
-            t = t.filter(self.filter_expr)
-        if self.exprs:
-            t = t.select(list(self.exprs))
-        return t
+        # single execution path: the node body IS its logical tree, so
+        # direct runs and engine runs (which may execute a rewritten
+        # tree instead) can never drift semantically.
+        return self.logical_tree().execute(tables)
 
     def source(self) -> str:
         # describe() (structural, alias-surviving) rather than
@@ -258,8 +286,11 @@ class DeclarativeNode(Node):
         parts = [f"select {[e.describe() for e in self.exprs]}"]
         if self.filter_expr is not None:
             parts.append(f"filter {self.filter_expr.describe()}")
-        if self.join_with:
-            parts.append(f"join {self.join_with} on {list(self.join_on)}")
+        for t, on in self.joins:
+            if self.join_how == "inner":
+                parts.append(f"join {t} on {list(on)}")
+            else:
+                parts.append(f"join[{self.join_how}] {t} on {list(on)}")
         # the node name is intentionally absent (Pipeline.code_hash mixes
         # it in separately): cache keys identify the *function*, not the
         # output table it happens to be bound to.
@@ -345,13 +376,21 @@ class Pipeline:
             exprs: Sequence[Expr] = (),
             filter_expr: Expr | None = None,
             join_with: str | None = None,
-            join_on: Sequence[str] = ()) -> DeclarativeNode:
-        """Register a declarative node (paper Listing 4's annotated SQL)."""
+            join_on: Sequence[str] = (),
+            joins: Sequence[tuple[str, Sequence[str]]] = (),
+            join_how: str = "inner") -> DeclarativeNode:
+        """Register a declarative node (paper Listing 4's annotated SQL).
+
+        ``joins`` is the multi-join form (a left-deep ``(table, on)``
+        chain); ``join_with``/``join_on`` remain the single-join sugar.
+        """
         node = DeclarativeNode(
             name=name, inputs=dict(inputs),
             input_schemas=dict(input_schemas), output_schema=output_schema,
             exprs=tuple(exprs), filter_expr=filter_expr,
-            join_with=join_with, join_on=tuple(join_on))
+            join_with=join_with, join_on=tuple(join_on),
+            joins=tuple((t, tuple(on)) for t, on in joins),
+            join_how=join_how)
         self.add(node)
         return node
 

@@ -65,14 +65,26 @@ def cache_key(step: PlanStep,
     and must never serve a stale cross-mesh hit. ``None`` if the node
     is not content-addressable (e.g. it captures state that cannot be
     fingerprinted stably): such nodes always execute.
+
+    Optimizer state is key material too, same discipline: the active
+    pass list and the step's rewrite provenance are folded in, so
+    flipping a pass (or a pass rewriting a tree differently) can never
+    serve a stale cross-plan hit. An unoptimized plan (empty pass
+    list) keys exactly as before. The rewritten logical tree itself is
+    already the static half (``PlanStep.cache_material`` describes the
+    tree the step will actually execute, not the authored node body).
     """
-    material = step.node.cache_material()
+    material = step.cache_material()
     if material is None:
         return None
     h = hashlib.sha256()
     h.update(material.encode())
     h.update(
         f"|backend={exec_backends.active_backend().cache_token()}".encode())
+    if step.opt_passes:
+        h.update(f"|opt={','.join(step.opt_passes)}".encode())
+    for p in step.provenance:
+        h.update(f"|rw={p}".encode())
     for param in sorted(input_snapshots):
         h.update(f"|{param}={input_snapshots[param]}".encode())
     return h.hexdigest()[:32]
@@ -162,11 +174,13 @@ class PlanExecutor:
         are pinned). ``fail_after`` injects a failure after the named
         node validates — the deterministic abort-path hook.
         """
-        outputs = set(self.plan.output_tables)
         snaps: dict[str, str] = {}      # table -> snapshot (sources too)
         tables: dict[str, Table] = {}   # materialized tables
         mat_lock = threading.Lock()     # guards lazy source loads
-        written: dict[str, str] = {}    # validated outputs, plan order
+        # validated PUBLISHED outputs, plan order — optimizer-
+        # materialized auxiliary steps execute and cache like any node
+        # but never reach the commit/flush set.
+        written: dict[str, str] = {}
         executed: list[str] = []
         cached: list[str] = []
 
@@ -216,7 +230,7 @@ class PlanExecutor:
                                 step, fail_after)
                 ins = {t: materialize(t)
                        for t in set(node.inputs.values())}
-                out = node.run(ins)
+                out = step.execute(ins)
                 # moment (3): validate physical data BEFORE persisting.
                 validate_table(out, node.output_schema,
                                elide=step.elided_null_checks,
@@ -240,7 +254,8 @@ class PlanExecutor:
                     snap, table, was_cached, err = fut.result()
                     name = step.node.name
                     if snap is not None:
-                        written[name] = snap
+                        if step.published:
+                            written[name] = snap
                         snaps[name] = snap
                         tables[name] = table
                         (cached if was_cached else executed).append(name)

@@ -11,11 +11,19 @@ present when necessary)".
   2. per-node contract composition (:func:`repro.core.contracts.check_node`)
      including cast/narrowing legality;
   3. Appendix-A static discharge: computes, per node, the set of NOT-NULL
-     checks that are provable and can be elided at the worker.
+     checks that are provable and can be elided at the worker;
+  4. logical lowering: inspectable declarative nodes carry their
+     :mod:`repro.core.logical` tree on the step, which is what the
+     optimizer (:mod:`repro.optimizer`) rewrites and the engine
+     executes.
 
 The result is an immutable :class:`Plan`; :mod:`repro.core.runner`
 executes plans, never raw pipelines — so an invalid DAG can never reach
-a worker ("ill-typed pipelines should not be planned").
+a worker ("ill-typed pipelines should not be planned"). Optimizer
+passes produce *new* Plans through :func:`rebuild` (waves are
+recomputed — a pushdown can change the critical path) and stamp their
+provenance onto the steps they touched; ``Plan.describe()`` renders
+that trail as the EXPLAIN section.
 """
 from __future__ import annotations
 
@@ -28,7 +36,12 @@ from repro.core.contracts import (EdgeReport, check_node,
 from repro.core.dag import Node, Pipeline
 from repro.core.errors import PlanError
 
-__all__ = ["PlanStep", "Plan", "plan"]
+__all__ = ["PlanStep", "Plan", "plan", "rebuild"]
+
+# stat entries rendered per step in describe() before truncation —
+# agents parse this output, and one unbounded sorted line per step made
+# wide pipelines unreadable (and unparseable past terminal limits).
+_DESCRIBE_STATS_MAX = 3
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +57,48 @@ class PlanStep:
     # execution backend's decision table (DESIGN.md §10); absence means
     # "unknown", never "empty".
     input_stats: "Mapping[str, object] | None" = None
+    # logical IR (repro.core.logical.LogicalOp) for inspectable
+    # declarative nodes — what the optimizer rewrites and the engine
+    # executes; None = opaque node, run through node.run().
+    logical: "object | None" = None
+    # False for optimizer-materialized auxiliary steps (e.g. a shared
+    # filter hoisted out of two consumers): they execute and cache like
+    # any step but are not published pipeline outputs — the runner must
+    # not commit them to the catalog.
+    published: bool = True
+    # human-readable rewrite trail ("why this tree looks like this"),
+    # appended by each optimizer pass that touched this step. Folded
+    # into the engine cache key: a step whose tree was rewritten
+    # differently must never share a cache entry.
+    provenance: tuple[str, ...] = ()
+    # the active optimizer pass list (stamped on every step of an
+    # optimized plan, touched or not) — cache-key material so flipping
+    # a pass on/off can never serve a stale cross-plan hit.
+    opt_passes: tuple[str, ...] = ()
+
+    def execute(self, tables) -> "object":
+        """Run this step's transformation: the (possibly rewritten)
+        logical tree when present, the node body otherwise."""
+        if self.logical is not None:
+            return self.logical.execute(tables,
+                                        stats=self.input_stats)
+        return self.node.run(tables)
+
+    def cache_material(self) -> str | None:
+        """Static cache-key half for this step (see
+        ``Node.cache_material``). A rewritten logical tree replaces the
+        node's source in the material — two steps executing different
+        trees must key differently — but only when the tree is fully
+        structural; otherwise the step is uncacheable, same rule as
+        ``DeclarativeNode.cache_material``."""
+        if self.logical is None:
+            return self.node.cache_material()
+        if not self.logical.is_structural():
+            return None
+        casts = ";".join(f"{c.column}->{c.to.name}"
+                         for c in self.node.casts)
+        return (f"<logical: {self.logical.describe()}>|"
+                f"{self.node.output_schema.fingerprint()}|{casts}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,10 +107,15 @@ class Plan:
     code_hash: str
     steps: tuple[PlanStep, ...]
     source_schemas: Mapping[str, type[S.Schema]]
+    # the optimizer pass list this plan was produced by (empty =
+    # unoptimized); mirrors PlanStep.opt_passes for plan-level display.
+    optimizer_passes: tuple[str, ...] = ()
 
     @property
     def output_tables(self) -> tuple[str, ...]:
-        return tuple(s.node.name for s in self.steps)
+        """Published output tables — what the runner commits. Excludes
+        optimizer-materialized auxiliary steps."""
+        return tuple(s.node.name for s in self.steps if s.published)
 
     @property
     def waves(self) -> tuple[tuple[PlanStep, ...], ...]:
@@ -70,8 +130,9 @@ class Plan:
         return tuple(tuple(grouped[w]) for w in sorted(grouped))
 
     def source_tables(self) -> tuple[str, ...]:
-        """Source tables the plan's nodes actually read."""
-        outputs = set(self.output_tables)
+        """Source tables the plan's nodes actually read (auxiliary step
+        outputs are plan-internal, not sources)."""
+        outputs = {s.node.name for s in self.steps}
         seen: list[str] = []
         for s in self.steps:
             for t in s.node.inputs.values():
@@ -86,11 +147,52 @@ class Plan:
                   if s.elided_null_checks else "")
             st = ""
             if s.input_stats:
-                st = " [stats: " + "; ".join(
+                entries = sorted(s.input_stats.items())
+                shown = [
                     f"{t} {v.describe() if hasattr(v, 'describe') else v}"
-                    for t, v in sorted(s.input_stats.items())) + "]"
-            lines.append(f"  [wave {s.wave}] {s.report.describe()}{el}{st}")
+                    for t, v in entries[:_DESCRIBE_STATS_MAX]]
+                if len(entries) > _DESCRIBE_STATS_MAX:
+                    shown.append(
+                        f"+{len(entries) - _DESCRIBE_STATS_MAX} more")
+                st = " [stats: " + "; ".join(shown) + "]"
+            aux = "" if s.published else "(aux) "
+            lines.append(
+                f"  [wave {s.wave}] {aux}{s.report.describe()}{el}{st}")
+        if self.optimizer_passes:
+            rewrites = [(s.node.name, p) for s in self.steps
+                        for p in s.provenance]
+            lines.append(
+                f"  optimizer: passes="
+                f"[{', '.join(self.optimizer_passes)}]; "
+                f"rewrites={len(rewrites)}")
+            for name, msg in rewrites:
+                lines.append(f"    - {name}: {msg}")
         return "\n".join(lines)
+
+
+def rebuild(base: Plan, steps: Sequence[PlanStep], *,
+            optimizer_passes: "tuple[str, ...] | None" = None) -> Plan:
+    """A new Plan over rewritten ``steps`` with waves recomputed.
+
+    Rewrites move work across the DAG (a pushdown can shorten a
+    critical path; a materialized shared filter adds a level), so the
+    dependency levels recorded at plan() time are stale the moment a
+    pass touches an edge — recompute them from the rewritten inputs.
+    ``steps`` must be topologically ordered (passes preserve plan
+    order and insert auxiliary steps before their first consumer).
+    """
+    node_wave: dict[str, int] = {}
+    rewaved: list[PlanStep] = []
+    for s in steps:
+        wave = max((node_wave[t] + 1 for t in s.node.inputs.values()
+                    if t in node_wave), default=0)
+        node_wave[s.node.name] = wave
+        rewaved.append(dataclasses.replace(s, wave=wave))
+    return dataclasses.replace(
+        base, steps=tuple(rewaved),
+        optimizer_passes=(optimizer_passes
+                          if optimizer_passes is not None
+                          else base.optimizer_passes))
 
 
 def plan(pipeline: Pipeline,
@@ -145,9 +247,12 @@ def plan(pipeline: Pipeline,
         if table_stats:
             stats = {t: table_stats[t] for t in node.inputs.values()
                      if t in table_stats} or None
+        # 4. logical lowering (inspectable declarative nodes only).
+        logical = (node.logical_tree()
+                   if hasattr(node, "logical_tree") else None)
         steps.append(PlanStep(node=node, report=report,
                               elided_null_checks=elided, wave=wave,
-                              input_stats=stats))
+                              input_stats=stats, logical=logical))
         published[node.name] = node.output_schema
 
     return Plan(pipeline_name=pipeline.name,

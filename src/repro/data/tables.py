@@ -262,6 +262,36 @@ class Table:
             be.hash_join(self._to_cols(), other._to_cols(),
                          tuple(on), how))
 
+    def masked_join(self, other: "Table", on: Sequence[str],
+                    how: str = "inner", *,
+                    left_pred: "Expr | None" = None,
+                    right_pred: "Expr | None" = None,
+                    backend: "str | None" = None) -> "Table":
+        """Filter-fused hash join: semantically identical to
+        ``self.filter(left_pred).join(other.filter(right_pred), ...)``
+        but the masks travel into the probe so backends can skip the
+        intermediate materialization (the optimizer's probe-fusion
+        rewrite targets this entry point)."""
+        if how not in ("inner", "left"):
+            raise NotImplementedError(
+                f"masked_join: how={how!r} not supported (inner, left)")
+
+        def _mask(t: "Table", pred: "Expr | None"):
+            if pred is None:
+                return None
+            mask, valid = pred.evaluate(t)
+            mask = np.asarray(mask, dtype=bool)
+            if valid is not None:
+                mask = mask & valid  # SQL: NULL predicate = drop row
+            return mask
+
+        be = exec_backends.resolve(backend)
+        return Table._from_cols(
+            be.masked_hash_join(self._to_cols(), other._to_cols(),
+                                tuple(on), how,
+                                left_mask=_mask(self, left_pred),
+                                right_mask=_mask(other, right_pred)))
+
     def group_by_sum(self, keys: Sequence[str], value: str,
                      out: str | None = None, *,
                      backend: "str | None" = None) -> "Table":
@@ -304,7 +334,8 @@ class Table:
 class Expr:
     def __init__(self, fn: Callable[[Table], tuple[np.ndarray, np.ndarray | None]],
                  name: str, desc: str | None = None, *,
-                 _structural: bool = False):
+                 _structural: bool = False,
+                 refs: "frozenset[str] | None" = None):
         self._fn = fn
         self._name = name
         # structural description: unlike the output name it survives
@@ -316,6 +347,15 @@ class Expr:
         # computation. Hand-rolled Expr(fn, name) stays False, which
         # makes any declarative node using it uncacheable (dag.py).
         self._structural = _structural
+        # input columns this expression reads, or None when unknown
+        # (hand-rolled Expr(fn, name) may read anything). The optimizer
+        # refuses to push/elide around any expression with None refs.
+        self._refs = refs
+
+    def references(self) -> "frozenset[str] | None":
+        """Set of input-column names this expression reads; ``None``
+        means "unknown — could read anything" (opaque callables)."""
+        return self._refs
 
     def evaluate(self, t: Table) -> tuple[np.ndarray, np.ndarray | None]:
         return self._fn(t)
@@ -330,7 +370,7 @@ class Expr:
 
     def alias(self, name: str) -> "Expr":
         return Expr(self._fn, name, self._desc,
-                    _structural=self._structural)
+                    _structural=self._structural, refs=self._refs)
 
     def is_not_null(self) -> "Expr":
         def fn(t: Table):
@@ -341,7 +381,7 @@ class Expr:
             return out, None
         return Expr(fn, f"{self._name}_is_not_null",
                     f"is_not_null({self._desc})",
-                    _structural=self._structural)
+                    _structural=self._structural, refs=self._refs)
 
     def _binop(self, other: Any, op, sym: str) -> "Expr":
         other_e = other if isinstance(other, Expr) else lit(other)
@@ -369,9 +409,13 @@ class Expr:
             else:
                 vals = op(lv, rv)
             return vals, valid
+        refs = (self._refs | other_e._refs
+                if self._refs is not None and other_e._refs is not None
+                else None)
         return Expr(fn, f"({self._name}{sym}{other_e._name})",
                     f"({self._desc}{sym}{other_e._desc})",
-                    _structural=self._structural and other_e._structural)
+                    _structural=self._structural and other_e._structural,
+                    refs=refs)
 
     def __add__(self, o): return self._binop(o, np.add, "+")
     def __sub__(self, o): return self._binop(o, np.subtract, "-")
@@ -391,7 +435,7 @@ def col(name: str) -> Expr:
     def fn(t: Table):
         c = t._data[name]
         return c.values, c.valid
-    return Expr(fn, name, _structural=True)
+    return Expr(fn, name, _structural=True, refs=frozenset({name}))
 
 
 def lit(value: Any) -> Expr:
@@ -405,7 +449,7 @@ def lit(value: Any) -> Expr:
         dtype = object if isinstance(value, (str, bytes)) else None
         arr = np.full(n, value, dtype=dtype)
         return arr, None
-    return Expr(fn, repr(value), _structural=True)
+    return Expr(fn, repr(value), _structural=True, refs=frozenset())
 
 
 def str_lit(value: str) -> str:
@@ -423,6 +467,6 @@ def arrow_cast(expr: Expr, target: str) -> Expr:
         vals, valid = expr.evaluate(t)
         return vals.astype(np_t), valid
     e = Expr(fn, expr.output_name(), f"cast({expr._desc}, {target})",
-             _structural=expr._structural)
+             _structural=expr._structural, refs=expr._refs)
     e.cast_target = _ARROW_TO_LOGICAL.get(target, target)  # type: ignore
     return e

@@ -150,23 +150,67 @@ class AutoBackend(Backend):
         return exec_backends.get_backend(name).cache_token()
 
     # -- operators -------------------------------------------------------
-    def hash_join(self, left: Columns, right: Columns,
-                  on: Sequence[str], how: str = "inner") -> Columns:
+    # The engine threads planner-collected TableStats through dispatch
+    # (PlanStep.input_stats): when the caller already measured an
+    # input, auto must not re-sample it — stats collection is a full
+    # column scan, and double collection was a measured dispatch-path
+    # regression. ``None`` stats (post-rewrite intermediates the
+    # planner never saw, or direct Table-API calls) are collected here,
+    # exactly once, against the physical input of THIS call — which is
+    # what makes the decision table consume post-rewrite reality
+    # rather than pre-rewrite planner estimates.
+    accepts_join_stats = True
+
+    def _join_choice(self, left: Columns, right: Columns,
+                     on: Sequence[str],
+                     left_stats: "TableStats | None",
+                     right_stats: "TableStats | None") -> str:
         # the decision table reads rows/kinds/span only — skip the
         # cardinality sampling pass on the dispatch hot path.
-        choice = choose_join(
-            collect_stats(left, on, estimate_cardinality=False),
-            collect_stats(right, on, estimate_cardinality=False),
+        if left_stats is None:
+            left_stats = collect_stats(left, on,
+                                       estimate_cardinality=False)
+        if right_stats is None:
+            right_stats = collect_stats(right, on,
+                                        estimate_cardinality=False)
+        return choose_join(
+            left_stats, right_stats,
             n_devices=self._devices(),
             sharded_available=self._available("sharded"))
+
+    def hash_join(self, left: Columns, right: Columns,
+                  on: Sequence[str], how: str = "inner", *,
+                  left_stats: "TableStats | None" = None,
+                  right_stats: "TableStats | None" = None) -> Columns:
+        choice = self._join_choice(left, right, on, left_stats,
+                                   right_stats)
         return self._delegate(choice).hash_join(left, right, on, how)
 
+    def masked_hash_join(self, left: Columns, right: Columns,
+                         on: Sequence[str], how: str = "inner", *,
+                         left_mask: "np.ndarray | None" = None,
+                         right_mask: "np.ndarray | None" = None,
+                         left_stats: "TableStats | None" = None,
+                         right_stats: "TableStats | None" = None
+                         ) -> Columns:
+        # stats describe the *unfiltered* physical inputs — the same
+        # tables the delegate's fused probe will actually touch, so
+        # sizing the choice on them is the honest estimate.
+        choice = self._join_choice(left, right, on, left_stats,
+                                   right_stats)
+        return self._delegate(choice).masked_hash_join(
+            left, right, on, how,
+            left_mask=left_mask, right_mask=right_mask)
+
     def group_by_sum(self, cols: Columns, keys: Sequence[str],
-                     value: str, out: str) -> Columns:
+                     value: str, out: str, *,
+                     stats: "TableStats | None" = None) -> Columns:
         values, _ = cols[value]
+        if stats is None:
+            stats = collect_stats(cols, keys,
+                                  estimate_cardinality=False)
         choice = choose_group_by(
-            collect_stats(cols, keys, estimate_cardinality=False),
-            values.dtype,
+            stats, values.dtype,
             jax_available=self._available("jax"))
         return self._delegate(choice).group_by_sum(cols, keys, value,
                                                    out)

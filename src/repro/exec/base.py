@@ -96,6 +96,33 @@ class Backend:
                   on: Sequence[str], how: str = "inner") -> Columns:
         raise NotImplementedError
 
+    def masked_hash_join(self, left: Columns, right: Columns,
+                         on: Sequence[str], how: str = "inner", *,
+                         left_mask: "np.ndarray | None" = None,
+                         right_mask: "np.ndarray | None" = None
+                         ) -> Columns:
+        """Filter-fused join. SEMANTICS (normative, what every override
+        must reproduce bit for bit): filter each masked side with
+        ``filter_select``, then ``hash_join`` the survivors. This
+        default IS that definition — the reference backend inherits it
+        unchanged, so the differential suite pins the fused paths
+        (vectorized key-validity ANDing, the sharded backend's in-VMEM
+        Pallas mask) to materialized filtering.
+
+        Equivalence fine print: a fused implementation may produce an
+        all-True validity array where this default produces ``None``
+        (or vice versa) — the Table layer's ``_ColumnData`` normalizes
+        all-True masks to ``None``, so the two are one representation
+        by the time anything observable (fingerprint, snapshot) sees
+        them. Masks are plain boolean keep-masks over the *unfiltered*
+        inputs; ``None`` means keep everything.
+        """
+        if left_mask is not None:
+            left = self.filter_select(left, left_mask)
+        if right_mask is not None:
+            right = self.filter_select(right, right_mask)
+        return self.hash_join(left, right, on, how)
+
     # -- aggregation ----------------------------------------------------
     def group_by_sum(self, cols: Columns, keys: Sequence[str],
                      value: str, out: str) -> Columns:

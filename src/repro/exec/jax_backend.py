@@ -1,8 +1,10 @@
 """JAX execution backend: segment-sum aggregation on the accelerator.
 
 Inherits the vectorized backend's join/filter/concat and key
-factorization (host-side, numpy) and overrides only the aggregation
-inner loop: per-group sums run through
+factorization (host-side, numpy) — including the filter-fused
+``masked_hash_join`` (key-validity ANDing), so the optimizer's
+probe-fusion rewrite benefits this backend with no code here — and
+overrides only the aggregation inner loop: per-group sums run through
 :func:`repro.kernels.segment_sum.ops.masked_segment_sum` — XLA
 ``segment_sum`` by default, or the Pallas kernel when constructed with
 ``use_pallas=True`` (env ``REPRO_SEGSUM_PALLAS=1``).

@@ -78,9 +78,9 @@ import jax.numpy as jnp
 from repro.distributed.sharding import shard_map
 from repro.exec.base import Columns, _column_length, payload_validity
 from repro.exec.jax_backend import JaxBackend
-from repro.exec.vectorized import _join_codes
+from repro.exec.vectorized import _and_key_validity, _join_codes
 from repro.kernels import fallback
-from repro.kernels.hash_join.ops import hash_probe
+from repro.kernels.hash_join.ops import hash_probe, masked_hash_probe
 
 __all__ = ["ShardedBackend"]
 
@@ -124,14 +124,17 @@ def _get_mesh(ndev: int):
 
 @functools.lru_cache(maxsize=64)
 def _probe_fn(ndev: int, cap_l: int, cap_r: int, span_shard: int,
-              np_dtype: str, use_pallas: bool, interpret: bool):
+              np_dtype: str, use_pallas: bool, interpret: bool,
+              masked: bool = False):
     """Build + jit the shard_map'd exchange-and-probe for one static
     signature. Unmatchable lanes (NULL/NaN keys and slab padding)
     carry the dtype-max sentinel and can match nothing: they sort to
     the end, fall outside every table slot, and are masked out of
     counts. ``span_shard`` > 0 selects the direct-address slot space
     of "table" mode (required for the Pallas path); 0 means wide-span
-    raw keys."""
+    raw keys. ``masked`` adds a probe-side keep-mask slab and routes
+    through the filter-fused Pallas probe (table mode only — the
+    caller host-poisons keys to the sentinel on every other route)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     mesh = _get_mesh(ndev)
@@ -194,11 +197,13 @@ def _probe_fn(ndev: int, cap_l: int, cap_r: int, span_shard: int,
         return (starts.astype(jnp.int32), counts.astype(jnp.int32),
                 gidx)
 
-    def probe_table(lk, rk):
+    def probe_table(lk, rk, lmask=None):
         """Direct-address strategy (the Pallas/TPU path): build the
         open-addressing (start, count) table over this shard's slot
         range, probe through kernels/hash_join. Grouped layout is
-        arrival order (unique) or sorted order (duplicates)."""
+        arrival order (unique) or sorted order (duplicates).
+        ``lmask`` (filter-fused probe) zeroes masked lanes inside the
+        kernel — the filtered rows never leave VMEM."""
         m = rk.shape[0]
         iota = jnp.arange(m, dtype=jnp.int32)
         base = (jax.lax.axis_index("shard") * span_shard).astype(
@@ -227,10 +232,25 @@ def _probe_fn(ndev: int, cap_l: int, cap_r: int, span_shard: int,
             return pos_tab, gidx
 
         pos_tab, gidx = jax.lax.cond(unique, fast, slow, None)
-        starts, counts = hash_probe(pos_tab, counts_tab, slot_l,
-                                    use_pallas=use_pallas,
-                                    interpret=interpret)
+        if lmask is None:
+            starts, counts = hash_probe(pos_tab, counts_tab, slot_l,
+                                        use_pallas=use_pallas,
+                                        interpret=interpret)
+        else:
+            starts, counts = masked_hash_probe(
+                pos_tab, counts_tab, slot_l, lmask,
+                use_pallas=use_pallas, interpret=interpret)
         return starts, counts, gidx
+
+    def body_masked(l_slab, m_slab, r_slab):
+        # fused-filter path: selected only for table mode + Pallas, so
+        # the probe is always the direct-address kernel with the mask
+        # slab riding next to the key slab (same owner-major layout).
+        lk = l_slab[0].reshape(-1)
+        lmask = m_slab[0].reshape(-1)
+        rk = exchange(r_slab)
+        starts, counts, gidx = probe_table(lk, rk, lmask)
+        return starts[None, :], counts[None, :], gidx[None, :]
 
     def body(l_slab, r_slab):
         # build side: all_to_all so each device owns every row of its
@@ -250,10 +270,12 @@ def _probe_fn(ndev: int, cap_l: int, cap_r: int, span_shard: int,
 
     spec = P("shard", None, None)
     out = P("shard", None)
-    mapped = shard_map(body, mesh=mesh, in_specs=(spec, spec),
+    fn = body_masked if masked else body
+    in_specs = (spec,) * (3 if masked else 2)
+    mapped = shard_map(fn, mesh=mesh, in_specs=in_specs,
                        out_specs=(out, out, out), check_vma=False)
     shard = NamedSharding(mesh, spec)
-    return jax.jit(mapped, in_shardings=(shard, shard))
+    return jax.jit(mapped, in_shardings=(shard,) * len(in_specs))
 
 
 class ShardedBackend(JaxBackend):
@@ -285,19 +307,57 @@ class ShardedBackend(JaxBackend):
     # -- join -----------------------------------------------------------
     def hash_join(self, left: Columns, right: Columns,
                   on: Sequence[str], how: str = "inner") -> Columns:
+        return self._sharded_join(left, right, on, how, None)
+
+    def masked_hash_join(self, left: Columns, right: Columns,
+                         on: Sequence[str], how: str = "inner", *,
+                         left_mask: "np.ndarray | None" = None,
+                         right_mask: "np.ndarray | None" = None
+                         ) -> Columns:
+        """Filter-fused distributed join. The right mask folds into the
+        key validity on the host before coding (masked build rows code
+        to the sentinel and land in the drop bucket — they never ship).
+        The left (probe) mask rides to the device as a slab and is
+        applied *inside* the Pallas probe kernel when table mode is
+        active — the filtered rows never leave VMEM; every other route
+        host-poisons the coded keys to the sentinel, which the existing
+        sentinel machinery drops for free. ``how='left'`` with a left
+        mask must prefilter (a masked row must not emit as unmatched).
+        """
+        if left_mask is not None and how != "inner":
+            left = self.filter_select(left, left_mask)
+            left_mask = None
+        if right_mask is not None:
+            right = _and_key_validity(right, on, right_mask)
+        return self._sharded_join(left, right, on, how, left_mask)
+
+    def _host_fallback(self, left: Columns, right: Columns,
+                       on: Sequence[str], how: str,
+                       probe_mask: "np.ndarray | None") -> Columns:
+        if probe_mask is None:
+            return super().hash_join(left, right, on, how)
+        return super().masked_hash_join(left, right, on, how,
+                                        left_mask=probe_mask)
+
+    def _sharded_join(self, left: Columns, right: Columns,
+                      on: Sequence[str], how: str,
+                      probe_mask: "np.ndarray | None") -> Columns:
         n_left = _column_length(left)
         n_right = _column_length(right)
         ndev = max(1, self.n_devices)
         if (n_left == 0 or n_right == 0
                 or n_left >= 2**31 or n_right >= 2**31
                 or ndev > 255):          # buckets are uint8
-            return super().hash_join(left, right, on, how)
+            return self._host_fallback(left, right, on, how, probe_mask)
 
         keyed = self._device_keys(left, right, on)
         if keyed is None:               # cannot lower: vectorized path
-            return super().hash_join(left, right, on, how)
+            return self._host_fallback(left, right, on, how, probe_mask)
         lk, rk, span = keyed
         if span == 0:                   # no valid key anywhere
+            if probe_mask is not None and how != "inner":
+                left = self.filter_select(left, probe_mask)
+                n_left = _column_length(left)
             return self._emit_join(
                 left, right, how, n_left,
                 np.zeros(n_left, np.int64), np.zeros(n_left, np.int64),
@@ -306,6 +366,16 @@ class ShardedBackend(JaxBackend):
         # the dtype-max sentinel lands safely past the last shard.
         span_shard = (_next_pow2(-(-span // ndev))
                       if 0 < span <= MAX_TABLE_SPAN else 0)
+
+        # fused-filter dispatch: table mode + Pallas keeps the mask on
+        # the device (in-VMEM); every other route poisons masked lanes
+        # to the sentinel here — they bucket to the drop lane and never
+        # even ship.
+        fused = (probe_mask is not None and self.use_pallas_probe
+                 and span_shard > 0)
+        if probe_mask is not None and not fused:
+            sent = lk.dtype.type(np.iinfo(lk.dtype).max)
+            lk = np.where(np.asarray(probe_mask, dtype=bool), lk, sent)
 
         lb = _buckets(lk, ndev, span_shard)
         rb = _buckets(rk, ndev, span_shard)
@@ -316,18 +386,28 @@ class ShardedBackend(JaxBackend):
             # positions the probes pack — possible past ~2e9 rows with
             # heavy bucket skew even though the raw row counts passed
             # the guard above.
-            return super().hash_join(left, right, on, how)
+            return self._host_fallback(left, right, on, how, probe_mask)
         # probe side ships owner-major (src stays the minor axis, so
         # per-device arrival order matches what the build side's
         # all_to_all produces).
         l_slab = np.ascontiguousarray(l_slab.transpose(1, 0, 2))
 
         fn = _probe_fn(ndev, cap_l, cap_r, span_shard, lk.dtype.str,
-                       self.use_pallas_probe, self.interpret)
+                       self.use_pallas_probe, self.interpret,
+                       masked=fused)
+        if fused:
+            keep = np.asarray(probe_mask, dtype=bool)
+            m_slab = np.where(
+                l_idx >= 0, keep[np.clip(l_idx, 0, None)], False
+            ).astype(np.int32)
+            m_slab = np.ascontiguousarray(m_slab.transpose(1, 0, 2))
+            args = (l_slab, m_slab, r_slab)
+        else:
+            args = (l_slab, r_slab)
         # the packed/wide probes carry int64 intermediates; the x64
         # scope is thread-local and only governs types traced inside.
         with jax.experimental.enable_x64():
-            out = fn(l_slab, r_slab)
+            out = fn(*args)
         starts, counts, gidx = (np.asarray(o) for o in out)
 
         # map device results back through the kept permutation: the

@@ -194,6 +194,25 @@ def _group_runs(codes: np.ndarray
     return order, bounds, grp_order, first_rows[grp_order]
 
 
+def _and_key_validity(cols: Columns, on: Sequence[str],
+                      mask: np.ndarray) -> Columns:
+    """AND a keep-mask into the *key columns'* validity (shallow copy).
+
+    Masked-out rows then look NULL-keyed to the probe, so inner-join
+    emission drops them without a filter pass. Sound only because
+    ``_gather_right`` never copies a key column that the left side
+    already produced — the poisoned key validity never reaches the
+    output (left keys: every emitted inner lane has mask True, so the
+    AND is a no-op on survivors)."""
+    out = dict(cols)
+    keep = np.asarray(mask, dtype=bool)
+    for k in on:
+        values, valid = out[k]
+        valid = keep if valid is None else (valid & keep)
+        out[k] = (values, valid)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # the backend
 # ---------------------------------------------------------------------------
@@ -220,6 +239,33 @@ class VectorizedBackend(Backend):
             counts = np.where(lcodes >= 0, ends - starts, 0)
         return self._emit_join(left, right, how, n_left, starts, counts,
                                ridx)
+
+    def masked_hash_join(self, left: Columns, right: Columns,
+                         on: Sequence[str], how: str = "inner", *,
+                         left_mask: np.ndarray | None = None,
+                         right_mask: np.ndarray | None = None
+                         ) -> Columns:
+        """Fused filtering: AND the keep-masks into the key columns'
+        validity and run the normal probe — a masked row looks
+        NULL-keyed, matches nothing, and (for inner joins) is never
+        emitted. No intermediate filtered table is materialized.
+
+        The one case that MUST prefilter: ``how='left'`` with a
+        ``left_mask`` — a NULL-keyed left row still emits (once, with
+        NULL right columns) under left-join semantics, but a
+        filtered-out row must not emit at all. Right masks are safe for
+        both hows (masked right rows simply stop matching), and
+        ``_gather_right`` skips key columns the left side already
+        produced, so the poisoned right key validity never surfaces.
+        """
+        if left_mask is not None and how != "inner":
+            left = self.filter_select(left, left_mask)
+            left_mask = None
+        if left_mask is not None:
+            left = _and_key_validity(left, on, left_mask)
+        if right_mask is not None:
+            right = _and_key_validity(right, on, right_mask)
+        return self.hash_join(left, right, on, how)
 
     def _emit_join(self, left: Columns, right: Columns, how: str,
                    n_left: int, starts: np.ndarray, counts: np.ndarray,

@@ -61,6 +61,36 @@ def _probe_body(slot_ref, ts_ref, tc_ref, start_ref, cnt_ref, *,
         dtype=jnp.int32)
 
 
+def _masked_probe_body(slot_ref, mask_ref, ts_ref, tc_ref, start_ref,
+                       cnt_ref, *, block_n: int, block_t: int):
+    """Filter-fused variant: a lane whose mask is 0 matches no table
+    column, so its (start, count) stays at the zero-init — the filtered
+    row never leaves VMEM (no host-side mask application, no
+    intermediate filtered copy)."""
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        start_ref[...] = jnp.zeros_like(start_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    slots = slot_ref[0, :]
+    keep = mask_ref[0, :] != 0
+    local = slots - ti * block_t
+    col = jax.lax.broadcasted_iota(jnp.int32, (block_n, block_t), 1)
+    onehot = ((col == local[:, None])
+              & (local >= 0)[:, None]
+              & (local < block_t)[:, None]
+              & keep[:, None])
+    zero = jnp.zeros((), jnp.int32)
+    start_ref[0, :] += jnp.sum(
+        jnp.where(onehot, ts_ref[0, :][None, :], zero), axis=1,
+        dtype=jnp.int32)
+    cnt_ref[0, :] += jnp.sum(
+        jnp.where(onehot, tc_ref[0, :][None, :], zero), axis=1,
+        dtype=jnp.int32)
+
+
 def hash_probe_kernel(table_start, table_count, probe_slots, *,
                       block_n: int = 256, block_t: int = 512,
                       interpret: bool = True):
@@ -110,4 +140,59 @@ def hash_probe_kernel(table_start, table_count, probe_slots, *,
         ],
         interpret=interpret,
     )(s2, ts2, tc2)
+    return starts.reshape(-1)[:n], counts.reshape(-1)[:n]
+
+
+def masked_hash_probe_kernel(table_start, table_count, probe_slots,
+                             probe_mask, *, block_n: int = 256,
+                             block_t: int = 512,
+                             interpret: bool = True):
+    """Filter-fused probe: lanes with ``probe_mask == 0`` emit (0, 0).
+
+    Same tiling/padding contract as :func:`hash_probe_kernel` (padding
+    lanes get mask 0 as well as slot -1 — doubly dead). Bit-identical
+    to ``ref.masked_hash_probe_ref``.
+    """
+    n = probe_slots.shape[0]
+    t = table_start.shape[0]
+    block_n = max(1, min(block_n, n)) if n else 1
+    block_t = max(1, min(block_t, t)) if t else 1
+    pad_n = (-n) % block_n if n else block_n
+    if pad_n:
+        probe_slots = jnp.pad(probe_slots, (0, pad_n),
+                              constant_values=-1)
+        probe_mask = jnp.pad(probe_mask.astype(jnp.int32), (0, pad_n))
+    pad_t = (-t) % block_t if t else block_t
+    if pad_t:
+        table_start = jnp.pad(table_start, (0, pad_t))
+        table_count = jnp.pad(table_count, (0, pad_t))
+    n_probe_tiles = probe_slots.shape[0] // block_n
+    n_table_tiles = table_start.shape[0] // block_t
+
+    s2 = probe_slots.astype(jnp.int32).reshape(n_probe_tiles, block_n)
+    m2 = probe_mask.astype(jnp.int32).reshape(n_probe_tiles, block_n)
+    ts2 = table_start.astype(jnp.int32).reshape(n_table_tiles, block_t)
+    tc2 = table_count.astype(jnp.int32).reshape(n_table_tiles, block_t)
+
+    body = functools.partial(_masked_probe_body, block_n=block_n,
+                             block_t=block_t)
+    starts, counts = pl.pallas_call(
+        body,
+        grid=(n_probe_tiles, n_table_tiles),
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda p, ti: (p, 0)),
+            pl.BlockSpec((1, block_n), lambda p, ti: (p, 0)),
+            pl.BlockSpec((1, block_t), lambda p, ti: (ti, 0)),
+            pl.BlockSpec((1, block_t), lambda p, ti: (ti, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_n), lambda p, ti: (p, 0)),
+            pl.BlockSpec((1, block_n), lambda p, ti: (p, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_probe_tiles, block_n), jnp.int32),
+            jax.ShapeDtypeStruct((n_probe_tiles, block_n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(s2, m2, ts2, tc2)
     return starts.reshape(-1)[:n], counts.reshape(-1)[:n]

@@ -40,6 +40,21 @@ def hash_probe_np(table_start: np.ndarray, table_count: np.ndarray,
     return starts, counts
 
 
+def masked_hash_probe_np(table_start: np.ndarray,
+                         table_count: np.ndarray,
+                         probe_slots: np.ndarray,
+                         probe_mask: np.ndarray
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """Numpy fallback — same contract as ``ref.masked_hash_probe_ref``:
+    lanes with a falsy mask emit (0, 0)."""
+    starts, counts = hash_probe_np(table_start, table_count,
+                                   probe_slots)
+    keep = probe_mask.astype(bool, copy=False)
+    zero = np.int32(0)
+    return (np.where(keep, starts, zero).astype(np.int32),
+            np.where(keep, counts, zero).astype(np.int32))
+
+
 def build_probe_table_np(slots_sorted: np.ndarray, table_size: int
                          ) -> tuple[np.ndarray, np.ndarray]:
     """Numpy build — same contract as ``ref.build_probe_table``."""
@@ -87,3 +102,40 @@ def hash_probe(table_start, table_count, probe_slots, *,
                                  np.asarray(table_count), probe_slots)
     return _jitted(use_pallas, block_n, block_t, interpret)(
         table_start, table_count, probe_slots)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_masked(use_pallas: bool, block_n: int, block_t: int,
+                   interpret: bool):
+    import jax
+
+    from repro.kernels.hash_join.kernel import masked_hash_probe_kernel
+    from repro.kernels.hash_join.ref import masked_hash_probe_ref
+
+    def probe(table_start, table_count, probe_slots, probe_mask):
+        if not use_pallas:
+            return masked_hash_probe_ref(table_start, table_count,
+                                         probe_slots, probe_mask)
+        return masked_hash_probe_kernel(
+            table_start, table_count, probe_slots, probe_mask,
+            block_n=block_n, block_t=block_t, interpret=interpret)
+
+    return jax.jit(probe)
+
+
+def masked_hash_probe(table_start, table_count, probe_slots,
+                      probe_mask, *, use_pallas: bool = False,
+                      block_n: int = 256, block_t: int = 512,
+                      interpret: bool = True):
+    """Filter-fused probe: :func:`hash_probe` with a per-lane keep
+    mask; masked-out lanes emit (0, 0). Same dispatch ladder (XLA
+    oracle / Pallas kernel / numpy floor)."""
+    if isinstance(probe_slots, np.ndarray):
+        try:
+            import jax  # noqa: F401
+        except ImportError:
+            return masked_hash_probe_np(
+                np.asarray(table_start), np.asarray(table_count),
+                probe_slots, np.asarray(probe_mask))
+    return _jitted_masked(use_pallas, block_n, block_t, interpret)(
+        table_start, table_count, probe_slots, probe_mask)

@@ -58,3 +58,21 @@ def hash_probe_ref(table_start, table_count, probe_slots):
     starts = jnp.where(ok, table_start[idx], 0)
     counts = jnp.where(ok, table_count[idx], 0)
     return starts, counts
+
+
+def masked_hash_probe_ref(table_start, table_count, probe_slots,
+                          probe_mask):
+    """Filter-fused probe oracle: like :func:`hash_probe_ref` but lanes
+    whose ``probe_mask`` entry is falsy emit (0, 0) regardless of their
+    slot — the probe-side filter applied *inside* the lookup, so a
+    fused ``filter → join`` never materializes the filtered rows.
+    Equivalent to ``hash_probe_ref(ts, tc, where(mask, slots, -1))``;
+    kept as a separate primitive so the Pallas kernel's in-VMEM mask
+    path has an XLA oracle to match bit for bit.
+    """
+    starts, counts = hash_probe_ref(table_start, table_count,
+                                    probe_slots)
+    keep = probe_mask.astype(jnp.bool_)
+    zero = jnp.zeros((), jnp.int32)
+    return (jnp.where(keep, starts, zero),
+            jnp.where(keep, counts, zero))

@@ -24,6 +24,7 @@ from repro.core.planner import plan
 from repro.core.runner import Client
 from repro.core.store import FileStore, MemoryStore
 from repro.data.tables import Table, col
+from repro.optimizer import optimize
 
 Src = S.Schema.of("Src", x=int)
 Mid = S.Schema.of("Mid", x=int, y=int)
@@ -539,3 +540,99 @@ def test_elided_checks_sound_for_declarative_join_with_null_keys():
     # soundness: the elided checks hold physically (validate w/o elision)
     validate_table(out, J, name="joined")
     assert not out.has_nulls("a") and not out.has_nulls("b")
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-rewritten plans through the engine: waves + cache discipline
+# ---------------------------------------------------------------------------
+
+def _pushable_pipeline() -> Pipeline:
+    D = S.Schema.of("D", x=int, tag=int)
+    J = S.Schema.of("J", x=int, y=int, tag=int)
+    p = Pipeline("pushable")
+    p.source("src", Src)
+    p.source("dim", D)
+    p.sql(name="out", inputs={"s": "src", "d": "dim"},
+          input_schemas={"s": Src, "d": D}, output_schema=J,
+          join_with="dim", join_on=["x"],
+          filter_expr=(col("tag") > 0),
+          exprs=[col("x"), (col("x") * 2).alias("y"), col("tag")])
+    return p
+
+
+def _pushable_client() -> Client:
+    c = _client()
+    c.write_source_table("main", "dim", Table({
+        "x": np.array([1, 2, 3, 4], dtype=np.int64),
+        "tag": np.array([0, 1, 1, 0], dtype=np.int64)}))
+    return c
+
+
+def test_rewritten_plan_recomputes_waves_and_executes():
+    """A shared-filter materialization adds a dependency level: the
+    engine must schedule the aux step a wave BEFORE its consumers (not
+    trust the stale plan()-time levels) and publish only consumers."""
+    p = Pipeline("sharedwaves")
+    p.source("src", Src)
+    # consumers share the filter but differ in projection — identical
+    # consumers would (correctly) also share one cache entry, which is
+    # not what this test is about.
+    p.sql(name="a", inputs={"s": "src"}, input_schemas={"s": Src},
+          output_schema=Src, filter_expr=(col("x") > 1),
+          exprs=[col("x")])
+    p.sql(name="b", inputs={"s": "src"}, input_schemas={"s": Src},
+          output_schema=Src, filter_expr=(col("x") > 1),
+          exprs=[(col("x") * 2).alias("x")])
+    pl = plan(p)
+    assert [s.wave for s in pl.steps] == [0, 0]
+    opt = optimize(pl, passes=["filter_pushdown"])
+    assert [(s.node.name, s.wave) for s in opt.steps] == [
+        ("__opt_shared_0", 0), ("a", 1), ("b", 1)]
+    client = _client()
+    res = client.run(opt, "main")
+    assert res.state.status == "committed"
+    # aux executed (it is a real node evaluation)…
+    assert set(res.executed) == {"__opt_shared_0", "a", "b"}
+    # …but never published
+    assert set(res.tables) == {"a", "b"}
+    assert client.read_table("main", "a").column("x").tolist() == [2, 3]
+
+
+def test_cache_misses_when_optimizer_pass_list_changes():
+    """Stale-hit regression: the engine cache key folds the optimizer
+    pass list + provenance, so flipping passes must re-execute — even
+    when a pass is a no-op on this plan — while re-running the SAME
+    optimized plan stays a pure cache hit."""
+    client = _pushable_client()
+    pl = plan(_pushable_pipeline())
+    opt1 = optimize(pl, passes=["filter_pushdown"])
+    r1 = client.run(opt1, "main")
+    assert r1.executed == ("out",)
+
+    # same optimized plan again: zero executions
+    r2 = client.run(optimize(plan(_pushable_pipeline()),
+                             passes=["filter_pushdown"]), "main")
+    assert r2.executed == () and r2.cached == ("out",)
+
+    # different pass list that rewrites the tree further: miss
+    r3 = client.run(optimize(plan(_pushable_pipeline()),
+                             passes=["filter_pushdown", "probe_fusion"]),
+                    "main")
+    assert r3.executed == ("out",)
+
+    # pass list whose passes happen to rewrite NOTHING here: the tree
+    # matches the unoptimized plan, but the key still must move
+    r4 = client.run(optimize(plan(_pushable_pipeline()),
+                             passes=["join_reorder"]), "main")
+    assert r4.executed == ("out",)
+
+    # and the plain unoptimized plan keys differently from all of them
+    r5 = client.run(plan(_pushable_pipeline()), "main")
+    assert r5.executed == ("out",)
+
+    # every variant is warm now: reruns of each are free
+    for mk in (lambda: optimize(plan(_pushable_pipeline()),
+                                passes=["filter_pushdown"]),
+               lambda: plan(_pushable_pipeline())):
+        r = client.run(mk(), "main")
+        assert r.executed == ()

@@ -1,0 +1,385 @@
+"""Optimizer unit tests: pass mechanics, provenance/EXPLAIN format,
+wave recomputation, cache-key discipline, elision-vs-contract
+soundness, and the single-stats-collection regression (DESIGN.md §11).
+
+Bit-for-bit *output* equivalence of rewritten plans lives in
+``test_optimizer_differential.py``; this file pins the surrounding
+machinery: what gets rewritten (and what must NOT), what the rewrite
+records, and how the engine keys it.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro.exec.auto as auto_mod
+from repro import exec as exec_backends
+from repro.core import schema as S
+from repro.core.catalog import Catalog
+from repro.core.dag import Pipeline
+from repro.core.engine import cache_key
+from repro.core.logical import Join, Project, Reorder, Scan
+from repro.core.planner import plan
+from repro.core.runner import Client
+from repro.data.tables import Expr, Table, col
+from repro.exec.stats import TableStats
+from repro.optimizer import DEFAULT_PASSES, PASSES, optimize
+
+Fact = S.Schema.of("Fact", user_id=int, item_id=int, amount=float,
+                   junk=float)
+Users = S.Schema.of("Users", user_id=int, segment=int, bio=str)
+Items = S.Schema.of("Items", item_id=int, weight=float)
+Out = S.Schema.of("Out", user_id=int, amount=float, weight=float)
+
+
+def _star(filter_expr=None, how="inner"):
+    p = Pipeline("star")
+    p.source("fact", Fact)
+    p.source("users", Users)
+    p.source("items", Items)
+    p.sql(name="out", inputs={"f": "fact", "u": "users", "i": "items"},
+          input_schemas={"f": Fact, "u": Users, "i": Items},
+          output_schema=Out,
+          joins=[("users", ["user_id"]), ("items", ["item_id"])],
+          join_how=how,
+          filter_expr=filter_expr,
+          exprs=[col("user_id"), col("amount"), col("weight")])
+    return p
+
+
+def _stats(fact=5000, users=500, items=100):
+    return {"fact": TableStats(n_rows=fact),
+            "users": TableStats(n_rows=users),
+            "items": TableStats(n_rows=items)}
+
+
+# ---------------------------------------------------------------------------
+# pass registry / plumbing
+# ---------------------------------------------------------------------------
+
+def test_default_passes_are_registered_in_order():
+    assert DEFAULT_PASSES == ("filter_pushdown", "join_reorder",
+                              "column_pruning", "probe_fusion")
+    assert all(name in PASSES for name in DEFAULT_PASSES)
+
+
+def test_unknown_pass_raises():
+    pl = plan(_star())
+    with pytest.raises(ValueError, match="unknown optimizer pass"):
+        optimize(pl, passes=["filter_pushdown", "nope"])
+
+
+def test_optimize_stamps_pass_list_on_plan_and_steps():
+    pl = plan(_star())
+    assert pl.optimizer_passes == ()
+    opt = optimize(pl, passes=["probe_fusion"])
+    assert opt.optimizer_passes == ("probe_fusion",)
+    assert all(s.opt_passes == ("probe_fusion",) for s in opt.steps)
+    # the original plan is untouched (passes are pure Plan -> Plan)
+    assert pl.optimizer_passes == ()
+    assert all(s.opt_passes == () for s in pl.steps)
+
+
+# ---------------------------------------------------------------------------
+# individual rewrites: what fires, what must not
+# ---------------------------------------------------------------------------
+
+def test_filter_pushdown_sinks_side_local_predicate():
+    pl = plan(_star(filter_expr=(col("segment") == 3)))
+    opt = optimize(pl, passes=["filter_pushdown"])
+    d = opt.steps[0].logical.describe()
+    # pushed below both joins, onto the users side
+    assert "filter((segment==3), scan(users))" in d
+
+
+def test_filter_pushdown_keeps_predicate_above_left_join_right_side():
+    """Right-push under a LEFT join would turn NULL-filled unmatched
+    rows into dropped rows — must not fire onto the right side. (The
+    *left*-push below the outer left join is legal and may still
+    happen: a left-side predicate commutes with a left join.)"""
+    pl = plan(_star(filter_expr=(col("segment") == 3), how="left"))
+    opt = optimize(pl, passes=["filter_pushdown"])
+    d = opt.steps[0].logical.describe()
+    assert "filter((segment==3), scan(users))" not in d
+    # the predicate still guards the fact-users join output
+    assert "filter((segment==3), join(scan(fact), scan(users)" in d
+
+
+def test_opaque_expression_is_never_rewritten():
+    """A hand-rolled Expr has references() None: every pass must leave
+    the tree alone rather than guess."""
+    opaque = Expr(lambda t: (np.asarray(t.column("segment")) == 3, None),
+                  "opaque")
+    assert opaque.references() is None
+    pl = plan(_star(filter_expr=opaque), table_stats=_stats())
+    opt = optimize(pl)
+    assert "filter(opaque, " in opt.steps[0].logical.describe()
+    # pushdown and fusion skipped; only reorder may legally fire (it
+    # does not need the predicate) — the filter itself stays put.
+    assert not any("pushdown: pushed" in m or "probe_fusion" in m
+                   for s in opt.steps for m in s.provenance)
+
+
+def test_join_reorder_requires_stats_and_restores_order():
+    pl = plan(_star())                     # no stats
+    assert not any("join_reorder" in m for s in optimize(pl).steps
+                   for m in s.provenance)
+    pl = plan(_star(), table_stats=_stats(users=500, items=100))
+    opt = optimize(pl, passes=["join_reorder"])
+    tree = opt.steps[0].logical
+    assert isinstance(tree, Project)
+    assert isinstance(tree.child, Reorder)
+    assert tree.child.order == (1, 0)      # items (100) before users (500)
+    [msg] = opt.steps[0].provenance
+    assert "join_reorder: order=[1, 0]" in msg
+    # already-optimal chains are left alone (order would be identity)
+    pl2 = plan(_star(), table_stats=_stats(users=100, items=500))
+    assert not any("join_reorder" in m for s in
+                   optimize(pl2, passes=["join_reorder"]).steps
+                   for m in s.provenance)
+
+
+def test_probe_fusion_moves_filter_into_join_pred():
+    pl = plan(_star(filter_expr=(col("segment") == 3)))
+    opt = optimize(pl, passes=["filter_pushdown", "probe_fusion"])
+    tree = opt.steps[0].logical
+    join = tree.child            # project -> join(join(fact,users),items)
+    assert isinstance(join, Join)
+    inner = join.left
+    assert isinstance(inner, Join)
+    assert inner.right_pred is not None
+    assert inner.right_pred.describe() == "(segment==3)"
+    assert isinstance(inner.right, Scan)   # the Filter op is gone
+
+
+def test_column_pruning_elides_dead_columns_only():
+    pl = plan(_star(filter_expr=(col("segment") == 3)))
+    opt = optimize(pl, passes=["column_pruning"])
+    d = opt.steps[0].logical.describe()
+    # junk (fact) and bio (users) are referenced by nothing
+    assert "junk" not in d and "bio" not in d
+    assert "scan(fact, cols=" in d
+    [msg] = opt.steps[0].provenance
+    assert "'junk'" in msg and "'bio'" in msg
+
+
+def test_column_pruning_keeps_contract_referenced_column():
+    """Appendix-A soundness: a column no expression reads but the
+    output contract resolves upstream must survive elision."""
+    Src = S.Schema.of("Src", x=int, amount=int, junk=int)
+    O = S.Schema.of("O", amount=int)
+    p = Pipeline("lineage")
+    p.source("src", Src)
+    # the projected 'amount' is computed from x; the CONTRACT's
+    # 'amount' column still resolves by name to src.amount.
+    p.sql(name="o", inputs={"s": "src"}, input_schemas={"s": Src},
+          output_schema=O, exprs=[col("x").alias("amount")])
+    opt = optimize(plan(p), passes=["column_pruning"])
+    scan = opt.steps[0].logical.child
+    assert isinstance(scan, Scan)
+    assert "junk" not in scan.columns
+    assert "amount" in scan.columns       # kept for the verifier
+    assert "x" in scan.columns            # kept for the expression
+
+
+# ---------------------------------------------------------------------------
+# shared-filter materialization: aux steps + wave recomputation
+# ---------------------------------------------------------------------------
+
+Src = S.Schema.of("Src", x=int, y=int)
+Half = S.Schema.of("Half", x=int, y=int)
+
+
+def _shared_filter_pipeline():
+    p = Pipeline("shared")
+    p.source("src", Src)
+    for name in ("a", "b"):
+        p.sql(name=name, inputs={"s": "src"}, input_schemas={"s": Src},
+              output_schema=Half, filter_expr=(col("x") > 2),
+              exprs=[col("x"), col("y")])
+    return p
+
+
+def test_shared_filter_materializes_once_and_recomputes_waves():
+    pl = plan(_shared_filter_pipeline())
+    assert [s.wave for s in pl.steps] == [0, 0]
+    opt = optimize(pl, passes=["filter_pushdown"])
+    names = [s.node.name for s in opt.steps]
+    assert names == ["__opt_shared_0", "a", "b"]
+    aux, a, b = opt.steps
+    assert not aux.published and a.published and b.published
+    # the rewrite added a dependency level: waves were recomputed
+    assert [s.wave for s in opt.steps] == [0, 1, 1]
+    assert [sorted(s.node.name for s in w) for w in opt.waves] == [
+        ["__opt_shared_0"], ["a", "b"]]
+    # aux outputs never reach the publish set
+    assert opt.output_tables == ("a", "b")
+    assert opt.source_tables() == ("src",)
+    # consumers now read the aux table, not src
+    assert set(a.node.inputs.values()) == {"__opt_shared_0"}
+    assert "(aux) " in opt.describe()
+
+
+def test_shared_filter_plan_executes_and_publishes_only_consumers():
+    pl = optimize(plan(_shared_filter_pipeline()),
+                  passes=["filter_pushdown"])
+    c = Client(Catalog())
+    c.write_source_table("main", "src", Table(
+        {"x": np.arange(6, dtype=np.int64),
+         "y": np.arange(6, dtype=np.int64) * 10}))
+    c.run(pl, "main")
+    assert c.read_table("main", "a").column("x").tolist() == [3, 4, 5]
+    with pytest.raises(Exception):
+        c.read_table("main", "__opt_shared_0")
+
+
+def test_aux_output_pruning_respects_downstream_references():
+    """Second half of the elision condition: the aux step's own output
+    schema shrinks only to what downstream scans + its own predicate
+    read."""
+    p = Pipeline("shared2")
+    p.source("src", Src)
+    OnlyX = S.Schema.of("OnlyX", x=int)
+    for name in ("a", "b"):
+        p.sql(name=name, inputs={"s": "src"}, input_schemas={"s": Src},
+              output_schema=OnlyX, filter_expr=(col("x") > 2),
+              exprs=[col("x")])
+    opt = optimize(plan(p), passes=["filter_pushdown", "column_pruning"])
+    aux = opt.steps[0]
+    assert not aux.published
+    assert aux.node.output_schema.names() == ["x"]   # y elided
+    assert any("no downstream step or contract verifier references"
+               in m for m in aux.provenance)
+    c = Client(Catalog())
+    c.write_source_table("main", "src", Table(
+        {"x": np.arange(6, dtype=np.int64),
+         "y": np.arange(6, dtype=np.int64) * 10}))
+    c.run(opt, "main")
+    assert c.read_table("main", "b").column("x").tolist() == [3, 4, 5]
+
+
+# ---------------------------------------------------------------------------
+# describe(): EXPLAIN section + stat-map truncation (exact format)
+# ---------------------------------------------------------------------------
+
+def test_describe_truncates_wide_stat_maps():
+    pl = plan(_star(), table_stats=_stats())
+    wide = {t: TableStats(n_rows=i + 1) for i, t in
+            enumerate(["a", "b", "c", "d", "e"])}
+    step = dataclasses.replace(pl.steps[0], input_stats=wide)
+    pl = dataclasses.replace(pl, steps=(step,))
+    d = pl.describe()
+    assert "[stats: a rows=1; b rows=2; c rows=3; +2 more]" in d
+    assert "rows=4" not in d and "rows=5" not in d
+
+
+def test_describe_explain_section_exact_format():
+    pl = plan(_star(filter_expr=(col("segment") == 3)))
+    opt = optimize(pl, passes=["filter_pushdown", "probe_fusion"])
+    lines = opt.describe().splitlines()
+    assert lines[0] == f"plan star (code={pl.code_hash})"
+    assert lines[-3] == ("  optimizer: passes=[filter_pushdown, "
+                         "probe_fusion]; rewrites=2")
+    assert lines[-2] == ("    - out: filter_pushdown: pushed filter "
+                         "below join")
+    assert lines[-1] == ("    - out: probe_fusion: fused 1 filter(s) "
+                         "into join probe masks")
+    # unoptimized plans carry no EXPLAIN section at all
+    assert "optimizer:" not in pl.describe()
+
+
+# ---------------------------------------------------------------------------
+# cache-key discipline
+# ---------------------------------------------------------------------------
+
+def test_cache_key_folds_pass_list_and_provenance():
+    snaps = {"f": "s1", "u": "s2", "i": "s3"}
+    pl = plan(_star(filter_expr=(col("segment") == 3)))
+    k_plain = cache_key(pl.steps[0], snaps)
+    opt_a = optimize(pl, passes=["filter_pushdown"])
+    opt_b = optimize(pl, passes=["filter_pushdown", "probe_fusion"])
+    k_a = cache_key(opt_a.steps[0], snaps)
+    k_b = cache_key(opt_b.steps[0], snaps)
+    assert len({k_plain, k_a, k_b}) == 3
+    # deterministic: re-optimizing reproduces the same key
+    assert cache_key(optimize(pl, passes=["filter_pushdown"]).steps[0],
+                     snaps) == k_a
+
+
+def test_unoptimized_cache_key_is_stable_against_feature():
+    """An unoptimized plan must key exactly as before the optimizer
+    existed: no opt/rewrite material sneaks into the hash."""
+    pl = plan(_star())
+    step = pl.steps[0]
+    assert step.opt_passes == () and step.provenance == ()
+    snaps = {"f": "s1", "u": "s2", "i": "s3"}
+    assert cache_key(step, snaps) == cache_key(
+        dataclasses.replace(step, wave=7), snaps)  # wave is not key material
+
+
+def test_rewritten_tree_is_the_cache_material():
+    pl = plan(_star(filter_expr=(col("segment") == 3)))
+    opt = optimize(pl, passes=["filter_pushdown"])
+    mat = opt.steps[0].cache_material()
+    assert mat is not None and "<logical:" in mat
+    assert "filter((segment==3), scan(users))" in mat
+
+
+def test_non_structural_tree_is_uncacheable():
+    opaque = Expr(lambda t: (np.asarray(t.column("segment")) == 3, None),
+                  "opaque")
+    pl = plan(_star(filter_expr=opaque))
+    assert pl.steps[0].cache_material() is None
+    assert cache_key(pl.steps[0], {"f": "s"}) is None
+
+
+# ---------------------------------------------------------------------------
+# satellite: stats are collected at most once per input
+# ---------------------------------------------------------------------------
+
+def test_auto_backend_reuses_planner_stats(monkeypatch):
+    """The planner collected TableStats once; the auto backend's join
+    dispatch must not re-sample the same inputs (the double-collection
+    bug this PR fixes). Joins whose stats the planner could not know
+    still collect exactly once per side."""
+    calls = []
+    real = auto_mod.collect_stats
+
+    def counting(cols, keys=(), **kw):
+        calls.append(tuple(keys))
+        return real(cols, keys, **kw)
+
+    monkeypatch.setattr(auto_mod, "collect_stats", counting)
+    rng = np.random.default_rng(0)
+    fact = Table({"user_id": rng.integers(0, 50, 400),
+                  "item_id": rng.integers(0, 20, 400),
+                  "amount": rng.normal(size=400),
+                  "junk": rng.normal(size=400)})
+    users = Table({"user_id": np.arange(50, dtype=np.int64),
+                   "segment": (np.arange(50) % 4).astype(np.int64),
+                   "bio": np.array(["u"] * 50, dtype=object)})
+    items = Table({"item_id": np.arange(20, dtype=np.int64),
+                   "weight": rng.normal(size=20)})
+
+    def run(pln):
+        c = Client(Catalog())
+        c.write_source_table("main", "fact", fact)
+        c.write_source_table("main", "users", users)
+        c.write_source_table("main", "items", items)
+        with exec_backends.use_backend("auto"):
+            c.run(pln, "main", cache=False)
+
+    stats = {t: auto_mod.collect_stats(tab._to_cols())
+             for t, tab in [("fact", fact), ("users", users),
+                            ("items", items)]}
+    pl = plan(_star(), table_stats=stats)
+    calls.clear()
+    run(pl)
+    # first join: both sides are planner-known scans -> 0 collections;
+    # second join: left side is the join intermediate (planner cannot
+    # know it) -> 1 collection; items scan is planner-known -> 0.
+    assert len(calls) == 1
+
+    calls.clear()
+    run(plan(_star()))          # no planner stats: one per side per join
+    assert len(calls) == 4

@@ -1,0 +1,262 @@
+"""The optimizer's proof obligation: optimized == unoptimized, bit for
+bit, on every registered execution backend (DESIGN.md §11).
+
+Every fixture pipeline runs twice per backend — once as planned, once
+through ``optimize(plan, DEFAULT_PASSES)`` — and the *published* table
+snapshots must fingerprint identically (``Table.fingerprint`` covers
+values, validity masks, dtypes, row order and column order). This is
+the rewrite-pass contract made executable; a pass that cannot
+guarantee this must not fire.
+
+The documented float-SUM carve-out (backends may regroup float
+summation) does not apply here: no rewrite touches an aggregation —
+pushdown/reorder/pruning/fusion rearrange scans, filters, projections
+and joins, all of which gather rows — so equality is exact, never
+tolerance-based.
+
+Fixtures are chosen adversarially: NULL/NaN/object join keys (SQL
+match-nothing semantics), left joins (where pushes must partially
+refuse), shared filters (aux materialization + wave change), dead
+columns, reorderable star chains, and an opaque Python node mixed in
+(must pass through untouched).
+"""
+import numpy as np
+import pytest
+
+from repro import exec as exec_backends
+from repro.core import schema as S
+from repro.core.catalog import Catalog
+from repro.core.dag import Pipeline
+from repro.core.planner import plan
+from repro.core.runner import Client
+from repro.data.tables import Table, _ColumnData, col, lit
+from repro.exec.stats import collect_stats
+from repro.optimizer import DEFAULT_PASSES, optimize
+
+BACKENDS = exec_backends.available_backends()
+
+Fact = S.Schema.of("Fact", user_id=int, item_id=int, amount=float,
+                   junk=float)
+Users = S.Schema.of("Users", user_id=int, segment=int, bio=str)
+Items = S.Schema.of("Items", item_id=int, weight=float)
+Out = S.Schema.of("Out", user_id=int, amount=float, weight=float)
+Joined = S.Schema.of("Joined", user_id=int, amount=float, segment=int)
+
+_rng = np.random.default_rng(7)
+_N = 800
+
+
+def _sources():
+    uid = _rng.integers(0, 60, _N)
+    fact = Table({"user_id": uid,
+                  "item_id": _rng.integers(0, 25, _N),
+                  "amount": _rng.normal(size=_N),
+                  "junk": _rng.normal(size=_N)})
+    # deliberately larger than items even after the assumed filter
+    # selectivity, so the star fixture's greedy order is NOT identity
+    users = Table({"user_id": np.arange(200, dtype=np.int64),
+                   "segment": (np.arange(200) % 8).astype(np.int64),
+                   "bio": np.array([f"u{i}" for i in range(200)],
+                                   dtype=object)})
+    items = Table({"item_id": np.arange(25, dtype=np.int64),
+                   "weight": _rng.normal(size=25)})
+    return {"fact": fact, "users": users, "items": items}
+
+
+def _null_sources():
+    """NULL validity + NaN payloads on keys: must match nothing,
+    optimized or not."""
+    uid = _rng.integers(0, 20, 200).astype(np.float64)
+    uid[::7] = np.nan
+    valid = np.ones(200, dtype=bool)
+    valid[::11] = False
+    FactN = S.Schema.of("Fact", user_id=float, item_id=int,
+                        amount=float, junk=float)
+    fact = Table({"user_id": _ColumnData(uid, valid),
+                  "item_id": _rng.integers(0, 25, 200),
+                  "amount": _rng.normal(size=200),
+                  "junk": _rng.normal(size=200)})
+    users = Table({"user_id": np.arange(20, dtype=np.float64),
+                   "segment": (np.arange(20) % 8).astype(np.int64),
+                   "bio": np.array([f"u{i}" for i in range(20)],
+                                   dtype=object)})
+    return FactN, {"fact": fact, "users": users}
+
+
+def _p_single_join_pushable():
+    p = Pipeline("single_join")
+    p.source("fact", Fact)
+    p.source("users", Users)
+    p.sql(name="out", inputs={"f": "fact", "u": "users"},
+          input_schemas={"f": Fact, "u": Users}, output_schema=Joined,
+          join_with="users", join_on=["user_id"],
+          filter_expr=(col("segment") > 2),
+          exprs=[col("user_id"), col("amount"), col("segment")])
+    return p, _sources(), None
+
+
+def _p_star_reorder():
+    src = _sources()
+    p = Pipeline("star")
+    p.source("fact", Fact)
+    p.source("users", Users)
+    p.source("items", Items)
+    p.sql(name="out", inputs={"f": "fact", "u": "users", "i": "items"},
+          input_schemas={"f": Fact, "u": Users, "i": Items},
+          output_schema=Out,
+          joins=[("users", ["user_id"]), ("items", ["item_id"])],
+          filter_expr=(col("segment") == 3),
+          exprs=[col("user_id"), col("amount"), col("weight")])
+    stats = {t: collect_stats(tab._to_cols()) for t, tab in src.items()}
+    return p, src, stats
+
+
+def _p_null_keys():
+    FactN, src = _null_sources()
+    JoinedN = S.Schema.of("Joined", user_id=float, amount=float,
+                          segment=int)
+    p = Pipeline("null_keys")
+    p.source("fact", FactN)
+    p.source("users", S.Schema.of("Users", user_id=float, segment=int,
+                                  bio=str))
+    p.sql(name="out", inputs={"f": "fact", "u": "users"},
+          input_schemas={"f": p.source_schemas["fact"],
+                         "u": p.source_schemas["users"]},
+          output_schema=JoinedN,
+          join_with="users", join_on=["user_id"],
+          filter_expr=(col("segment") >= 2),
+          exprs=[col("user_id"), col("amount"), col("segment")])
+    return p, src, None
+
+
+def _p_object_keys():
+    KF = S.Schema.of("KF", k=str, v=int)
+    KD = S.Schema.of("KD", k=str, tag=int)
+    KO = S.Schema.of("KO", k=str, v=int, tag=int)
+    keys = np.array([f"k{i % 12}" for i in range(150)], dtype=object)
+    src = {"f": Table({"k": keys,
+                       "v": np.arange(150, dtype=np.int64)}),
+           "d": Table({"k": np.array([f"k{i}" for i in range(12)],
+                                     dtype=object),
+                       "tag": (np.arange(12) % 3).astype(np.int64)})}
+    p = Pipeline("object_keys")
+    p.source("f", KF)
+    p.source("d", KD)
+    p.sql(name="out", inputs={"a": "f", "b": "d"},
+          input_schemas={"a": KF, "b": KD}, output_schema=KO,
+          join_with="d", join_on=["k"],
+          filter_expr=(col("tag") == 1),
+          exprs=[col("k"), col("v"), col("tag")])
+    return p, src, None
+
+
+def _p_left_join_right_filter():
+    """Filter on the right side of a LEFT join: right-push must refuse,
+    fusion into a masked right probe is still legal."""
+    p = Pipeline("left_rfilter")
+    p.source("fact", Fact)
+    p.source("users", Users)
+    JoinedL = S.Schema.of("Joined", user_id=int, amount=float)
+    p.sql(name="out", inputs={"f": "fact", "u": "users"},
+          input_schemas={"f": Fact, "u": Users}, output_schema=JoinedL,
+          join_with="users", join_on=["user_id"], join_how="left",
+          filter_expr=(col("amount") > 0),   # left-side pred: pushable
+          exprs=[col("user_id"), col("amount")])
+    src = _sources()
+    # shrink users so some fact rows are unmatched (NULL-filled)
+    src["users"] = src["users"].filter(col("user_id") < 30)
+    return p, src, None
+
+
+def _p_dead_columns():
+    p = Pipeline("dead_cols")
+    p.source("fact", Fact)
+    Slim = S.Schema.of("Slim", user_id=int, amount=float)
+    p.sql(name="out", inputs={"f": "fact"}, input_schemas={"f": Fact},
+          output_schema=Slim,
+          exprs=[col("user_id"), (col("amount") * lit(2.0)).alias("amount")])
+    return p, _sources(), None
+
+
+def _p_shared_filter():
+    p = Pipeline("shared")
+    p.source("fact", Fact)
+    Slim = S.Schema.of("Slim", user_id=int, amount=float)
+    for name in ("a", "b"):
+        p.sql(name=name, inputs={"f": "fact"},
+              input_schemas={"f": Fact}, output_schema=Slim,
+              filter_expr=(col("amount") > 0),
+              exprs=[col("user_id"), col("amount")])
+    return p, _sources(), None
+
+
+def _p_opaque_python_node():
+    """An opaque Python node (no logical tree) rides along unrewritten
+    next to a rewritable declarative sibling."""
+    p = Pipeline("mixed")
+    p.source("fact", Fact)
+    p.source("users", Users)
+    p.sql(name="out", inputs={"f": "fact", "u": "users"},
+          input_schemas={"f": Fact, "u": Users}, output_schema=Joined,
+          join_with="users", join_on=["user_id"],
+          filter_expr=(col("segment") == 2),
+          exprs=[col("user_id"), col("amount"), col("segment")])
+    Top = S.Schema.of("Top", user_id=int, amount=float)
+
+    @p.node()
+    def top(j: Joined = "out") -> Top:
+        order = np.argsort(np.asarray(j.column("amount")),
+                           kind="stable")[::-1][:10]
+        return Table({"user_id": np.asarray(j.column("user_id"))[order],
+                      "amount": np.asarray(j.column("amount"))[order]})
+
+    return p, _sources(), None
+
+
+PIPELINES = [_p_single_join_pushable, _p_star_reorder, _p_null_keys,
+             _p_object_keys, _p_left_join_right_filter,
+             _p_dead_columns, _p_shared_filter, _p_opaque_python_node]
+
+
+def _run(pl, sources, backend):
+    c = Client(Catalog())
+    for t, tab in sources.items():
+        c.write_source_table("main", t, tab)
+    with exec_backends.use_backend(backend):
+        c.run(pl, "main", cache=False)
+    return {t: c.read_table("main", t).fingerprint()
+            for t in pl.output_tables}
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("make", PIPELINES,
+                         ids=lambda f: f.__name__.lstrip("_"))
+def test_optimized_equals_unoptimized_bit_for_bit(make, backend):
+    p, sources, stats = make()
+    pl = plan(p, table_stats=stats)
+    opt = optimize(pl, passes=DEFAULT_PASSES)
+    assert opt.output_tables == pl.output_tables
+    base = _run(pl, sources, backend)
+    got = _run(opt, sources, backend)
+    assert got == base
+
+
+def test_star_fixture_actually_rewrites():
+    """Guard against the suite silently testing nothing: the star
+    fixture must trigger pushdown, reorder and pruning, and the shared
+    fixture must materialize an aux step."""
+    p, _, stats = _p_star_reorder()
+    opt = optimize(plan(p, table_stats=stats))
+    msgs = [m for s in opt.steps for m in s.provenance]
+    assert any("filter_pushdown" in m for m in msgs)
+    assert any("join_reorder" in m for m in msgs)
+    assert any("column_pruning" in m for m in msgs)
+
+    p, _, _ = _p_shared_filter()
+    opt = optimize(plan(p))
+    assert any(not s.published for s in opt.steps)
+
+    p, _, _ = _p_single_join_pushable()
+    opt = optimize(plan(p))
+    assert any("probe_fusion" in m
+               for s in opt.steps for m in s.provenance)
