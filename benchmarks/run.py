@@ -38,11 +38,12 @@ def write_bench_doc(doc: dict) -> str:
     return path
 
 
-def bench_sharded_join_subprocess() -> "dict | None":
-    """The sharded-join gate needs XLA_FLAGS set before jax imports,
-    which this process has long passed — run it as a subprocess (smoke
-    size) and collect its BENCH document."""
-    out = os.path.join(_REPO_ROOT, "bench_sharded_join.tmp.json")
+def bench_mesh_subprocess(module: str) -> "dict | None":
+    """The forced-8-device mesh gates (sharded join, sharded group-by)
+    need XLA_FLAGS set before jax imports, which this process has long
+    passed — run the benchmark module as a subprocess (smoke size) and
+    collect its BENCH document."""
+    out = os.path.join(_REPO_ROOT, f"bench_{module}.tmp.json")
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
     # the forced-host mesh only multiplies the CPU platform: on
@@ -54,14 +55,14 @@ def bench_sharded_join_subprocess() -> "dict | None":
                          + os.pathsep + env.get("PYTHONPATH", ""))
     try:
         r = subprocess.run(
-            [sys.executable, "-m", "benchmarks.sharded_join",
+            [sys.executable, "-m", f"benchmarks.{module}",
              "--smoke", "--json", out],
             cwd=_REPO_ROOT, env=env, capture_output=True, text=True,
             timeout=1800)
         sys.stdout.write(r.stdout)
         if r.returncode != 0:
             raise RuntimeError(
-                f"sharded_join gate failed:\n{r.stderr[-2000:]}")
+                f"{module} gate failed:\n{r.stderr[-2000:]}")
         with open(out) as f:
             return json.load(f)
     finally:
@@ -327,7 +328,12 @@ def main() -> None:
     # distributed-join gate (DESIGN.md §10): asserts the sharded
     # backend's speedup over vectorized on the forced 8-device mesh
     # (subprocess: the mesh must exist before jax initializes).
-    write_bench_doc(bench_sharded_join_subprocess())
+    write_bench_doc(bench_mesh_subprocess("sharded_join"))
+    # sharded group-by gate (DESIGN.md §12): asserts the pre-exchange
+    # partial-aggregation speedup over the vectorized single-sort path
+    # on the same forced mesh, all five agg fns fingerprint-checked
+    # against reference first.
+    write_bench_doc(bench_mesh_subprocess("sharded_groupby"))
     # plan-optimizer gate (DESIGN.md §11): optimized plans must match
     # unoptimized bit-for-bit and beat them on the pushdown-heavy
     # three-table pipeline, smoke-sized.

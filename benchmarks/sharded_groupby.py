@@ -1,0 +1,180 @@
+"""Sharded partial-aggregation benchmark (DESIGN.md §12) — the perf
+gate for the aggregation refactor.
+
+Workload: multi-function group-by (SUM, COUNT, MIN, MAX, MEAN in one
+pass) over n rows with ~4096 distinct dense int32 keys — the regime
+the ``partial_agg`` optimizer rewrite targets. Each device reduces its
+shard to at most 4096 partial rows *before* the all-to-all exchange,
+so the exchange moves O(devices x groups) partials instead of O(n)
+rows; the single-host vectorized backend must instead sort-or-scatter
+the full n rows once per aggregate family.
+
+Values are int32, so every aggregate — including MEAN, finalized as an
+exact float64 division of exact int sums — is bit-for-bit across
+backends: not even the float summation-order carve-out applies, and
+the correctness gate is plain fingerprint equality against the
+``reference`` row-loop oracle. A fast wrong answer fails the
+benchmark, not production.
+
+Perf gate: sharded >= 1.5x over vectorized at n = 2e6 on an 8-device
+forced-host mesh (>= 1.2x at the 1e6-row smoke size CI runs). Emits a
+BENCH JSON line and, with ``--json PATH``, the same document to disk.
+
+Run: ``PYTHONPATH=src python -m benchmarks.sharded_groupby
+[--smoke] [--json PATH]``. Must be started fresh (it forces
+``--xla_force_host_platform_device_count=8`` before JAX imports);
+``benchmarks/run.py`` launches it as a subprocess for exactly that
+reason.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+N_DEVICES = 8
+
+# must precede any jax import (including transitively via repro.exec)
+if "jax" not in sys.modules and "--xla_force_host_platform" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={N_DEVICES}").strip()
+
+import numpy as np  # noqa: E402
+
+MIN_SPEEDUP = 1.5
+MIN_SPEEDUP_SMOKE = 1.2
+
+N_KEYS = 4096
+SPECS = (("sum", "v"), ("count", "v"), ("min", "v"), ("max", "v"),
+         ("mean", "v"))
+
+
+def row(name, metric, value, unit, notes=""):
+    print(f"{name},{metric},{value:.6g},{unit},{notes}")
+
+
+def _best_of_interleaved(reps, fns):
+    """Best-of timing with the candidates interleaved per rep, so a
+    throttled / noisy host (CI runners, cgroup cpu shares) degrades
+    every candidate's reps alike instead of whichever ran last."""
+    best = {name: float("inf") for name in fns}
+    for _ in range(reps):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            fn()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return best
+
+
+def _table(n: int):
+    from repro.data.tables import Table
+
+    rng = np.random.default_rng(0)
+    return Table({
+        "k": rng.integers(0, N_KEYS, n).astype(np.int32),
+        "v": rng.integers(-1_000_000, 1_000_000, n).astype(np.int32),
+    })
+
+
+def bench_sharded_groupby(smoke: bool = False,
+                          json_path: str | None = None,
+                          reps: int | None = None) -> dict:
+    import jax
+
+    from repro import exec as exec_backends
+
+    n_dev = jax.device_count()
+    if n_dev < N_DEVICES:
+        raise SystemExit(
+            f"sharded_groupby needs a {N_DEVICES}-device mesh, found "
+            f"{n_dev}: run fresh (module sets XLA_FLAGS) or set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{N_DEVICES}")
+
+    n = 1_000_000 if smoke else 2_000_000
+    floor = MIN_SPEEDUP_SMOKE if smoke else MIN_SPEEDUP
+    reps = reps if reps is not None else (5 if smoke else 4)
+    t = _table(n)
+
+    def agg(be):
+        return t.group_by(["k"]).agg(*SPECS, backend=be)
+
+    # correctness first: bit-for-bit vs the reference oracle. int32
+    # values => every fn (mean included) is carve-out-free.
+    want = agg("reference").fingerprint()
+    checked = ["vectorized", "jax", "sharded", "auto"]
+    for be in checked:
+        got = agg(be).fingerprint()
+        assert got == want, (
+            f"group_by_agg: backend {be!r} diverges from reference "
+            f"({got} != {want})")
+
+    timings = _best_of_interleaved(
+        reps, {be: (lambda b=be: agg(b))
+               for be in ("vectorized", "sharded")})
+    for be, tt in timings.items():
+        row("sharded_groupby", f"agg_{be}", tt * 1e3, "ms/call",
+            f"n={n} keys={N_KEYS} fns={len(SPECS)} mesh={n_dev}")
+    speedup = timings["vectorized"] / timings["sharded"]
+    row("sharded_groupby", "speedup", speedup, "x",
+        f"sharded over vectorized; gate >= {floor}x")
+
+    # auto must route this exact workload to the sharded backend
+    from repro.exec.auto import choose_group_by_agg
+    from repro.exec.stats import collect_stats
+    chosen = choose_group_by_agg(
+        collect_stats(t._to_cols(), ["k"]),
+        (t.column("v").dtype,),
+        n_devices=n_dev, sharded_available=True, jax_available=True)
+    row("sharded_groupby", "auto_choice", float(chosen == "sharded"),
+        "", f"auto picked {chosen!r}")
+
+    doc = {
+        "bench": "sharded_groupby",
+        "n_rows": n,
+        "n_keys": N_KEYS,
+        "agg_fns": sorted({fn for fn, _v in SPECS}),
+        "smoke": smoke,
+        "mesh_devices": n_dev,
+        "backends_checked": checked,
+        "timings_s": timings,
+        "speedup": speedup,
+        "auto_choice": chosen,
+        "gate_min_speedup": floor,
+    }
+    print("BENCH " + json.dumps(doc, sort_keys=True))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+
+    assert chosen == "sharded", (
+        f"auto-selection must route the large dense-int-key "
+        f"aggregation to 'sharded' on a multi-device mesh, picked "
+        f"{chosen!r}")
+    assert speedup >= floor, (
+        f"sharded group-by must be >= {floor}x over vectorized at "
+        f"n={n} on a {n_dev}-device mesh, got {speedup:.2f}x "
+        f"({timings['vectorized'] * 1e3:.0f}ms vs "
+        f"{timings['sharded'] * 1e3:.0f}ms)")
+    assert exec_backends.get_backend("auto").cache_token() \
+        .startswith("auto[v2")
+    return doc
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: smaller n, relaxed 1.2x gate")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the BENCH JSON document to PATH")
+    args = ap.parse_args(argv)
+    print("name,metric,value,unit,notes")
+    bench_sharded_groupby(smoke=args.smoke, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,7 @@ are statically discharged and can be elided.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Mapping
+from typing import Collection, Iterable, Mapping
 
 from repro.core import schema as S
 from repro.core.errors import (
@@ -130,6 +130,7 @@ def _resolve_upstream(
 def referenced_columns(
     inputs: Mapping[str, type[S.Schema]],
     output: type[S.Schema],
+    computed: Collection[str] = (),
 ) -> dict[str, set[str]]:
     """Per-input sets of upstream columns the output contract references.
 
@@ -142,9 +143,18 @@ def referenced_columns(
     Fresh columns (computed, no upstream) reference nothing. Keys are
     the input names used in ``inputs``; every input appears, possibly
     with an empty set.
+
+    ``computed`` names output columns the node *manufactures* — an
+    aggregate node's output columns (``agg_specs`` outs) — which must
+    not resolve by name: a spec output that happens to reuse an input
+    column's name carries aggregated values, not a pass-through, so a
+    by-name resolution would anchor an input column the verifier never
+    actually reaches (blocking its elision for nothing).
     """
     out: dict[str, set[str]] = {iname: set() for iname in inputs}
-    for column in output.columns().values():
+    for name, column in output.columns().items():
+        if name in computed and column.inherited_from is None:
+            continue
         src = _resolve_upstream(column, inputs)
         if src is not None:
             out[src[0]].add(src[1].name)

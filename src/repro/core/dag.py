@@ -220,9 +220,12 @@ class DeclarativeNode(Node):
     Joins form a left-deep chain: ``joins`` lists ``(table, on)`` pairs
     folded in order onto the first input (``join_with``/``join_on`` are
     the single-join sugar, normalized into ``joins``). The body is a
-    fixed join -> filter -> select shape, which is exactly what lowers
-    to the logical IR (:meth:`logical_tree`) — the optimizer rewrites
-    the IR, never this node."""
+    fixed join -> filter -> group-by -> select shape, which is exactly
+    what lowers to the logical IR (:meth:`logical_tree`) — the
+    optimizer rewrites the IR, never this node. ``group_keys`` +
+    ``agg_specs`` (normalized ``(fn, value, out)`` triples; see
+    ``repro.data.tables.resolve_agg_specs``) lower to the ``Aggregate``
+    op; when set, ``exprs`` project over the aggregate's output."""
 
     exprs: tuple[Expr, ...] = ()
     filter_expr: Expr | None = None
@@ -230,6 +233,8 @@ class DeclarativeNode(Node):
     join_on: tuple[str, ...] = ()
     joins: tuple[tuple[str, tuple[str, ...]], ...] = ()
     join_how: str = "inner"
+    group_keys: tuple[str, ...] = ()
+    agg_specs: tuple[tuple[str, str, str], ...] = ()
 
     def __post_init__(self):
         if not self.joins and self.join_with is not None:
@@ -256,12 +261,16 @@ class DeclarativeNode(Node):
         # ever *selects* existing rows. tests/test_engine.py keeps the
         # elided checks honest against the physical implementation.
         # A LEFT join manufactures NULLs in unmatched right columns, so
-        # it does not preserve.
+        # it does not preserve. Aggregation likewise manufactures NULLs
+        # (an all-NULL group's SUM/MIN/MAX/MEAN is NULL), so a grouped
+        # node never preserves.
         object.__setattr__(self, "null_preserving",
-                           self.join_how == "inner")
+                           self.join_how == "inner"
+                           and not self.agg_specs)
 
     def logical_tree(self):
-        """Lower to the logical IR (join(s) -> filter -> select)."""
+        """Lower to the logical IR
+        (join(s) -> filter -> aggregate -> select)."""
         from repro.core import logical as L
         (_, first_table), *_rest = list(self.inputs.items())
         op: "L.LogicalOp" = L.Scan(first_table)
@@ -269,6 +278,9 @@ class DeclarativeNode(Node):
             op = L.Join(op, L.Scan(t), on=tuple(on), how=self.join_how)
         if self.filter_expr is not None:
             op = L.Filter(op, self.filter_expr)
+        if self.agg_specs:
+            op = L.Aggregate(op, keys=tuple(self.group_keys),
+                             specs=tuple(self.agg_specs))
         if self.exprs:
             op = L.Project(op, tuple(self.exprs))
         return op
@@ -284,6 +296,11 @@ class DeclarativeNode(Node):
         # output_name(): `lit(0.25) AS x` and `lit(0.5) AS x` must not
         # collide in the content-addressed cache.
         parts = [f"select {[e.describe() for e in self.exprs]}"]
+        if self.agg_specs:
+            specs = [f"{fn}({value})->{out}"
+                     for fn, value, out in self.agg_specs]
+            parts.append(
+                f"group by {list(self.group_keys)} agg {specs}")
         if self.filter_expr is not None:
             parts.append(f"filter {self.filter_expr.describe()}")
         for t, on in self.joins:
@@ -378,19 +395,32 @@ class Pipeline:
             join_with: str | None = None,
             join_on: Sequence[str] = (),
             joins: Sequence[tuple[str, Sequence[str]]] = (),
-            join_how: str = "inner") -> DeclarativeNode:
+            join_how: str = "inner",
+            group_keys: Sequence[str] = (),
+            agg_specs: Sequence[tuple] = ()) -> DeclarativeNode:
         """Register a declarative node (paper Listing 4's annotated SQL).
 
         ``joins`` is the multi-join form (a left-deep ``(table, on)``
         chain); ``join_with``/``join_on`` remain the single-join sugar.
+        ``group_keys``/``agg_specs`` express GROUP BY: specs are
+        ``(fn, value)`` or ``(fn, value, out)`` tuples, normalized here
+        through the same :func:`~repro.data.tables.resolve_agg_specs`
+        as the eager ``Table.group_by().agg()`` path, so both spell
+        identical output columns.
         """
+        from repro.data.tables import resolve_agg_specs
+        if agg_specs and not group_keys:
+            raise PlanError(
+                f"node {name!r}: agg_specs requires group_keys")
         node = DeclarativeNode(
             name=name, inputs=dict(inputs),
             input_schemas=dict(input_schemas), output_schema=output_schema,
             exprs=tuple(exprs), filter_expr=filter_expr,
             join_with=join_with, join_on=tuple(join_on),
             joins=tuple((t, tuple(on)) for t, on in joins),
-            join_how=join_how)
+            join_how=join_how, group_keys=tuple(group_keys),
+            agg_specs=(resolve_agg_specs(group_keys, agg_specs)
+                       if agg_specs else ()))
         self.add(node)
         return node
 

@@ -1,7 +1,8 @@
 """Logical-plan IR: the rewrite target of the optimizer (DESIGN.md §11).
 
 A :class:`DeclarativeNode` lowers to a small tree of relational ops —
-``Scan`` / ``Filter`` / ``Project`` / ``Join`` / ``Reorder`` — that the
+``Scan`` / ``Filter`` / ``Project`` / ``Aggregate`` / ``Join`` /
+``Reorder`` — that the
 optimizer's ``Plan -> Plan`` passes restructure (pushdown, reordering,
 pruning, probe fusion) and the engine executes in place of the node's
 original body. The IR is deliberately tiny: it models exactly the
@@ -38,7 +39,8 @@ import numpy as np
 from repro import exec as exec_backends
 from repro.data.tables import Expr, Table, _ColumnData
 
-__all__ = ["LogicalOp", "Scan", "Filter", "Project", "Join", "Reorder"]
+__all__ = ["LogicalOp", "Scan", "Filter", "Project", "Aggregate",
+           "Join", "Reorder"]
 
 
 def _pred_mask(t: Table, pred: Expr | None) -> np.ndarray | None:
@@ -151,6 +153,55 @@ class Project(LogicalOp):
     def _exec(self, tables, stats):
         t, _ = self.child._exec(tables, stats)
         return t.select(list(self.exprs)), None
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregate(LogicalOp):
+    """Multi-function GROUP BY: one output row per distinct key tuple
+    (first-appearance order), key columns first, then one column per
+    ``(fn, value, out)`` spec. Semantics are the execution backends'
+    ``group_by_agg`` contract (``repro.exec.base``): SQL NULL handling,
+    the reference backend as the bit-for-bit oracle, float SUM/MEAN
+    exact only up to summation order.
+
+    ``strategy`` is physical routing, not semantics: ``"auto"`` (the
+    default) dispatches through the active backend; ``"partial"`` — set
+    only by the optimizer's ``partial_agg`` rewrite — requests the
+    sharded backend's pre-exchange partial aggregation, degrading to
+    the active backend when no mesh backend is available (every
+    strategy computes the same table; only float summation order can
+    differ, which is exactly why a non-default strategy is rendered in
+    ``describe()`` and therefore moves the cache key)."""
+
+    child: LogicalOp
+    keys: tuple[str, ...]
+    specs: tuple[tuple[str, str, str], ...]
+    strategy: str = "auto"
+
+    def children(self):
+        return (self.child,)
+
+    def describe(self) -> str:
+        specs = [f"{fn}({value})->{out}" for fn, value, out in self.specs]
+        strat = "" if self.strategy == "auto" \
+            else f", strategy={self.strategy}"
+        return (f"aggregate(keys={list(self.keys)}, specs={specs}"
+                f"{strat}, {self.child.describe()})")
+
+    def _exec(self, tables, stats):
+        t, ts = self.child._exec(tables, stats)
+        be = exec_backends.resolve(None)
+        if self.strategy == "partial":
+            try:
+                be = exec_backends.get_backend("sharded")
+            except (KeyError, exec_backends.BackendUnavailable):
+                pass    # no mesh on this install; any backend is correct
+        kwargs = {}
+        if getattr(be, "accepts_group_stats", False):
+            kwargs = {"stats": ts}
+        cols = be.group_by_agg(t._to_cols(), self.keys, self.specs,
+                               **kwargs)
+        return Table._from_cols(cols), None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -31,7 +31,8 @@ import numpy as np
 
 from repro import exec as exec_backends
 
-__all__ = ["Table", "col", "lit", "str_lit", "arrow_cast", "Expr"]
+__all__ = ["Table", "GroupedTable", "resolve_agg_specs", "col", "lit",
+           "str_lit", "arrow_cast", "Expr"]
 
 _NP_TO_LOGICAL = {
     "int8": "int8", "int16": "int16", "int32": "int32", "int64": "int64",
@@ -292,10 +293,26 @@ class Table:
                                 left_mask=_mask(self, left_pred),
                                 right_mask=_mask(other, right_pred)))
 
+    def group_by(self, keys: Sequence[str]) -> "GroupedTable":
+        """Declarative multi-function GROUP BY::
+
+            t.group_by(["k"]).agg(("sum", "v"), ("count", "v", "n"))
+
+        Aggregate fns: ``sum``/``count``/``min``/``max``/``mean``. SQL
+        NULL semantics throughout (see ``repro.exec.base``): aggregates
+        skip NULL values (an all-NULL group is NULL, except COUNT,
+        which counts 0 and is never NULL), and all NULL keys form ONE
+        group. In a declarative pipeline the same call lowers to the
+        ``Aggregate`` logical op instead of executing eagerly."""
+        return GroupedTable(self, tuple(keys))
+
     def group_by_sum(self, keys: Sequence[str], value: str,
                      out: str | None = None, *,
                      backend: "str | None" = None) -> "Table":
-        """GROUP BY keys, SUM(value) — the paper's Listing 1 aggregate.
+        """GROUP BY keys, SUM(value) — the paper's Listing 1 aggregate,
+        now a thin wrapper over :meth:`group_by`'s multi-function path
+        (the regression suite pins its fingerprints byte-identical to
+        the pre-refactor implementation).
 
         SQL aggregate semantics over nullable columns: NULL values are
         skipped by SUM (a group whose values are all NULL sums to NULL),
@@ -306,25 +323,81 @@ class Table:
         de-collided against the key names); an explicit ``out`` that
         names a group key raises instead of silently overwriting it.
         """
-        if out is None:
-            out = f"{value}_sum"
-            i = 1
-            while out in keys:
-                out = f"{value}_sum_{i}"
-                i += 1
-        elif out in keys:
-            raise ValueError(
-                f"group_by_sum: out={out!r} collides with a group key; "
-                f"pick a distinct output column name")
-        be = exec_backends.resolve(backend)
-        return Table._from_cols(
-            be.group_by_sum(self._to_cols(), tuple(keys), value, out))
+        spec = ("sum", value) if out is None else ("sum", value, out)
+        return GroupedTable(self, tuple(keys)).agg(spec, backend=backend)
 
     def concat(self, other: "Table", *,
                backend: "str | None" = None) -> "Table":
         be = exec_backends.resolve(backend)
         return Table._from_cols(
             be.concat(self._to_cols(), other._to_cols()))
+
+
+# ---------------------------------------------------------------------------
+# GROUP BY
+# ---------------------------------------------------------------------------
+
+def resolve_agg_specs(keys: Sequence[str],
+                      specs: Sequence[tuple]) -> tuple[tuple[str, str, str], ...]:
+    """Normalize user-facing agg specs — ``(fn, value)`` or
+    ``(fn, value, out)`` — into the backend's ``(fn, value, out)``
+    triples. Default output names are ``{value}_{fn}``, deterministically
+    de-collided (``{value}_{fn}_{i}``) against the group keys and every
+    name already taken by an earlier spec — the exact scheme
+    ``group_by_sum`` always used, so its pinned names are unchanged. An
+    explicit ``out`` that names a group key raises instead of silently
+    overwriting it. Shared by the eager Table path and the declarative
+    DAG lowering, so both produce identical plans."""
+    if not specs:
+        raise ValueError("agg: at least one (fn, value[, out]) spec "
+                         "is required")
+    used = set(keys)
+    resolved: list[tuple[str, str, str]] = []
+    for spec in specs:
+        if len(spec) == 2:
+            fn, value = spec
+            out = None
+        elif len(spec) == 3:
+            fn, value, out = spec
+        else:
+            raise ValueError(
+                f"agg: expected (fn, value) or (fn, value, out), "
+                f"got {spec!r}")
+        if out is None:
+            out = f"{value}_{fn}"
+            i = 1
+            while out in used:
+                out = f"{value}_{fn}_{i}"
+                i += 1
+        elif out in keys:
+            raise ValueError(
+                f"agg: out={out!r} collides with a group key; "
+                f"pick a distinct output column name")
+        elif out in used:
+            raise ValueError(
+                f"agg: out={out!r} is produced by more than one spec")
+        used.add(out)
+        resolved.append((fn, value, out))
+    return tuple(resolved)
+
+
+class GroupedTable:
+    """The result of :meth:`Table.group_by` — holds the keys and waits
+    for :meth:`agg` to name the aggregates."""
+
+    def __init__(self, table: Table, keys: tuple[str, ...]):
+        self._table = table
+        self._keys = keys
+
+    def agg(self, *specs: tuple, backend: "str | None" = None) -> Table:
+        """Execute the aggregation: one output row per distinct key
+        tuple in first-appearance order, key columns first, then one
+        column per spec."""
+        resolved = resolve_agg_specs(self._keys, specs)
+        be = exec_backends.resolve(backend)
+        return Table._from_cols(
+            be.group_by_agg(self._table._to_cols(), self._keys,
+                            resolved))
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,7 @@
 """Pluggable columnar execution backends (DESIGN.md §9).
 
 The table layer (:class:`repro.data.tables.Table`) dispatches its
-physical operators — ``hash_join``, ``group_by_sum``, ``filter_select``,
+physical operators — ``hash_join``, ``group_by_agg``, ``filter_select``,
 ``concat`` — through this registry, so *what* a pipeline computes
 (contracts, NULL semantics, row order) is fixed while *how* it executes
 is swappable:

@@ -9,12 +9,14 @@ table is deliberately small and fully unit-tested
 ====================  ==========================================  =========
 operation             condition (first match wins)                backend
 ====================  ==========================================  =========
-join / group_by_sum   total rows <= tiny (64)                     reference
+join / group_by_agg   total rows <= tiny (64)                     reference
 join                  single int key, span <= 4*(nl+nr)+1024      vectorized
 join                  rows >= shard_rows AND >1 device            sharded
 join                  anything else                               vectorized
-group_by_sum          rows >= device_rows AND dtype lowers        jax
-group_by_sum          anything else                               vectorized
+group_by_agg          rows >= shard_rows AND >1 device AND        sharded
+                      single dense int key AND dtypes lower
+group_by_agg          rows >= device_rows AND dtypes lower        jax
+group_by_agg          anything else                               vectorized
 ====================  ==========================================  =========
 
 Rationale per row: tiny tables are dominated by per-call constants,
@@ -22,9 +24,14 @@ where the interpreted reference's plain dicts beat any array setup;
 dense single-int-key joins hit the vectorized backend's direct-address
 bincount probe, which no device round-trip amortizes; large joins are
 the one place the mesh pays (the sharded radix exchange); large
-aggregations lower to the segment-sum kernel when the value dtype can
-live on the device. A picked backend that turns out unavailable on
-this install (no JAX) degrades one row down, never errors.
+aggregations with a dense single integer key take the sharded
+backend's pre-exchange partial aggregation when the mesh has more than
+one device (the exchange ships one lane per (shard, distinct key), so
+high-duplication keys collapse before any cross-device traffic),
+otherwise they lower to the segment-reduce kernel family when every
+value dtype can live on the device. A picked backend that turns out
+unavailable on this install (no JAX) degrades one row down, never
+errors.
 
 Thresholds are tunable by env (``REPRO_AUTO_TINY_ROWS``,
 ``REPRO_AUTO_SHARD_ROWS``, ``REPRO_AUTO_DEVICE_ROWS``) because they
@@ -41,12 +48,16 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.exec.base import Backend, Columns
+from repro.exec.base import AggSpec, Backend, Columns, normalize_agg_specs
 from repro.exec.stats import TableStats, collect_stats
 
-__all__ = ["AutoBackend", "choose_join", "choose_group_by"]
+__all__ = ["AutoBackend", "choose_join", "choose_group_by",
+           "choose_group_by_agg"]
 
-_POLICY_VERSION = 1
+# v2: group-by policy learned the sharded partial-aggregation row (and
+# group_by_sum now routes through it) — the bump moves every auto cache
+# key so pre-partial-agg entries cannot be served to the new policy.
+_POLICY_VERSION = 2
 
 TINY_ROWS = int(os.environ.get("REPRO_AUTO_TINY_ROWS", "64"))
 SHARD_ROWS = int(os.environ.get("REPRO_AUTO_SHARD_ROWS", "200000"))
@@ -87,13 +98,41 @@ def choose_join(left: TableStats, right: TableStats, *,
 
 def choose_group_by(stats: TableStats, value_dtype: np.dtype, *,
                     jax_available: bool = False) -> str:
-    """The stats -> backend decision table for aggregation."""
+    """The single-SUM decision table (kept for back-compat callers;
+    the general entry point is :func:`choose_group_by_agg`)."""
+    return choose_group_by_agg(stats, (value_dtype,),
+                               jax_available=jax_available)
+
+
+def choose_group_by_agg(stats: TableStats,
+                        value_dtypes: Sequence[np.dtype], *,
+                        n_devices: int = 1,
+                        sharded_available: bool = False,
+                        jax_available: bool = False) -> str:
+    """The stats -> backend decision table for group_by_agg (pure
+    function — the unit under test). First match wins: tiny tables ->
+    reference; large tables on a real mesh with a dense single integer
+    key and device-lowerable values -> sharded partial aggregation;
+    large device-lowerable tables -> jax segment kernels; everything
+    else -> vectorized."""
     if stats.n_rows <= TINY_ROWS:
         return "reference"
-    if stats.n_rows >= DEVICE_ROWS and jax_available \
-            and _lowers(value_dtype):
+    lowers = all(_lowers(dt) for dt in value_dtypes)
+    if (stats.n_rows >= SHARD_ROWS and n_devices > 1
+            and sharded_available and lowers
+            and stats.single_int_key and _dense_group_span(stats)):
+        return "sharded"
+    if stats.n_rows >= DEVICE_ROWS and jax_available and lowers:
         return "jax"
     return "vectorized"
+
+
+def _dense_group_span(stats: TableStats) -> bool:
+    from repro.exec.vectorized import dense_span_affordable
+    if None in (stats.int_key_lo, stats.int_key_hi):
+        return False
+    span = stats.int_key_hi - stats.int_key_lo + 1
+    return dense_span_affordable(span, stats.n_rows)
 
 
 def _lowers(dtype: np.dtype) -> bool:
@@ -202,18 +241,27 @@ class AutoBackend(Backend):
             left, right, on, how,
             left_mask=left_mask, right_mask=right_mask)
 
-    def group_by_sum(self, cols: Columns, keys: Sequence[str],
-                     value: str, out: str, *,
+    accepts_group_stats = True
+
+    def group_by_agg(self, cols: Columns, keys: Sequence[str],
+                     specs: Sequence[AggSpec], *,
                      stats: "TableStats | None" = None) -> Columns:
-        values, _ = cols[value]
+        specs = normalize_agg_specs(cols, keys, specs)
         if stats is None:
             stats = collect_stats(cols, keys,
                                   estimate_cardinality=False)
-        choice = choose_group_by(
-            stats, values.dtype,
+        choice = choose_group_by_agg(
+            stats, tuple(cols[value][0].dtype for _fn, value, _o in specs),
+            n_devices=self._devices(),
+            sharded_available=self._available("sharded"),
             jax_available=self._available("jax"))
-        return self._delegate(choice).group_by_sum(cols, keys, value,
-                                                   out)
+        return self._delegate(choice).group_by_agg(cols, keys, specs)
+
+    def group_by_sum(self, cols: Columns, keys: Sequence[str],
+                     value: str, out: str, *,
+                     stats: "TableStats | None" = None) -> Columns:
+        return self.group_by_agg(cols, keys, (("sum", value, out),),
+                                 stats=stats)
 
     # filter_select / concat: the shared default implementations are
     # already a plain gather/concatenate — nothing to select between.

@@ -2,7 +2,7 @@
 
 A backend implements the four physical operators the relational layer
 dispatches (:class:`~repro.data.tables.Table` stays the only public
-API): ``hash_join``, ``group_by_sum``, ``filter_select`` and ``concat``.
+API): ``hash_join``, ``group_by_agg``, ``filter_select`` and ``concat``.
 Backends operate on *column dicts* — ``{name: (values, valid)}`` with
 numpy value arrays and optional boolean validity masks — rather than on
 :class:`Table` itself, so the package has no import cycle with the
@@ -14,11 +14,13 @@ row-loop implementation): every registered backend must agree with it
 bit-for-bit — including NULL handling, row order, and the typed fill
 payloads it writes into invalid lanes (fills are hashed by
 ``Table.fingerprint``, so "don't care" lanes still have to match).
-One documented carve-out: *float* SUM results are deterministic per
-backend but exact only up to summation order across backends (SIMD /
-device reductions regroup additions; no engine promises bit-stable
-float aggregation across execution strategies). Integer sums have no
-carve-out — integer addition is associative even under wraparound.
+One documented carve-out: *float* SUM and MEAN results are
+deterministic per backend but exact only up to summation order across
+backends (SIMD / device reductions regroup additions, and MEAN is
+finalized from a float sum; no engine promises bit-stable float
+aggregation across execution strategies). Integer sums have no
+carve-out — integer addition is associative even under wraparound —
+and MIN/MAX/COUNT have none either (order-independent reductions).
 ``tests/test_exec_backends.py`` enforces all of this differentially.
 
 Shared NULL conventions (SQL semantics, established in PR 2):
@@ -27,7 +29,10 @@ Shared NULL conventions (SQL semantics, established in PR 2):
   NaN/NaT keys also match nothing (Python/numpy equality agrees);
 - GROUP BY keys: all NULL keys form ONE group; NaN keys are pairwise
   distinct (NaN != NaN), so each NaN-keyed row is its own group;
-- SUM skips NULL values; a group whose values are all NULL sums to NULL.
+- SUM/MIN/MAX/MEAN skip NULL values; a group whose values are all NULL
+  aggregates to NULL. COUNT counts non-NULL values and is never NULL
+  (an all-NULL group counts 0). A NaN *value* (valid lane) propagates
+  through MIN/MAX (numpy ``minimum``/``maximum`` semantics).
 """
 from __future__ import annotations
 
@@ -35,7 +40,8 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
-__all__ = ["Columns", "Backend", "fill_value", "payload_validity"]
+__all__ = ["Columns", "Backend", "fill_value", "payload_validity",
+           "AGG_FNS", "AggSpec", "normalize_agg_specs"]
 
 # {column name: (values, validity-or-None)} — insertion order is column
 # order. `valid is None` means "no NULLs" (the Table-layer convention).
@@ -69,11 +75,48 @@ def _column_length(cols: Columns) -> int:
     return 0
 
 
+# The aggregate vocabulary every backend must implement. MEAN is always
+# finalized from SUM and COUNT (float64 for numeric values) so the
+# sharded backend can ship partials; COUNT is COUNT(value) — non-NULL
+# lanes — int64 and never NULL.
+AGG_FNS = ("sum", "count", "min", "max", "mean")
+
+# One aggregate: (fn, value column, output column).
+AggSpec = tuple[str, str, str]
+
+
+def normalize_agg_specs(cols: Columns, keys: Sequence[str],
+                        specs: Sequence[AggSpec]) -> tuple[AggSpec, ...]:
+    """Validate one ``group_by_agg`` call (shared by every backend).
+
+    Checks fn vocabulary, value-column existence, and output-name
+    collisions (against the group keys and between specs). Returns the
+    specs as a plain tuple so backends can hash/iterate it freely."""
+    out: list[AggSpec] = []
+    seen: set[str] = set(keys)
+    for spec in specs:
+        fn, value, name = spec
+        if fn not in AGG_FNS:
+            raise ValueError(
+                f"unknown aggregate fn {fn!r} (expected one of {AGG_FNS})")
+        if value not in cols:
+            raise KeyError(f"unknown aggregate value column: {value!r}")
+        if name in seen:
+            raise ValueError(
+                f"aggregate output column {name!r} collides with a "
+                f"group key or another aggregate output")
+        seen.add(name)
+        out.append((fn, value, name))
+    if not out:
+        raise ValueError("group_by_agg requires at least one spec")
+    return tuple(out)
+
+
 class Backend:
     """One physical implementation of the relational operators.
 
     Subclasses set ``name`` and implement ``hash_join`` and
-    ``group_by_sum``; ``filter_select`` and ``concat`` have shared
+    ``group_by_agg``; ``filter_select`` and ``concat`` have shared
     default implementations (plain gather/concatenate — already
     vectorized, and semantics-free enough that the differential suite
     keeps everyone honest)."""
@@ -124,9 +167,20 @@ class Backend:
         return self.hash_join(left, right, on, how)
 
     # -- aggregation ----------------------------------------------------
+    def group_by_agg(self, cols: Columns, keys: Sequence[str],
+                     specs: Sequence[AggSpec]) -> Columns:
+        """Multi-function GROUP BY: one output row per distinct key
+        tuple (first-appearance order, the reference backend's dict
+        order), key columns first, then one column per ``(fn, value,
+        out)`` spec. NULL semantics per the module docstring."""
+        raise NotImplementedError
+
     def group_by_sum(self, cols: Columns, keys: Sequence[str],
                      value: str, out: str) -> Columns:
-        raise NotImplementedError
+        """Back-compat single-SUM entry point — now a thin delegation
+        to ``group_by_agg`` (pinned byte-identical to the pre-refactor
+        path by the regression suite)."""
+        return self.group_by_agg(cols, keys, (("sum", value, out),))
 
     # -- row selection --------------------------------------------------
     def filter_select(self, cols: Columns, mask: np.ndarray) -> Columns:

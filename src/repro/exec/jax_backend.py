@@ -4,10 +4,12 @@ Inherits the vectorized backend's join/filter/concat and key
 factorization (host-side, numpy) — including the filter-fused
 ``masked_hash_join`` (key-validity ANDing), so the optimizer's
 probe-fusion rewrite benefits this backend with no code here — and
-overrides only the aggregation inner loop: per-group sums run through
-:func:`repro.kernels.segment_sum.ops.masked_segment_sum` — XLA
-``segment_sum`` by default, or the Pallas kernel when constructed with
-``use_pallas=True`` (env ``REPRO_SEGSUM_PALLAS=1``).
+overrides only the aggregation inner loops: per-group SUM/MEAN run
+through :func:`repro.kernels.segment_sum.ops.masked_segment_sum` and
+MIN/MAX through :func:`~repro.kernels.segment_sum.ops.
+masked_segment_reduce` — XLA segment ops by default, or the Pallas
+kernels when constructed with ``use_pallas=True``
+(env ``REPRO_SEGSUM_PALLAS=1``).
 
 Exactness contract with the ``reference`` oracle:
 
@@ -29,9 +31,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.exec.base import fill_value
 from repro.exec.vectorized import VectorizedBackend
 from repro.kernels import fallback
-from repro.kernels.segment_sum.ops import masked_segment_sum
+from repro.kernels.segment_sum.ops import (masked_segment_reduce,
+                                           masked_segment_sum)
 
 __all__ = ["JaxBackend"]
 
@@ -66,9 +70,22 @@ class JaxBackend(VectorizedBackend):
         if not fallback.device_supports_dtype(dtype):
             if fallback.x64_is_the_fix(dtype):
                 fallback.warn_numpy_fallback(
-                    f"{self.name}.group_by_sum", dtype)
+                    f"{self.name}.group_by_agg", dtype)
             return False
         return True
+
+    @staticmethod
+    def _segment_ids(order: np.ndarray, bounds: np.ndarray,
+                     grp_order: np.ndarray, n_groups: int,
+                     n: int) -> np.ndarray:
+        """Per-row segment ids in output (first-appearance) order, from
+        the group-run structure the vectorized base already computed."""
+        run_lengths = np.diff(np.r_[bounds, n])
+        inv_code = np.empty(n, dtype=np.int64)
+        inv_code[order] = np.repeat(np.arange(n_groups), run_lengths)
+        rank = np.empty(n_groups, dtype=np.int64)
+        rank[grp_order] = np.arange(n_groups)
+        return rank[inv_code]
 
     def _aggregate(self, values: np.ndarray, ok: np.ndarray,
                    order: np.ndarray, bounds: np.ndarray,
@@ -77,15 +94,8 @@ class JaxBackend(VectorizedBackend):
         if n_groups == 0 or not self._supported(values.dtype):
             return super()._aggregate(values, ok, order, bounds,
                                       grp_order, n_groups)
-        # per-row segment ids in output (first-appearance) order, from
-        # the group-run structure the vectorized base already computed
-        n = len(values)
-        run_lengths = np.diff(np.r_[bounds, n])
-        inv_code = np.empty(n, dtype=np.int64)
-        inv_code[order] = np.repeat(np.arange(n_groups), run_lengths)
-        rank = np.empty(n_groups, dtype=np.int64)
-        rank[grp_order] = np.arange(n_groups)
-        gid = rank[inv_code]
+        gid = self._segment_ids(order, bounds, grp_order, n_groups,
+                                len(values))
         sums, counts = masked_segment_sum(
             jnp.asarray(values), jnp.asarray(gid.astype(np.int32)),
             jnp.asarray(ok), n_groups,
@@ -93,3 +103,25 @@ class JaxBackend(VectorizedBackend):
         # empty segments already hold 0 == the canonical numeric fill
         return (np.asarray(sums).astype(values.dtype, copy=False),
                 np.asarray(counts) > 0)
+
+    def _agg_minmax(self, fn: str, values: np.ndarray, ok: np.ndarray,
+                    order: np.ndarray, bounds: np.ndarray,
+                    grp_order: np.ndarray, n_groups: int
+                    ) -> tuple[np.ndarray, np.ndarray]:
+        vdt = values.dtype
+        if (n_groups == 0 or vdt == object or vdt.kind not in "fiu"
+                or not self._supported(vdt)):
+            return super()._agg_minmax(fn, values, ok, order, bounds,
+                                       grp_order, n_groups)
+        gid = self._segment_ids(order, bounds, grp_order, n_groups,
+                                len(values))
+        red, counts = masked_segment_reduce(
+            jnp.asarray(values), jnp.asarray(gid.astype(np.int32)),
+            jnp.asarray(ok), n_groups, op=fn,
+            use_pallas=self.use_pallas, interpret=self.interpret)
+        # empty segments hold the reduce identity (±inf / dtype
+        # extremes), not the canonical fill — rewrite them.
+        red = np.array(red).astype(vdt, copy=False)
+        has = np.asarray(counts) > 0
+        red[~has] = fill_value(vdt)
+        return red, has

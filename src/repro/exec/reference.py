@@ -21,12 +21,13 @@ from typing import Any, Sequence
 
 import numpy as np
 
-from repro.exec.base import (Backend, Columns, _column_length, fill_value,
+from repro.exec.base import (AggSpec, Backend, Columns, _column_length,
+                             fill_value, normalize_agg_specs,
                              payload_validity)
 
 __all__ = ["ReferenceBackend"]
 
-# Sentinel marking a NULL group key in group_by_sum: SQL GROUP BY puts
+# Sentinel marking a NULL group key in group_by_agg: SQL GROUP BY puts
 # all NULL keys in one group (unlike join equality, which matches none).
 _NULL = object()
 
@@ -98,27 +99,32 @@ class ReferenceBackend(Backend):
         return ok
 
     # -- aggregation ----------------------------------------------------
-    def group_by_sum(self, cols: Columns, keys: Sequence[str],
-                     value: str, out: str) -> Columns:
-        # SQL aggregate semantics over nullable columns: NULL values are
-        # skipped by SUM (a group whose values are all NULL sums to
-        # NULL), and NULL keys form their own single group.
+    def group_by_agg(self, cols: Columns, keys: Sequence[str],
+                     specs: Sequence[AggSpec]) -> Columns:
+        # SQL aggregate semantics over nullable columns: SUM/MIN/MAX/
+        # MEAN skip NULL values (an all-NULL group aggregates to NULL),
+        # COUNT counts non-NULL values and is never NULL, and NULL keys
+        # form their own single group. Two row loops: one assigns group
+        # slots in first-appearance (dict-insertion) order, then each
+        # spec accumulates in row order — the same order the original
+        # single-pass group_by_sum used, so SUM results are bit-for-bit
+        # unchanged.
+        specs = normalize_agg_specs(cols, keys, specs)
         n = _column_length(cols)
         kcols = [cols[k][0] for k in keys]
         kvalid = [self._validity(cols[k]) for k in keys]
-        vals, vvalid_mask = cols[value]
-        vvalid = self._validity(cols[value])
-        groups: dict[tuple, Any] = {}
+        groups: dict[tuple, int] = {}
         order: list[tuple] = []
+        gid = np.empty(n, dtype=np.int64)
         for i in range(n):
             k = tuple(c[i] if kvalid[j][i] and c[i] is not None else _NULL
                       for j, c in enumerate(kcols))
-            if k not in groups:
-                groups[k] = None          # SUM over no non-NULL values
+            slot = groups.get(k)
+            if slot is None:
+                slot = len(order)
+                groups[k] = slot
                 order.append(k)
-            v = vals[i]
-            if vvalid[i] and v is not None:
-                groups[k] = v if groups[k] is None else groups[k] + v
+            gid[i] = slot
         data: dict[str, tuple[np.ndarray, np.ndarray | None]] = {}
         for j, kname in enumerate(keys):
             dt = kcols[j].dtype
@@ -127,13 +133,59 @@ class ReferenceBackend(Backend):
                                 for k in order], dtype=dt)
             mask = np.array([k[j] is not _NULL for k in order], dtype=bool)
             data[kname] = (colvals, mask)
-        vdt = vals.dtype
-        vfill = fill_value(vdt)
-        data[out] = (
-            np.array([vfill if groups[k] is None else groups[k]
-                      for k in order], dtype=vdt),
-            np.array([groups[k] is not None for k in order], dtype=bool))
+        for fn, value, out in specs:
+            data[out] = self._agg_one(fn, cols[value], gid, len(order))
         return data
+
+    @staticmethod
+    def _agg_one(fn: str, col: tuple[np.ndarray, "np.ndarray | None"],
+                 gid: np.ndarray, n_groups: int
+                 ) -> tuple[np.ndarray, np.ndarray | None]:
+        vals, valid = col
+        ok = payload_validity(vals, valid)
+        counts = np.zeros(n_groups, dtype=np.int64)
+        acc: list[Any] = [None] * n_groups
+        is_object = vals.dtype == object
+        for i in range(len(vals)):
+            if not ok[i]:
+                continue
+            g = int(gid[i])
+            counts[g] += 1
+            v = vals[i]
+            a = acc[g]
+            if a is None:
+                acc[g] = v
+            elif fn in ("sum", "mean"):
+                acc[g] = a + v
+            elif fn == "min":
+                # object: Python compare (ties keep the accumulator);
+                # numeric: np.minimum, which propagates NaN values.
+                acc[g] = (v if v < a else a) if is_object else np.minimum(a, v)
+            elif fn == "max":
+                acc[g] = (v if v > a else a) if is_object else np.maximum(a, v)
+        if fn == "count":
+            return counts, None         # COUNT is int64 and never NULL
+        if fn == "mean":
+            if is_object:
+                vdt = np.dtype(object)
+                res = [None if a is None else a / c
+                       for a, c in zip(acc, counts)]
+            else:
+                # MEAN is always SUM/COUNT finalized in float64 — the
+                # shippable-partials definition every backend shares
+                # (and the float summation-order carve-out extends to it).
+                vdt = np.dtype(np.float64)
+                res = [None if a is None else np.float64(a) / c
+                       for a, c in zip(acc, counts)]
+            fill = fill_value(vdt)
+            return (np.array([fill if a is None else a for a in res],
+                             dtype=vdt),
+                    np.array([a is not None for a in res], dtype=bool))
+        vdt = vals.dtype
+        fill = fill_value(vdt)
+        return (np.array([fill if a is None else a for a in acc],
+                         dtype=vdt),
+                np.array([a is not None for a in acc], dtype=bool))
 
     @staticmethod
     def _validity(col: tuple[np.ndarray, "np.ndarray | None"]) -> np.ndarray:

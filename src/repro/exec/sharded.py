@@ -60,9 +60,27 @@ Division of labor (host steps are numpy, device steps run under
    backend's ``_emit_join`` — which is what makes the output
    bit-for-bit identical to ``reference``, row order included.
 
-Aggregation, filter and concat are inherited (segment-sum kernel /
-numpy): the ROADMAP item this implements is specifically the
-distributed join.
+Aggregation (PR 7) moves onto the mesh too: ``group_by_agg`` runs
+per-shard *partial* aggregation under ``shard_map`` BEFORE the
+``all_to_all`` exchange. Each shard reduces its local rows to one
+partial stat vector per (distinct key, needed stat), so the exchange
+ships one lane per (shard, key slot) instead of one per input row;
+the key's owner shard combines the partials (add for SUM/COUNT,
+min/max for MIN/MAX), and MEAN is finalized from the shipped
+sum+count after the exchange — it is never shipped as a value. The
+per-shard reduction mirrors the join's two probe strategies: <= 32-bit
+integer values take a packed single-operand sort (counts/sums/min/max
+all fall out of run boundaries — no scatter, which XLA:CPU serializes
+per row), while float and 64-bit values, plus the ``use_pallas`` TPU
+target, run the masked ``kernels/segment_sum`` family (NaN
+propagation baked into each partial). First-appearance output order
+never rides the exchange at all: the host already materialized the
+dense slot codes for the rebase, so one reversed fancy assignment
+recovers each slot's first row and one small argsort over distinct
+keys (never over rows) orders the output. Eligibility mirrors the
+join's direct-address fast path (single integer key, affordable span,
+device-lowerable value dtypes); everything else falls back to the
+inherited jax/vectorized path. Filter and concat stay inherited.
 """
 from __future__ import annotations
 
@@ -76,11 +94,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import shard_map
-from repro.exec.base import Columns, _column_length, payload_validity
+from repro.exec.base import (AggSpec, Columns, _column_length, fill_value,
+                             normalize_agg_specs, payload_validity)
 from repro.exec.jax_backend import JaxBackend
-from repro.exec.vectorized import _and_key_validity, _join_codes
+from repro.exec.vectorized import (_and_key_validity, _join_codes,
+                                   dense_span_affordable)
 from repro.kernels import fallback
 from repro.kernels.hash_join.ops import hash_probe, masked_hash_probe
+from repro.kernels.segment_sum.ops import (masked_segment_reduce,
+                                           masked_segment_sum)
+from repro.kernels.segment_sum.ref import reduce_identity
 
 __all__ = ["ShardedBackend"]
 
@@ -276,6 +299,143 @@ def _probe_fn(ndev: int, cap_l: int, cap_r: int, span_shard: int,
                        out_specs=(out, out, out), check_vma=False)
     shard = NamedSharding(mesh, spec)
     return jax.jit(mapped, in_shardings=(shard,) * len(in_specs))
+
+
+@functools.lru_cache(maxsize=64)
+def _partial_agg_fn(ndev: int, seg_shard: int, col_sig: tuple,
+                    use_pallas: bool, interpret: bool):
+    """Build + jit the shard_map'd partial-aggregation exchange for one
+    static signature. ``col_sig`` is a tuple of (dtype str, stats
+    tuple) per distinct value column, stats drawn from
+    {"sum", "min", "max"} — COUNT partials are always produced (they
+    double as output validity and the MEAN divisor).
+
+    Protocol per shard: reduce local rows to (nseg,) partial vectors,
+    ``all_to_all`` each vector (one lane per (shard, key slot) — never
+    one per row), then the owner shard combines its slot range: add
+    for sum/count, min/max for min/max. Two per-column reduction
+    strategies, the aggregation twin of the join's packed/table probe
+    split:
+
+    - packed (the CPU-mesh default for <= 32-bit integer values): one
+      single-operand sort of ``slot << 32 | order-biased value`` —
+      counts are run lengths, the sum is a difference of two lanes of
+      one wrapping cumsum (modular, so bit-identical to the
+      reference), and min/max are the run's first/last element. No
+      scatter anywhere: XLA:CPU lowers segment ops to a serial
+      per-row scatter that costs ~10x the sort at benchmark shapes.
+    - kernels/segment_sum family (``use_pallas`` — the TPU compile
+      target — plus float and 64-bit values, whose NaN propagation
+      and non-reorderable sums want the masked kernels). NaN
+      poisoning is baked into each shard's partial by
+      ``masked_segment_reduce``, and jnp.min/max propagate it
+      through the combine."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = _get_mesh(ndev)
+    nseg = ndev * seg_shard
+
+    def combine(x, mode: str):
+        y = jax.lax.all_to_all(x, "shard", split_axis=0,
+                               concat_axis=0, tiled=True)
+        y = y.reshape(ndev, seg_shard)
+        if mode == "sum":
+            # dtype pinned: int partial sums must wrap in the value
+            # dtype (associative, so bit-identical to the reference),
+            # not promote to the platform int.
+            return jnp.sum(y, axis=0, dtype=y.dtype)[None, :]
+        if mode == "min":
+            return jnp.min(y, axis=0)[None, :]
+        return jnp.max(y, axis=0)[None, :]
+
+    def reduce_packed(gid, vals, ok, stats, dtype):
+        n_rows = gid.shape[0]
+        jdt = jnp.dtype(dtype)
+        # invalid lanes (and slab padding, which arrives ok=False) go
+        # to the dead slot nseg: they sort past every real run and no
+        # searchsorted target ever reaches them.
+        gg = jnp.where(ok, gid, jnp.int32(nseg)).astype(jnp.int64)
+        v64 = vals.astype(jnp.int64)
+        if dtype.kind == "u":
+            key = v64 & jnp.int64(0xFFFFFFFF)
+        else:            # bias bit 31: two's complement -> uint order
+            key = (v64 ^ jnp.int64(0x80000000)) & jnp.int64(0xFFFFFFFF)
+        p = jax.lax.sort((gg << 32) | key)
+        sg = (p >> 32).astype(jnp.int32)
+        sk = p & jnp.int64(0xFFFFFFFF)
+        if dtype.kind == "u":
+            sv = sk.astype(jdt)
+        else:            # xor undoes the bias; int32 wrap restores sign
+            sv = (sk ^ jnp.int64(0x80000000)).astype(jnp.int32) \
+                .astype(jdt)
+        slots = jnp.arange(nseg, dtype=jnp.int32)
+        starts = jnp.searchsorted(sg, slots, side="left") \
+            .astype(jnp.int32)
+        ends = jnp.searchsorted(sg, slots, side="right") \
+            .astype(jnp.int32)
+        cnt = ends - starts
+        outs = [combine(cnt, "sum")]
+        if "sum" in stats:
+            # wrapping cumsum in the value dtype: the boundary
+            # difference is the exact modular group sum.
+            cs = jnp.cumsum(sv, dtype=jdt)
+            zero = jnp.zeros((), jdt)
+            tot = jnp.where(ends > 0, cs[jnp.maximum(ends, 1) - 1],
+                            zero)
+            base = jnp.where(starts > 0, cs[jnp.maximum(starts, 1) - 1],
+                             zero)
+            outs.append(combine((tot - base).astype(jdt), "sum"))
+        if "min" in stats:
+            mn = sv[jnp.minimum(starts, n_rows - 1)]
+            outs.append(combine(
+                jnp.where(cnt > 0, mn,
+                          jnp.asarray(reduce_identity(dtype, "min"),
+                                      jdt)), "min"))
+        if "max" in stats:
+            mx = sv[jnp.maximum(ends, 1) - 1]
+            outs.append(combine(
+                jnp.where(cnt > 0, mx,
+                          jnp.asarray(reduce_identity(dtype, "max"),
+                                      jdt)), "max"))
+        return outs
+
+    def reduce_kernels(gid, vals, ok, stats):
+        s, cnt = masked_segment_sum(
+            vals, gid, ok, nseg,
+            use_pallas=use_pallas, interpret=interpret)
+        outs = [combine(cnt, "sum")]
+        if "sum" in stats:
+            outs.append(combine(s, "sum"))
+        for op in ("min", "max"):
+            if op in stats:
+                r, _ = masked_segment_reduce(
+                    vals, gid, ok, nseg, op=op,
+                    use_pallas=use_pallas, interpret=interpret)
+                outs.append(combine(r, op))
+        return outs
+
+    def body(gid_slab, *col_slabs):
+        gid = gid_slab[0]
+        outs = []
+        i = 0
+        for dt_str, stats in col_sig:
+            dtype = np.dtype(dt_str)
+            vals = col_slabs[i][0]
+            ok = col_slabs[i + 1][0]
+            i += 2
+            if (dtype.kind in "iu" and dtype.itemsize <= 4
+                    and not use_pallas):
+                outs += reduce_packed(gid, vals, ok, stats, dtype)
+            else:
+                outs += reduce_kernels(gid, vals, ok, stats)
+        return tuple(outs)
+
+    spec = P("shard", None)
+    n_in = 1 + 2 * len(col_sig)
+    mapped = shard_map(body, mesh=mesh, in_specs=(spec,) * n_in,
+                       out_specs=spec, check_vma=False)
+    shard = NamedSharding(mesh, spec)
+    return jax.jit(mapped, in_shardings=(shard,) * n_in)
 
 
 class ShardedBackend(JaxBackend):
@@ -548,6 +708,155 @@ class ShardedBackend(JaxBackend):
             rk[~rok] = sent
             return lk, rk, -1
         return None                       # uint64 tail: codes path
+
+    # -- aggregation -----------------------------------------------------
+    def group_by_agg(self, cols: Columns, keys: Sequence[str],
+                     specs: Sequence[AggSpec]) -> Columns:
+        specs = normalize_agg_specs(cols, keys, specs)
+        partial = self._partial_group_by(cols, keys, specs)
+        if partial is not None:
+            return partial
+        return super().group_by_agg(cols, keys, specs)
+
+    def _partial_group_by(self, cols: Columns, keys: Sequence[str],
+                          specs: tuple[AggSpec, ...]
+                          ) -> "Columns | None":
+        """Mesh partial-aggregation path; None when ineligible (the
+        inherited jax/vectorized path takes over). Eligibility mirrors
+        the join's direct-address fast path: one integer-kind key whose
+        span is dense enough to direct-address, every value column
+        device-lowerable. NULL keys take one extra slot (SQL: one NULL
+        group); integer keys cannot be NaN, so slots are exact."""
+        n = _column_length(cols)
+        ndev = max(1, self.n_devices)
+        if n == 0 or n >= 2**31 - 2 or ndev > 255 or len(keys) != 1:
+            return None
+        kv, kvalid = cols[keys[0]]
+        if kv.dtype == object or kv.dtype.kind not in "iu":
+            return None
+        # every value column must lower losslessly (the 64-bit-off
+        # fallback warns in the inherited path, not here)
+        want: dict[str, set] = {}
+        for fn, value, _out in specs:
+            vdt = cols[value][0].dtype
+            if (vdt == object or vdt.kind not in "fiu"
+                    or not fallback.device_supports_dtype(vdt)):
+                return None
+            stats = want.setdefault(value, set())
+            if fn in ("sum", "mean"):
+                stats.add("sum")
+            elif fn in ("min", "max"):
+                stats.add(fn)
+        kok = payload_validity(kv, kvalid)
+        any_null = not bool(kok.all())
+        if kok.any():
+            lo = int(kv[kok].min())
+            span = int(kv[kok].max()) - lo + 1
+        else:
+            lo, span = 0, 0
+        if span > MAX_TABLE_SPAN or not dense_span_affordable(span, n):
+            return None
+        n_slots = span + (1 if any_null else 0)   # last slot = NULL group
+        seg_shard = _next_pow2(-(-n_slots // ndev))
+        if ndev * seg_shard > MAX_TABLE_SPAN:
+            return None
+        nseg = ndev * seg_shard
+
+        # host: O(n) rebase to dense slot codes — no sort, no factorize
+        def rebase(v):
+            if v.dtype.kind == "u" and v.dtype.itemsize == 8:
+                return (v - v.dtype.type(lo)).astype(np.int32)
+            return (v.astype(np.int64) - lo).astype(np.int32)
+
+        gid = rebase(kv)
+        if any_null:
+            gid[~kok] = np.int32(span)
+        chunk = -(-n // ndev)
+        pad = ndev * chunk - n
+
+        def slab(arr, fill):
+            if pad:
+                arr = np.concatenate(
+                    [arr, np.full(pad, fill, dtype=arr.dtype)])
+            return arr.reshape(ndev, chunk)
+
+        # first-appearance per slot stays on the host: the rebase
+        # already materialized gid, so a reversed fancy assignment
+        # (later writes win, so the reversed order leaves each slot
+        # holding its FIRST row) beats shipping a row-id slab and a
+        # whole extra segment reduce through the exchange.
+        first = np.full(n_slots, n, dtype=np.int64)
+        first[gid[::-1]] = np.arange(n - 1, -1, -1, dtype=np.int64)
+
+        gid_slab = slab(gid, np.int32(0))    # padding: slot 0, ok=False
+        col_sig = []
+        col_slabs = []
+        col_names = list(want)
+        for name in col_names:
+            values, valid = cols[name]
+            ok = payload_validity(values, valid)
+            col_sig.append((values.dtype.str,
+                            tuple(sorted(want[name]))))
+            col_slabs.append(slab(values, fill_value(values.dtype)))
+            col_slabs.append(slab(ok, False))
+
+        fn = _partial_agg_fn(ndev, seg_shard, tuple(col_sig),
+                             self.use_pallas, self.interpret)
+        # the packed strategy sorts int64-packed lanes; the x64 scope
+        # is thread-local and only governs types traced inside.
+        with jax.experimental.enable_x64():
+            outs = [np.asarray(o).reshape(-1) for o in
+                    fn(gid_slab, *col_slabs)]
+
+        # unpack in the body's emission order
+        stats_of: dict[str, dict[str, np.ndarray]] = {}
+        i = 0
+        for name, (_dt, stats) in zip(col_names, col_sig):
+            got = {"count": outs[i]}
+            i += 1
+            for s in ("sum", "min", "max"):
+                if s in stats:
+                    got[s] = outs[i]
+                    i += 1
+            stats_of[name] = got
+
+        # host finalize: presence + first-appearance order from ONE
+        # small argsort over distinct keys (never over rows)
+        codes = np.flatnonzero(first < n)
+        out_codes = codes[np.argsort(first[codes], kind="stable")]
+        kdt = kv.dtype
+        if kdt.kind == "u" and kdt.itemsize == 8:
+            keyvals = kdt.type(lo) + out_codes.astype(kdt)
+        else:
+            keyvals = (out_codes + lo).astype(kdt)
+        kmask = np.ones(len(out_codes), dtype=bool)
+        if any_null:
+            kmask = out_codes != span
+            keyvals[~kmask] = fill_value(kdt)
+        data: dict[str, tuple[np.ndarray, np.ndarray | None]] = {
+            keys[0]: (keyvals, kmask)}
+        for fname, value, out_name in specs:
+            got = stats_of[value]
+            cnt = got["count"][out_codes].astype(np.int64)
+            if fname == "count":
+                data[out_name] = (cnt, None)
+                continue
+            has = cnt > 0
+            vdt = cols[value][0].dtype
+            if fname == "sum":
+                s = got["sum"][out_codes].astype(vdt, copy=True)
+                s[~has] = fill_value(vdt)
+                data[out_name] = (s, has)
+            elif fname == "mean":
+                m = got["sum"][out_codes].astype(np.float64)
+                np.divide(m, cnt, out=m, where=has)
+                m[~has] = fill_value(np.dtype(np.float64))
+                data[out_name] = (m, has)
+            else:
+                r = got[fname][out_codes].astype(vdt, copy=True)
+                r[~has] = fill_value(vdt)
+                data[out_name] = (r, has)
+        return data
 
 
 def _buckets(keys: np.ndarray, ndev: int, span_shard: int

@@ -10,14 +10,17 @@ factorize/sort-based kernels while reproducing its output bit-for-bit
   vectorized ragged-range expansion. Stable sorting preserves right-
   occurrence order within a key, and left rows are expanded in order —
   exactly the reference's (left row, right occurrence) nesting.
-- **group_by_sum**: joint key factorization, group ids renumbered to
-  first-appearance order, then ``np.add.reduceat`` over stably sorted
-  valid lanes. Integer sums are bit-identical to the reference
-  (integer addition is associative, wraparound included); float sums
-  are deterministic but exact only up to summation order —
-  ``reduceat``'s SIMD partial sums regroup additions, which can move
-  the last ulp (the one documented carve-out from the bit-for-bit
-  contract, see base.py).
+- **group_by_agg**: joint key factorization, group ids renumbered to
+  first-appearance order, then one ``ufunc.reduceat`` per aggregate
+  spec over the same stably sorted valid lanes (``np.add`` for
+  SUM/COUNT, ``np.minimum``/``np.maximum`` for MIN/MAX with invalid
+  lanes parked at the identity; MEAN finalized as float64 SUM/COUNT).
+  Integer sums are bit-identical to the reference (integer addition is
+  associative, wraparound included); float sums — and the means
+  finalized from them — are deterministic but exact only up to
+  summation order: ``reduceat``'s SIMD partial sums regroup additions,
+  which can move the last ulp (the one documented carve-out from the
+  bit-for-bit contract, see base.py). MIN/MAX/COUNT have no carve-out.
 
 NULL/NaN conventions (see base.py): join keys that are NULL, NaN, or
 NaT get code -1 (match nothing); GROUP BY gives all NULL keys one
@@ -36,10 +39,22 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.exec.base import (Backend, Columns, _column_length, fill_value,
+from repro.exec.base import (AggSpec, Backend, Columns, _column_length,
+                             fill_value, normalize_agg_specs,
                              payload_validity)
 
-__all__ = ["VectorizedBackend", "dense_span_affordable"]
+__all__ = ["VectorizedBackend", "dense_span_affordable", "reduce_ident"]
+
+
+def reduce_ident(dtype: np.dtype, op: str):
+    """Identity element for masked MIN/MAX over ``dtype``: invalid
+    lanes are parked here so they can never win the reduction."""
+    if dtype.kind == "f":
+        return dtype.type(np.inf if op == "min" else -np.inf)
+    if dtype.kind == "b":
+        return np.bool_(op == "min")
+    info = np.iinfo(dtype)
+    return dtype.type(info.max if op == "min" else info.min)
 
 
 def dense_span_affordable(span: int, n_rows: int) -> bool:
@@ -410,20 +425,10 @@ class VectorizedBackend(Backend):
         return out
 
     # -- aggregation ----------------------------------------------------
-    def group_by_sum(self, cols: Columns, keys: Sequence[str],
-                     value: str, out: str) -> Columns:
-        # single never-NULL integer-kind key: runs of sorted raw values
-        # ARE the groups — skip the whole factorization pass.
-        if len(keys) == 1:
-            kv, kvalid = cols[keys[0]]
-            if (kv.dtype != object and kv.dtype.kind in "iub"
-                    and kvalid is None):
-                runs = _group_runs(kv)
-            else:
-                runs = _group_runs(_group_codes(cols, keys))
-        else:
-            runs = _group_runs(_group_codes(cols, keys))
-        order, bounds, grp_order, rep = runs
+    def group_by_agg(self, cols: Columns, keys: Sequence[str],
+                     specs: Sequence[AggSpec]) -> Columns:
+        specs = normalize_agg_specs(cols, keys, specs)
+        order, bounds, grp_order, rep = self._runs_for_keys(cols, keys)
         n_groups = len(rep)
         data: dict[str, tuple[np.ndarray, np.ndarray | None]] = {}
         for kname in keys:
@@ -433,11 +438,115 @@ class VectorizedBackend(Backend):
             mask = ok[rep]
             colvals[~mask] = fill_value(values.dtype)
             data[kname] = (colvals, mask)
-        values, valid = cols[value]
-        ok = payload_validity(values, valid)
-        data[out] = self._aggregate(values, ok, order, bounds,
-                                    grp_order, n_groups)
+        for fn, value, out in specs:
+            values, valid = cols[value]
+            ok = payload_validity(values, valid)
+            data[out] = self._agg_one(fn, values, ok, order, bounds,
+                                      grp_order, n_groups)
         return data
+
+    @staticmethod
+    def _runs_for_keys(cols: Columns, keys: Sequence[str]):
+        # single never-NULL integer-kind key: runs of sorted raw values
+        # ARE the groups — skip the whole factorization pass.
+        if len(keys) == 1:
+            kv, kvalid = cols[keys[0]]
+            if (kv.dtype != object and kv.dtype.kind in "iub"
+                    and kvalid is None):
+                return _group_runs(kv)
+        return _group_runs(_group_codes(cols, keys))
+
+    def _agg_one(self, fn: str, values: np.ndarray, ok: np.ndarray,
+                 order: np.ndarray, bounds: np.ndarray,
+                 grp_order: np.ndarray, n_groups: int
+                 ) -> tuple[np.ndarray, np.ndarray | None]:
+        """One aggregate column over precomputed group runs (runs are
+        shared across every spec in a group_by_agg call)."""
+        if fn == "sum":
+            return self._aggregate(values, ok, order, bounds, grp_order,
+                                   n_groups)
+        if fn == "count":
+            if n_groups == 0:
+                return np.array([], dtype=np.int64), None
+            counts = np.add.reduceat(
+                ok[order].astype(np.int64), bounds)[grp_order]
+            return counts, None         # COUNT is int64 and never NULL
+        if fn == "mean":
+            return self._agg_mean(values, ok, order, bounds, grp_order,
+                                  n_groups)
+        return self._agg_minmax(fn, values, ok, order, bounds,
+                                grp_order, n_groups)
+
+    def _agg_mean(self, values, ok, order, bounds, grp_order, n_groups):
+        # MEAN = SUM/COUNT finalized in float64 (object columns divide
+        # in Python) — the shared shippable-partials definition; float
+        # inputs inherit the SUM summation-order carve-out.
+        if values.dtype == object:
+            if n_groups == 0:
+                return (np.array([], dtype=object),
+                        np.array([], dtype=bool))
+            sums, has = self._aggregate_object(values, ok, order, bounds,
+                                               grp_order, n_groups)
+            counts = np.add.reduceat(
+                ok[order].astype(np.int64), bounds)[grp_order]
+            res = np.array([None if a is None else a / c
+                            for a, c in zip(sums, counts)], dtype=object)
+            return res, has
+        sums, has = self._aggregate(values, ok, order, bounds, grp_order,
+                                    n_groups)
+        if n_groups == 0:
+            return np.array([], dtype=np.float64), has
+        counts = np.add.reduceat(
+            ok[order].astype(np.int64), bounds)[grp_order]
+        means = sums.astype(np.float64)
+        np.divide(means, counts, out=means, where=has)
+        means[~has] = fill_value(np.dtype(np.float64))
+        return means, has
+
+    def _agg_minmax(self, fn, values, ok, order, bounds, grp_order,
+                    n_groups):
+        vdt = values.dtype
+        if n_groups == 0:
+            return (np.array([], dtype=vdt), np.array([], dtype=bool))
+        if vdt != object and vdt.kind in "fiub":
+            # invalid lanes are parked at the identity so they never
+            # win; NaN in a *valid* float lane propagates through
+            # minimum/maximum.reduceat exactly like the reference's
+            # per-row np.minimum accumulation.
+            ident = reduce_ident(vdt, fn)
+            masked = np.where(ok, values, ident)[order]
+            ufunc = np.minimum if fn == "min" else np.maximum
+            red = ufunc.reduceat(masked, bounds)[grp_order]
+            counts = np.add.reduceat(
+                ok[order].astype(np.int64), bounds)[grp_order]
+            has = counts > 0
+            red[~has] = fill_value(vdt)
+            return red, has
+        # object / datetime values: reference-style row-order
+        # accumulation per group run.
+        n = len(values)
+        ends = np.r_[bounds[1:], n]
+        acc: list = [None] * n_groups
+        for slot, g in enumerate(grp_order):
+            a = None
+            for row in order[bounds[g]:ends[g]]:
+                if not ok[row]:
+                    continue
+                v = values[row]
+                if a is None:
+                    a = v
+                elif vdt == object:
+                    if fn == "min":
+                        a = v if v < a else a
+                    else:
+                        a = v if v > a else a
+                else:
+                    a = (np.minimum if fn == "min" else np.maximum)(a, v)
+            acc[slot] = a
+        red = np.array([fill_value(vdt) if a is None else a
+                        for a in acc], dtype=vdt)
+        has = np.array([a is not None for a in acc], dtype=bool)
+        return red, has
 
     def _aggregate(self, values: np.ndarray, ok: np.ndarray,
                    order: np.ndarray, bounds: np.ndarray,

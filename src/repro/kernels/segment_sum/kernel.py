@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.segment_sum.ref import reduce_identity
+
 
 def _segsum_body(v_ref, id_ref, m_ref, sum_ref, cnt_ref, *,
                  block_n: int, block_s: int):
@@ -103,3 +105,97 @@ def masked_segment_sum_kernel(values, segment_ids, valid,
     )(v2, id2, m2)
     return (sums.reshape(-1)[:num_segments],
             counts.reshape(-1)[:num_segments])
+
+
+def _segreduce_body(v_ref, id_ref, m_ref, red_ref, cnt_ref, nan_ref, *,
+                    block_n: int, block_s: int, op: str, ident):
+    si = pl.program_id(0)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        red_ref[...] = jnp.full_like(red_ref, ident)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        nan_ref[...] = jnp.zeros_like(nan_ref)
+
+    vals = v_ref[0, :]                       # (block_n,)
+    ids = id_ref[0, :]
+    msk = m_ref[0, :] != 0
+    isnan = vals != vals                     # all-False for int dtypes
+    local = ids - si * block_s
+    seg = jax.lax.broadcasted_iota(jnp.int32, (block_n, block_s), 1)
+    onehot = ((seg == local[:, None])
+              & msk[:, None]
+              & (local >= 0)[:, None]
+              & (local < block_s)[:, None])
+    idv = jnp.asarray(ident, red_ref.dtype)
+    # NaN lanes are parked at the identity here; the wrapper re-poisons
+    # their segments from nan_ref so min/max stay a clean VPU reduce.
+    contrib = jnp.where(onehot & (~isnan)[:, None],
+                        vals[:, None].astype(red_ref.dtype), idv)
+    if op == "min":
+        red_ref[0, :] = jnp.minimum(red_ref[0, :],
+                                    jnp.min(contrib, axis=0))
+    else:
+        red_ref[0, :] = jnp.maximum(red_ref[0, :],
+                                    jnp.max(contrib, axis=0))
+    cnt_ref[0, :] += jnp.sum(onehot.astype(jnp.int32), axis=0)
+    nan_ref[0, :] += jnp.sum((onehot & isnan[:, None]).astype(jnp.int32),
+                             axis=0)
+
+
+def masked_segment_reduce_kernel(values, segment_ids, valid,
+                                 num_segments: int, op: str, *,
+                                 block_n: int = 1024, block_s: int = 512,
+                                 interpret: bool = True):
+    """Tiled Pallas masked segment MIN/MAX — segment-sum's tiling, an
+    identity-initialised carried accumulator, and a NaN-count output so
+    float NaN propagation matches the host backends bit-for-bit.
+
+    Returns (reduced (num_segments,) values.dtype, counts int32).
+    """
+    ident = reduce_identity(values.dtype, op)
+    n = values.shape[0]
+    block_n = max(1, min(block_n, n)) if n else 1
+    block_s = max(1, min(block_s, num_segments))
+    pad_n = (-n) % block_n if n else block_n
+    if pad_n:
+        values = jnp.pad(values, (0, pad_n))
+        segment_ids = jnp.pad(segment_ids, (0, pad_n))
+        valid = jnp.pad(valid, (0, pad_n))   # False: padding is masked
+    s_pad = ((num_segments + block_s - 1) // block_s) * block_s
+    n_row_tiles = values.shape[0] // block_n
+    n_seg_tiles = s_pad // block_s
+
+    v2 = values.reshape(n_row_tiles, block_n)
+    id2 = segment_ids.astype(jnp.int32).reshape(n_row_tiles, block_n)
+    m2 = valid.astype(jnp.int32).reshape(n_row_tiles, block_n)
+
+    body = functools.partial(_segreduce_body, block_n=block_n,
+                             block_s=block_s, op=op, ident=ident)
+    red, counts, nans = pl.pallas_call(
+        body,
+        grid=(n_seg_tiles, n_row_tiles),
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda s, r: (r, 0)),
+            pl.BlockSpec((1, block_n), lambda s, r: (r, 0)),
+            pl.BlockSpec((1, block_n), lambda s, r: (r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_s), lambda s, r: (s, 0)),
+            pl.BlockSpec((1, block_s), lambda s, r: (s, 0)),
+            pl.BlockSpec((1, block_s), lambda s, r: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_seg_tiles, block_s), values.dtype),
+            jax.ShapeDtypeStruct((n_seg_tiles, block_s), jnp.int32),
+            jax.ShapeDtypeStruct((n_seg_tiles, block_s), jnp.int32),
+        ],
+        interpret=interpret,
+    )(v2, id2, m2)
+    red = red.reshape(-1)[:num_segments]
+    counts = counts.reshape(-1)[:num_segments]
+    nans = nans.reshape(-1)[:num_segments]
+    if jnp.issubdtype(values.dtype, jnp.floating):
+        red = jnp.where(nans > 0, jnp.asarray(jnp.nan, values.dtype),
+                        red)
+    return red, counts

@@ -1,12 +1,14 @@
-"""Jit'd public wrapper: XLA segment_sum or the Pallas kernel."""
+"""Jit'd public wrappers: XLA segment ops or the Pallas kernels."""
 from __future__ import annotations
 
 import functools
 
 import jax
 
-from repro.kernels.segment_sum.kernel import masked_segment_sum_kernel
-from repro.kernels.segment_sum.ref import masked_segment_sum_ref
+from repro.kernels.segment_sum.kernel import (masked_segment_reduce_kernel,
+                                              masked_segment_sum_kernel)
+from repro.kernels.segment_sum.ref import (masked_segment_reduce_ref,
+                                           masked_segment_sum_ref)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -27,4 +29,27 @@ def masked_segment_sum(values, segment_ids, valid, num_segments: int, *,
                                       num_segments)
     return masked_segment_sum_kernel(
         values, segment_ids, valid, num_segments,
+        block_n=block_n, block_s=block_s, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_segments", "op", "use_pallas", "block_n", "block_s",
+    "interpret"))
+def masked_segment_reduce(values, segment_ids, valid, num_segments: int,
+                          *, op: str, use_pallas: bool = False,
+                          block_n: int = 1024, block_s: int = 512,
+                          interpret: bool = True):
+    """Per-segment MIN/MAX over valid lanes + valid-lane counts.
+
+    ``op`` is ``"min"`` or ``"max"``; NaN in a valid float lane poisons
+    its segment, empty segments return the identity (NULL upstream).
+    Same XLA-vs-Pallas switch as :func:`masked_segment_sum`.
+    """
+    if op not in ("min", "max"):
+        raise ValueError(f"unknown segment reduce op: {op!r}")
+    if not use_pallas:
+        return masked_segment_reduce_ref(values, segment_ids, valid,
+                                         num_segments, op)
+    return masked_segment_reduce_kernel(
+        values, segment_ids, valid, num_segments, op,
         block_n=block_n, block_s=block_s, interpret=interpret)

@@ -1,8 +1,23 @@
-"""Pure-jnp oracle for the masked segment-sum kernel."""
+"""Pure-jnp oracles for the masked segment-reduce kernel family."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def reduce_identity(dtype, op: str):
+    """Identity element for a masked segment MIN/MAX over ``dtype``.
+
+    Invalid (and NaN) lanes are replaced with this value before the
+    reduction so they cannot win; an all-identity segment is a NULL
+    result (the caller masks it via the counts output).
+    """
+    dtype = np.dtype(dtype)
+    if dtype.kind == "f":
+        return dtype.type(np.inf if op == "min" else -np.inf)
+    info = np.iinfo(dtype)
+    return dtype.type(info.max if op == "min" else info.min)
 
 
 def masked_segment_sum_ref(values, segment_ids, valid,
@@ -20,3 +35,30 @@ def masked_segment_sum_ref(values, segment_ids, valid,
     counts = jax.ops.segment_sum(valid.astype(jnp.int32), segment_ids,
                                  num_segments=num_segments)
     return sums, counts
+
+
+def masked_segment_reduce_ref(values, segment_ids, valid,
+                              num_segments: int, op: str):
+    """Per-segment MIN/MAX over valid lanes + valid-lane counts.
+
+    ``op`` is ``"min"`` or ``"max"``. A NaN in a *valid* lane poisons
+    its whole segment (numpy ``minimum``/``maximum`` semantics, matched
+    bit-for-bit by the host backends); invalid lanes never contribute.
+    Segments with count 0 return the identity — NULL at the SQL layer.
+    Returns (reduced (num_segments,) values.dtype, counts int32).
+    """
+    ident = reduce_identity(values.dtype, op)
+    isnan = values != values                 # all-False for int dtypes
+    clean = jnp.where(valid & ~isnan, values, ident)
+    fn = jax.ops.segment_min if op == "min" else jax.ops.segment_max
+    red = fn(clean, segment_ids, num_segments=num_segments)
+    counts = jax.ops.segment_sum(valid.astype(jnp.int32), segment_ids,
+                                 num_segments=num_segments)
+    if jnp.issubdtype(values.dtype, jnp.floating):
+        nans = jax.ops.segment_sum((valid & isnan).astype(jnp.int32),
+                                   segment_ids,
+                                   num_segments=num_segments)
+        red = jnp.where(nans > 0, jnp.asarray(jnp.nan, values.dtype),
+                        red)
+    red = jnp.where(counts > 0, red, ident)
+    return red, counts

@@ -17,10 +17,15 @@ declarative nodes:
 - ``probe_fusion``: a filter feeding a join collapses into the join's
   masked probe (``Backend.masked_hash_join`` /
   ``kernels.hash_join.masked_hash_probe``), so filtered rows never
-  materialize — on the Pallas path they never leave VMEM.
+  materialize — on the Pallas path they never leave VMEM;
+- ``partial_agg``: large single-int-key aggregations route to the
+  sharded backend's pre-exchange partial aggregation
+  (``Aggregate.strategy="partial"``) — physical routing, with the
+  strategy rendered in the tree description so cache keys move.
 
-Every pass must preserve published tables bit for bit; the proof
-obligation is the differential suite
+Every pass must preserve published tables bit for bit (``partial_agg``
+within the documented float-SUM/MEAN summation-order carve-out); the
+proof obligation is the differential suite
 (``tests/test_optimizer_differential.py``). Pass membership and
 per-step provenance are folded into engine cache keys, so toggling a
 pass can never serve a stale cached result.
@@ -28,7 +33,8 @@ pass can never serve a stale cached result.
 from repro.optimizer.passes import (DEFAULT_PASSES, PASSES,
                                     column_pruning, filter_pushdown,
                                     join_reorder, optimize,
-                                    probe_fusion)
+                                    partial_agg, probe_fusion)
 
 __all__ = ["DEFAULT_PASSES", "PASSES", "optimize", "filter_pushdown",
-           "join_reorder", "column_pruning", "probe_fusion"]
+           "join_reorder", "column_pruning", "probe_fusion",
+           "partial_agg"]

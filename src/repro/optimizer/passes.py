@@ -30,10 +30,16 @@ Shared soundness inputs:
   it.
 
 Float-SUM carve-out: the backends' one cross-backend tolerance is
-float SUM summation order. No pass reorders an aggregation — rewrites
-touch scans, filters, projections and joins, all of which gather rows
-rather than summing — so optimized-vs-unoptimized equality is exact,
-not tolerance-based.
+float SUM/MEAN summation order. No *restructuring* pass reorders an
+aggregation — pushdown/reorder/pruning/fusion touch scans, filters,
+projections and joins, all of which gather rows rather than summing
+(filter-below-Aggregate preserves every surviving group's row set
+exactly) — so their optimized-vs-unoptimized equality is exact, not
+tolerance-based. The one exception is ``partial_agg``, which is
+physical routing: it changes *where* an aggregation runs (the sharded
+backend's per-shard partials), which regroups float sums within the
+documented carve-out; integer aggregates remain bit-for-bit, and the
+strategy renders in ``describe()`` so the cache key moves with it.
 """
 from __future__ import annotations
 
@@ -45,12 +51,12 @@ from repro.core import schema as S
 from repro.core.contracts import (check_node, provable_postconditions,
                                   referenced_columns)
 from repro.core.dag import DeclarativeNode
-from repro.core.logical import (Filter, Join, LogicalOp, Project,
-                                Reorder, Scan)
+from repro.core.logical import (Aggregate, Filter, Join, LogicalOp,
+                                Project, Reorder, Scan)
 
 __all__ = ["DEFAULT_PASSES", "PASSES", "optimize",
            "filter_pushdown", "join_reorder", "column_pruning",
-           "probe_fusion"]
+           "probe_fusion", "partial_agg"]
 
 # Selectivity assumed for a filtered side when ordering joins — a
 # cost-model constant, not semantics (a bad estimate costs time, never
@@ -73,7 +79,7 @@ def _walk(op: LogicalOp):
 
 def _map_children(op: LogicalOp,
                   fn: Callable[[LogicalOp], LogicalOp]) -> LogicalOp:
-    if isinstance(op, (Filter, Project)):
+    if isinstance(op, (Filter, Project, Aggregate)):
         return dataclasses.replace(op, child=fn(op.child))
     if isinstance(op, Join):
         return dataclasses.replace(op, left=fn(op.left),
@@ -106,6 +112,8 @@ def _op_cols(op: LogicalOp, schemas: Mapping[str, type[S.Schema]]
         return _op_cols(op.child, schemas)
     if isinstance(op, Project):
         return {e.output_name() for e in op.exprs}
+    if isinstance(op, Aggregate):
+        return set(op.keys) | {out for _fn, _value, out in op.specs}
     if isinstance(op, (Join, Reorder)):
         acc: set[str] = set()
         for c in op.children():
@@ -127,6 +135,9 @@ def _tree_refs(op: LogicalOp) -> set[str] | None:
         if isinstance(node, Reorder):
             for _, on in node.sides:
                 refs |= set(on)
+        if isinstance(node, Aggregate):
+            refs |= set(node.keys)
+            refs |= {value for _fn, value, _out in node.specs}
         for e in node._own_exprs():
             r = e.references()
             if r is None:
@@ -165,8 +176,24 @@ def filter_pushdown(plan: P.Plan) -> P.Plan:
     right rows pre-join removes exactly the match pairs the post-join
     filter would drop. Not valid for left joins (a dropped right row
     must yield an unmatched NULL-filled emission, not a dropped one).
+
+    Aggregate-push (``refs ⊆ group keys``, non-float key dtypes): an
+    output row's key columns hold its group's key values, and every
+    row of a group carries an equal key value, so a key-only predicate
+    decides identically for a group above the ``Aggregate`` and for
+    each of the group's rows below it — surviving groups keep exactly
+    their original row sets (aggregates and summation order unchanged)
+    in first-appearance order, and the NULL-keyed group behaves the
+    same way because a NULL predicate input drops the row on both
+    sides. The dtype guard is load-bearing: *float* keys group
+    value-equal but bit-distinct representatives (``-0.0 == 0.0``),
+    which an arithmetic predicate (``1/k > 0``) can tell apart — a
+    per-row push could then keep a different representative (or a
+    group the post-aggregation filter dropped), so float-keyed
+    predicates stay above.
     """
     schemas = _schemas(plan)
+    pushed: set[str] = set()
 
     def push(op: LogicalOp) -> LogicalOp:
         if isinstance(op, Filter):
@@ -182,12 +209,19 @@ def filter_pushdown(plan: P.Plan) -> P.Plan:
             rcols = _op_cols(op.right, schemas)
             if lcols is not None and rcols is not None:
                 if refs <= lcols and op.how in ("inner", "left"):
+                    pushed.add("join")
                     return dataclasses.replace(
                         op, left=sink(pred, op.left))
                 if (op.how == "inner" and refs <= rcols
                         and refs & lcols <= set(op.on)):
+                    pushed.add("join")
                     return dataclasses.replace(
                         op, right=sink(pred, op.right))
+        if (refs is not None and isinstance(op, Aggregate)
+                and refs <= set(op.keys)
+                and _agg_keys_pushable(refs, op.child, schemas)):
+            pushed.add("aggregate")
+            return dataclasses.replace(op, child=sink(pred, op.child))
         return Filter(op, pred)
 
     new_steps: list[P.PlanStep] = []
@@ -195,15 +229,35 @@ def filter_pushdown(plan: P.Plan) -> P.Plan:
         if step.logical is None:
             new_steps.append(step)
             continue
+        pushed.clear()
         tree = push(step.logical)
         if tree.describe() != step.logical.describe():
+            what = " and ".join(sorted(pushed)) or "join"
             step = dataclasses.replace(
                 step, logical=tree,
                 provenance=step.provenance
-                + ("filter_pushdown: pushed filter below join",))
+                + (f"filter_pushdown: pushed filter below {what}",))
         new_steps.append(step)
 
     return _materialize_shared_filters(plan, new_steps, schemas)
+
+
+def _agg_keys_pushable(refs: set[str], child: LogicalOp,
+                       schemas) -> bool:
+    """True iff every referenced group key resolves to a declared
+    non-float column below the Aggregate (the value-determined-
+    representative condition of the aggregate push: int/bool/str/
+    datetime equality implies bit-identical payloads, float does not)."""
+    for name in refs:
+        families = {
+            schemas[node.table].columns()[name].dtype.family
+            for node in _walk(child)
+            if isinstance(node, Scan) and node.table in schemas
+            and name in schemas[node.table].columns()
+            and (node.columns is None or name in node.columns)}
+        if not families or "float" in families:
+            return False
+    return True
 
 
 def _materialize_shared_filters(plan: P.Plan,
@@ -329,10 +383,13 @@ def join_reorder(plan: P.Plan) -> P.Plan:
 
 
 def _reorder_tree(step: P.PlanStep, schemas):
-    # peel Project/Filter wrappers down to the join chain root
+    # peel Project/Filter/Aggregate wrappers down to the join chain
+    # root (Reorder restores exact row order, so an Aggregate above it
+    # sees identical input — groups, representatives and summation
+    # order included)
     wrappers: list[LogicalOp] = []
     op = step.logical
-    while isinstance(op, (Project, Filter)):
+    while isinstance(op, (Project, Filter, Aggregate)):
         wrappers.append(op)
         op = op.child
     if not isinstance(op, Join):
@@ -411,9 +468,10 @@ def column_pruning(plan: P.Plan) -> P.Plan:
     """Elide source columns no expression, join key, contract verifier
     or downstream consumer references (Appendix-A elision soundness).
 
-    Applies only to steps whose tree root is a ``Project`` — their
-    published output is exactly the projected columns, so mid-tree
-    column sets are unobservable and pruning cannot change the output
+    Applies only to steps whose tree root is a ``Project`` or an
+    ``Aggregate`` — their published output is exactly the projected
+    (resp. keys + aggregate) columns, so mid-tree column sets are
+    unobservable and pruning cannot change the output
     ... with one structural caveat handled by *keep-everywhere*: a
     needed name present in several scans must stay in ALL of them, or
     left-copy-wins would resolve it to a different copy. The keep set
@@ -445,14 +503,21 @@ def column_pruning(plan: P.Plan) -> P.Plan:
 
 def _prune_step(step: P.PlanStep, schemas):
     tree = step.logical
-    if not isinstance(tree, Project):
+    # an Aggregate root is as prunable as a Project root: its output
+    # is exactly keys + spec outputs, so mid-tree column sets are just
+    # as unobservable.
+    if not isinstance(tree, (Project, Aggregate)):
         return None
     needed = _tree_refs(tree)
     if needed is None:
         return None                      # opaque expression somewhere
     inputs = {t: schemas[t] for t in set(step.node.inputs.values())
               if t in schemas}
-    contract = referenced_columns(inputs, step.node.output_schema)
+    computed: set[str] = set()
+    if isinstance(step.node, DeclarativeNode) and step.node.agg_specs:
+        computed = {out for _fn, _value, out in step.node.agg_specs}
+    contract = referenced_columns(inputs, step.node.output_schema,
+                                  computed=computed)
     keep = set(needed)
     for cols in contract.values():
         keep |= cols
@@ -617,6 +682,98 @@ def probe_fusion(plan: P.Plan) -> P.Plan:
 
 
 # ---------------------------------------------------------------------------
+# pass: mesh-sharded partial aggregation
+# ---------------------------------------------------------------------------
+
+def partial_agg(plan: P.Plan) -> P.Plan:
+    """Route large single-int-key ``Aggregate`` ops through the sharded
+    backend's pre-exchange partial aggregation
+    (``Aggregate.strategy="partial"``).
+
+    A physical-routing rewrite, not a tree restructuring: every
+    strategy computes the same table, and the sharded backend
+    re-validates its own preconditions at dispatch (degrading to the
+    inherited path when the data disagrees with the plan-time stats),
+    so a stale estimate costs time, never correctness. The one
+    observable difference is the documented float-SUM/MEAN
+    summation-order carve-out — which is exactly why a non-default
+    strategy renders in ``describe()`` and therefore moves the step's
+    cache key; integer aggregates stay bit-for-bit and the
+    differential suite pins them exactly.
+
+    Gate (all must hold, read at optimize time): plan-time stats show
+    ``n_rows >= repro.exec.auto.SHARD_ROWS`` for the aggregate's one
+    source table; the mesh has more than one device; the sharded
+    backend is importable; the single group key is declared with an
+    integer dtype by that source (the dense-rebase partial path only
+    handles int keys — anything else would just flip the strategy and
+    fall straight back at dispatch).
+    """
+    from repro.exec import auto as auto_mod
+    devices = _mesh_devices()
+    if devices <= 1 or not _sharded_available():
+        return P.rebuild(plan, list(plan.steps))
+    shard_rows = auto_mod.SHARD_ROWS
+
+    schemas = _schemas(plan)
+    new_steps: list[P.PlanStep] = []
+    for step in plan.steps:
+        if step.logical is None:
+            new_steps.append(step)
+            continue
+        notes: list[str] = []
+
+        def route(op: LogicalOp) -> LogicalOp:
+            op = _map_children(op, route)
+            if not (isinstance(op, Aggregate)
+                    and op.strategy == "auto" and len(op.keys) == 1):
+                return op
+            tables = sorted(op.child.scan_tables())
+            if len(tables) != 1:
+                return op
+            table = tables[0]
+            st = (step.input_stats or {}).get(table)
+            n = getattr(st, "n_rows", None)
+            if n is None or n < shard_rows:
+                return op
+            key = op.keys[0]
+            sch = schemas.get(table)
+            if (sch is None or key not in sch.columns()
+                    or sch.columns()[key].dtype.family != "int"):
+                return op
+            notes.append(
+                f"partial_agg: aggregate on {table!r} routed to "
+                f"sharded partial aggregation (rows={n} >= "
+                f"{shard_rows}, devices={devices})")
+            return dataclasses.replace(op, strategy="partial")
+
+        tree = route(step.logical)
+        if notes:
+            step = dataclasses.replace(
+                step, logical=tree,
+                provenance=step.provenance + tuple(notes))
+        new_steps.append(step)
+    return P.rebuild(plan, new_steps)
+
+
+def _mesh_devices() -> int:
+    try:
+        import jax
+        return len(jax.devices())
+    except ImportError:
+        return 1
+
+
+def _sharded_available() -> bool:
+    from repro import exec as exec_backends
+    try:
+        exec_backends.get_backend("sharded")
+    except (KeyError, exec_backends.BackendUnavailable):
+        return False
+    return True
+
+
+# ---------------------------------------------------------------------------
 # the pipeline
 # ---------------------------------------------------------------------------
 
@@ -625,14 +782,16 @@ PASSES: dict[str, Callable[[P.Plan], P.Plan]] = {
     "join_reorder": join_reorder,
     "column_pruning": column_pruning,
     "probe_fusion": probe_fusion,
+    "partial_agg": partial_agg,
 }
 
 # Order matters: pushdown first (creates the Filter(Scan) shapes the
 # later passes feed on), reorder over the cleaned chain, pruning once
-# the tree's reads are final, fusion last (it consumes the remaining
-# Filter-before-Join shapes).
+# the tree's reads are final, fusion next (it consumes the remaining
+# Filter-before-Join shapes), and partial_agg last — pure physical
+# routing over the finished tree.
 DEFAULT_PASSES = ("filter_pushdown", "join_reorder", "column_pruning",
-                  "probe_fusion")
+                  "probe_fusion", "partial_agg")
 
 
 def optimize(plan: P.Plan,

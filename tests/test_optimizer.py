@@ -59,7 +59,8 @@ def _stats(fact=5000, users=500, items=100):
 
 def test_default_passes_are_registered_in_order():
     assert DEFAULT_PASSES == ("filter_pushdown", "join_reorder",
-                              "column_pruning", "probe_fusion")
+                              "column_pruning", "probe_fusion",
+                              "partial_agg")
     assert all(name in PASSES for name in DEFAULT_PASSES)
 
 
