@@ -339,6 +339,12 @@ def main() -> None:
     # three-table pipeline, smoke-sized.
     from benchmarks.plan_optimizer import bench_plan_optimizer
     write_bench_doc(bench_plan_optimizer(smoke=True))
+    # SQL front-door gate (DESIGN.md §13): text-to-result star query
+    # through Client.sql — optimizer passes must fire on the compiled
+    # tree, a repeated query at the same commit must execute zero
+    # nodes, and optimized must beat unoptimized, smoke-sized.
+    from benchmarks.sql_front_door import bench_sql_front_door
+    write_bench_doc(bench_sql_front_door(smoke=True))
     bench_pipeline_run()
     bench_train_step()
     bench_decode_step()

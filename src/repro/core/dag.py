@@ -409,6 +409,12 @@ class Pipeline:
         identical output columns.
         """
         from repro.data.tables import resolve_agg_specs
+        if joins and (join_with is not None or join_on):
+            raise PlanError(
+                f"node {name!r}: pass either the single-join sugar "
+                f"(join_with/join_on) or the joins chain, not both — "
+                f"the sugar is normalized into joins, so mixing them "
+                f"would silently drop one spelling")
         if agg_specs and not group_keys:
             raise PlanError(
                 f"node {name!r}: agg_specs requires group_keys")
@@ -423,6 +429,29 @@ class Pipeline:
                        if agg_specs else ()))
         self.add(node)
         return node
+
+    def sql_query(self, *, name: str, query: str):
+        """Register a node authored as SQL text (DESIGN.md §13).
+
+        The query is parsed and compiled against everything visible in
+        this pipeline — declared sources plus every node output
+        registered so far — into a :class:`DeclarativeNode` carrying
+        its logical tree, with the output contract *inferred* from the
+        input contracts. Unknown tables/columns are compile-time
+        PlanErrors naming the pipeline, with a nearest-name suggestion.
+        The node then plans, optimizes, caches, and runs exactly like
+        any hand-built declarative node.
+        """
+        # local import: repro.sql depends on this module.
+        from repro.sql.compiler import compile_query
+        schemas: dict[str, type[S.Schema]] = dict(self._source_schemas)
+        for n, other in self._nodes.items():
+            schemas[n] = other.output_schema
+        compiled = compile_query(
+            query, name=name, schemas=schemas,
+            context=f"pipeline {self.name!r}")
+        self.add(compiled.node)
+        return compiled.node
 
     def add(self, node: Node) -> None:
         if node.name in self._nodes or node.name in self._source_schemas:

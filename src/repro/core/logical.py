@@ -40,7 +40,7 @@ from repro import exec as exec_backends
 from repro.data.tables import Expr, Table, _ColumnData
 
 __all__ = ["LogicalOp", "Scan", "Filter", "Project", "Aggregate",
-           "Join", "Reorder"]
+           "Join", "Reorder", "Sort", "Limit"]
 
 
 def _pred_mask(t: Table, pred: Expr | None) -> np.ndarray | None:
@@ -251,6 +251,83 @@ class Join(LogicalOp):
                 left_mask=_pred_mask(lt, self.left_pred),
                 right_mask=_pred_mask(rt, self.right_pred), **kwargs)
         return Table._from_cols(cols), None
+
+
+@dataclasses.dataclass(frozen=True)
+class Sort(LogicalOp):
+    """Stable multi-key sort (the SQL ORDER BY target).
+
+    ``keys`` are ``(column, ascending)`` pairs, primary key first. SQL
+    NULL placement: NULLs sort *last* under ASC and *first* under DESC
+    (the larger-than-everything convention). Float NaN follows the same
+    convention as a quasi-NULL payload: last under ASC, first under
+    DESC (``np.unique`` orders NaN after every finite value). Ties keep
+    the child's row order (stability via a final row-id tiebreak), so
+    the output is a deterministic function of the child table alone —
+    no backend dispatch, same as ``Reorder``'s restoration lexsort."""
+
+    child: LogicalOp
+    keys: tuple[tuple[str, bool], ...]
+
+    def children(self):
+        return (self.child,)
+
+    def describe(self) -> str:
+        keys = [f"{name} {'asc' if asc else 'desc'}"
+                for name, asc in self.keys]
+        return f"sort(keys={keys}, {self.child.describe()})"
+
+    def _exec(self, tables, stats):
+        t, _ = self.child._exec(tables, stats)
+        n = len(t)
+        # np.lexsort: LAST key is primary -> build (tiebreak, k_last,
+        # ..., k_first). Per-key dense ranks via np.unique make object
+        # (str) and datetime columns sortable uniformly and give NULLs
+        # an explicit rank slot.
+        lex: list[np.ndarray] = [np.arange(n, dtype=np.int64)]
+        for name, asc in reversed(self.keys):
+            c = t._data[name]
+            ok = (c.valid if c.valid is not None
+                  else np.ones(n, dtype=bool))
+            rank = np.zeros(n, dtype=np.int64)
+            if ok.any():
+                _, inv = np.unique(c.values[ok], return_inverse=True)
+                rank[ok] = inv
+            k = int(rank.max()) + 1 if n else 0
+            rank[~ok] = k            # NULLs above every value...
+            if not asc:
+                rank = -rank         # ...so DESC puts them first
+            lex.append(rank)
+        perm = np.lexsort(tuple(lex))
+        data = {nm: _ColumnData(
+            c.values[perm],
+            None if c.valid is None else c.valid[perm])
+            for nm, c in t._data.items()}
+        return Table(_data=data), None
+
+
+@dataclasses.dataclass(frozen=True)
+class Limit(LogicalOp):
+    """Keep the first ``n`` rows of the child (SQL LIMIT)."""
+
+    child: LogicalOp
+    n: int
+
+    def children(self):
+        return (self.child,)
+
+    def describe(self) -> str:
+        return f"limit({self.n}, {self.child.describe()})"
+
+    def _exec(self, tables, stats):
+        t, _ = self.child._exec(tables, stats)
+        if len(t) <= self.n:
+            return t, None
+        data = {nm: _ColumnData(
+            c.values[:self.n],
+            None if c.valid is None else c.valid[:self.n])
+            for nm, c in t._data.items()}
+        return Table(_data=data), None
 
 
 @dataclasses.dataclass(frozen=True)

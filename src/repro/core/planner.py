@@ -142,6 +142,13 @@ class Plan:
 
     def describe(self) -> str:
         lines = [f"plan {self.pipeline_name} (code={self.code_hash})"]
+        # EXPLAIN header: nodes compiled from SQL carry their original
+        # query text (display metadata only — never cache material).
+        for s in self.steps:
+            qtext = getattr(s.node, "query", "")
+            if qtext:
+                lines.append(
+                    f"  query[{s.node.name}]: {' '.join(qtext.split())}")
         for s in self.steps:
             el = (f" [elided null-checks: {sorted(s.elided_null_checks)}]"
                   if s.elided_null_checks else "")

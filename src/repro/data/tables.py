@@ -196,8 +196,13 @@ class Table:
                 kind = "plain"
             vkey = (store.put_array(c.valid)
                     if c.valid is not None else None)
+            # dtype recorded so schema inference over a snapshot (the
+            # SQL front door's catalog discovery) reads the manifest
+            # only, never the column blobs; "str"/"datetime" kinds pin
+            # the logical dtype already.
             manifest["columns"][name] = {"values": key, "valid": vkey,
-                                         "kind": kind}
+                                         "kind": kind,
+                                         "dtype": str(vals.dtype)}
         return store.put_json(manifest)
 
     @classmethod
@@ -490,9 +495,20 @@ class Expr:
                     _structural=self._structural and other_e._structural,
                     refs=refs)
 
+    def _unop(self, op, sym: str) -> "Expr":
+        def fn(t: Table):
+            vals, valid = self._fn(t)
+            return op(vals), valid
+        return Expr(fn, f"({sym}{self._name})", f"({sym}{self._desc})",
+                    _structural=self._structural, refs=self._refs)
+
+    def __invert__(self): return self._unop(np.logical_not, "~")
+    def __neg__(self): return self._unop(np.negative, "-")
+
     def __add__(self, o): return self._binop(o, np.add, "+")
     def __sub__(self, o): return self._binop(o, np.subtract, "-")
     def __mul__(self, o): return self._binop(o, np.multiply, "*")
+    def __truediv__(self, o): return self._binop(o, np.true_divide, "/")
     def __lt__(self, o): return self._binop(o, np.less, "<")
     def __le__(self, o): return self._binop(o, np.less_equal, "<=")
     def __gt__(self, o): return self._binop(o, np.greater, ">")

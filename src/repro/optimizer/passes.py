@@ -51,8 +51,8 @@ from repro.core import schema as S
 from repro.core.contracts import (check_node, provable_postconditions,
                                   referenced_columns)
 from repro.core.dag import DeclarativeNode
-from repro.core.logical import (Aggregate, Filter, Join, LogicalOp,
-                                Project, Reorder, Scan)
+from repro.core.logical import (Aggregate, Filter, Join, Limit,
+                                LogicalOp, Project, Reorder, Scan, Sort)
 
 __all__ = ["DEFAULT_PASSES", "PASSES", "optimize",
            "filter_pushdown", "join_reorder", "column_pruning",
@@ -79,7 +79,7 @@ def _walk(op: LogicalOp):
 
 def _map_children(op: LogicalOp,
                   fn: Callable[[LogicalOp], LogicalOp]) -> LogicalOp:
-    if isinstance(op, (Filter, Project, Aggregate)):
+    if isinstance(op, (Filter, Project, Aggregate, Sort, Limit)):
         return dataclasses.replace(op, child=fn(op.child))
     if isinstance(op, Join):
         return dataclasses.replace(op, left=fn(op.left),
@@ -108,7 +108,7 @@ def _op_cols(op: LogicalOp, schemas: Mapping[str, type[S.Schema]]
         if op.columns is not None:
             cols &= set(op.columns)
         return cols
-    if isinstance(op, Filter):
+    if isinstance(op, (Filter, Sort, Limit)):
         return _op_cols(op.child, schemas)
     if isinstance(op, Project):
         return {e.output_name() for e in op.exprs}
@@ -138,6 +138,11 @@ def _tree_refs(op: LogicalOp) -> set[str] | None:
         if isinstance(node, Aggregate):
             refs |= set(node.keys)
             refs |= {value for _fn, value, _out in node.specs}
+        if isinstance(node, Sort):
+            # sort keys name OUTPUT columns of the op below (usually a
+            # Project); folding them into the reference set is
+            # conservative — it can only keep more source columns alive.
+            refs |= {name for name, _asc in node.keys}
         for e in node._own_exprs():
             r = e.references()
             if r is None:
@@ -383,13 +388,14 @@ def join_reorder(plan: P.Plan) -> P.Plan:
 
 
 def _reorder_tree(step: P.PlanStep, schemas):
-    # peel Project/Filter/Aggregate wrappers down to the join chain
-    # root (Reorder restores exact row order, so an Aggregate above it
-    # sees identical input — groups, representatives and summation
-    # order included)
+    # peel Project/Filter/Aggregate/Sort/Limit wrappers down to the
+    # join chain root (Reorder restores exact row order, so any
+    # row-order-sensitive op above it — an Aggregate's groups,
+    # representatives and summation order, a Sort's tiebreaks, a
+    # Limit's prefix — sees identical input)
     wrappers: list[LogicalOp] = []
     op = step.logical
-    while isinstance(op, (Project, Filter, Aggregate)):
+    while isinstance(op, (Project, Filter, Aggregate, Sort, Limit)):
         wrappers.append(op)
         op = op.child
     if not isinstance(op, Join):
@@ -505,8 +511,13 @@ def _prune_step(step: P.PlanStep, schemas):
     tree = step.logical
     # an Aggregate root is as prunable as a Project root: its output
     # is exactly keys + spec outputs, so mid-tree column sets are just
-    # as unobservable.
-    if not isinstance(tree, (Project, Aggregate)):
+    # as unobservable. Sort/Limit wrappers above such a root are
+    # column-transparent (pure row selection/permutation), so peel them
+    # when testing the shape — the prune itself rewrites scans only.
+    root = tree
+    while isinstance(root, (Sort, Limit)):
+        root = root.child
+    if not isinstance(root, (Project, Aggregate)):
         return None
     needed = _tree_refs(tree)
     if needed is None:

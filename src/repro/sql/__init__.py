@@ -1,0 +1,25 @@
+"""SQL front door (DESIGN.md §13): parse -> logical IR -> optimized plan.
+
+A hand-written tokenizer + recursive-descent parser for single-SELECT
+queries (joins, WHERE, GROUP BY aggregates, ORDER BY, LIMIT), an
+AST-to-:mod:`repro.core.logical` compiler with contract-inferred output
+schemas, and catalog table discovery — so ``Client.sql(query, ref=...)``
+and ``Pipeline.sql_query(name=..., query=...)`` are thin front ends
+over the *existing* planner, optimizer, cache, and backends: every
+query flows through ``optimize()``, executes on the stats-driven
+``auto`` backend, and caches content-addressed by its logical tree
+(two spellings of one query share an entry; the query text is EXPLAIN
+metadata, never key material).
+"""
+from repro.sql.ast import Query
+from repro.sql.compiler import CompiledQuery, SqlNode, compile_query
+from repro.sql.discovery import schema_from_snapshot
+from repro.sql.errors import (SqlCompileError, SqlError, SqlParseError,
+                              edit_distance, suggest)
+from repro.sql.parser import parse
+from repro.sql.tokens import Token, tokenize
+
+__all__ = ["parse", "tokenize", "Token", "Query", "compile_query",
+           "CompiledQuery", "SqlNode", "schema_from_snapshot",
+           "SqlError", "SqlParseError", "SqlCompileError",
+           "edit_distance", "suggest"]

@@ -1,0 +1,257 @@
+"""The SQL front door's entry points (DESIGN.md §13):
+``Client.sql(query, ref=...)`` — catalog discovery at a pinned ref,
+compile-time errors naming the ref, content-addressed caching where two
+spellings of one query share an entry — and ``Pipeline.sql_query`` as a
+node-authoring surface inside transactional runs."""
+import numpy as np
+import pytest
+
+from repro.core import schema as S
+from repro.core.dag import Pipeline
+from repro.core.errors import PlanError
+from repro.core.planner import plan
+from repro.core.runner import Client, QueryResult
+from repro.data.tables import Table, col
+from repro.sql.errors import SqlCompileError
+
+Q_ACCEPT = ("SELECT u.name, SUM(o.amount) AS total FROM users u "
+            "JOIN orders o ON u.id = o.user_id WHERE o.amount > 10 "
+            "GROUP BY u.name ORDER BY total DESC LIMIT 5")
+
+
+def users_table():
+    return Table({
+        "id": np.array([1, 2, 3, 4], dtype=np.int64),
+        "name": np.array(["ann", "bob", "cyd", "dee"], dtype=object)})
+
+
+def orders_table():
+    return Table({
+        "order_id": np.array([10, 11, 12, 13, 14], dtype=np.int64),
+        "user_id": np.array([1, 2, 3, 3, 3], dtype=np.int64),
+        "amount": np.array([20.0, 30.0, 40.0, 50.0, 5.0]),
+        "status": np.array(["ok", "ok", "ok", "late", "ok"],
+                           dtype=object)})
+
+
+@pytest.fixture()
+def client():
+    c = Client()
+    c.write_source_table("main", "users", users_table())
+    c.write_source_table("main", "orders", orders_table())
+    return c
+
+
+# --- end-to-end -------------------------------------------------------------
+
+def test_acceptance_query_end_to_end(client):
+    r = client.sql(Q_ACCEPT)
+    assert isinstance(r, QueryResult)
+    assert r.table.column_names() == ["name", "total"]
+    assert list(r.table.column("name")) == ["cyd", "bob", "ann"]
+    assert list(r.table.column("total")) == [90.0, 30.0, 20.0]
+    assert r.executed == ("query",) and r.cached == ()
+    assert r.query == Q_ACCEPT
+    assert r.commit_id == client.catalog.head("main").id
+    cols = r.schema.columns()
+    assert cols["name"].dtype is S.STR
+    assert cols["name"].inherited_from == "users.name"
+    assert cols["total"].dtype is S.FLOAT64
+
+
+def test_rerun_same_commit_is_pure_cache_hit(client):
+    r1 = client.sql(Q_ACCEPT)
+    r2 = client.sql(Q_ACCEPT)
+    assert r2.executed == ()                 # zero nodes executed
+    assert r2.cached == ("query",)
+    assert r2.fingerprint() == r1.fingerprint()
+    assert r2.snapshot == r1.snapshot
+
+
+def test_two_spellings_share_one_cache_entry(client):
+    r1 = client.sql(Q_ACCEPT)
+    respelled = ("select   users.name, sum( orders.amount )  total  "
+                 "from users  join orders on orders.user_id = users.id "
+                 "where orders.amount > 10 "
+                 "group by name order by total desc limit 5")
+    r2 = client.sql(respelled)
+    assert r2.executed == ()                 # same logical tree: free hit
+    assert r2.fingerprint() == r1.fingerprint()
+
+
+def test_new_commit_invalidates_the_hit(client):
+    r1 = client.sql(Q_ACCEPT)
+    extra = Table({
+        "order_id": np.array([99], dtype=np.int64),
+        "user_id": np.array([4], dtype=np.int64),
+        "amount": np.array([100.0]),
+        "status": np.array(["ok"], dtype=object)})
+    client.write_source_table("main", "orders", extra)
+    r2 = client.sql(Q_ACCEPT)
+    assert r2.executed == ("query",)         # inputs moved: must rerun
+    assert r2.fingerprint() != r1.fingerprint()
+
+
+def test_ref_pinning_reads_the_named_commit(client):
+    old = client.catalog.head("main").id
+    client.write_source_table("main", "orders", Table({
+        "order_id": np.array([99], dtype=np.int64),
+        "user_id": np.array([1], dtype=np.int64),
+        "amount": np.array([1000.0]),
+        "status": np.array(["ok"], dtype=object)}))
+    r_old = client.sql(Q_ACCEPT, ref=old)
+    r_new = client.sql(Q_ACCEPT)
+    assert list(r_old.table.column("name")) == ["cyd", "bob", "ann"]
+    assert list(r_new.table.column("total")) == [1000.0]
+    assert r_old.commit_id == old != r_new.commit_id
+
+
+def test_unoptimized_matches_optimized(client):
+    r_opt = client.sql(Q_ACCEPT)
+    r_raw = client.sql(Q_ACCEPT, optimizer_passes=(), cache=False)
+    assert r_raw.fingerprint() == r_opt.fingerprint()
+    assert r_raw.plan.optimizer_passes == ()
+    assert r_opt.plan.optimizer_passes != ()
+
+
+def test_cache_false_always_executes(client):
+    client.sql(Q_ACCEPT)
+    r = client.sql(Q_ACCEPT, cache=False)
+    assert r.executed == ("query",)
+
+
+# --- EXPLAIN output ----------------------------------------------------------
+
+def test_describe_pins_query_header_format(client):
+    r = client.sql("SELECT   name\nFROM users\nWHERE id > 1")
+    lines = r.describe().splitlines()
+    assert lines[0].startswith("plan sql (code=")
+    # pinned: the original text, whitespace-normalized, right after
+    # the plan header and before any wave line.
+    assert lines[1] == "  query[query]: SELECT name FROM users WHERE id > 1"
+    assert lines[2].startswith("  [wave 0]")
+
+
+def test_describe_shows_optimizer_provenance(client):
+    r = client.sql(Q_ACCEPT)
+    text = r.describe()
+    assert "optimizer: passes=" in text
+    assert "filter_pushdown" in text
+
+
+# --- compile-time errors name the ref ----------------------------------------
+
+def test_unknown_table_names_ref_and_commit(client):
+    cid = client.catalog.head("main").id
+    with pytest.raises(SqlCompileError) as ei:
+        client.sql("SELECT x FROM userz")
+    assert str(ei.value) == (
+        f"unknown table 'userz' at ref 'main' (commit {cid}); "
+        f"did you mean 'users'? known tables: ['orders', 'users']")
+
+
+def test_unknown_column_names_ref_and_commit(client):
+    cid = client.catalog.head("main").id
+    with pytest.raises(SqlCompileError) as ei:
+        client.sql("SELECT o.amnt FROM orders o")
+    assert str(ei.value) == (
+        f"unknown column 'amnt' in table 'orders' at ref 'main' "
+        f"(commit {cid}); did you mean 'amount'?")
+
+
+def test_discovery_infers_nullability_from_snapshot(client):
+    client.write_source_table("main", "notes", Table({
+        "k": np.array([1, 2], dtype=np.int64),
+        "txt": np.array(["a", None], dtype=object)}))
+    r = client.sql("SELECT txt FROM notes")
+    assert r.schema.columns()["txt"].nullable
+    r2 = client.sql("SELECT k FROM notes")
+    assert not r2.schema.columns()["k"].nullable
+
+
+# --- Pipeline.sql_query -------------------------------------------------------
+
+def test_sql_query_node_in_transactional_run(client):
+    p = Pipeline("sqlnodes")
+    p.source("users", _discover(client, "users"))
+    p.source("orders", _discover(client, "orders"))
+    spend = p.sql_query(
+        name="spend",
+        query="SELECT u.name, SUM(o.amount) AS total FROM users u "
+              "JOIN orders o ON u.id = o.user_id GROUP BY u.name")
+    # downstream nodes can consume the inferred contract like any other
+    p.sql(name="big", inputs={"s": "spend"},
+          input_schemas={"s": spend.output_schema},
+          output_schema=S.Schema.of(
+              "big",
+              name=S.Column("name", S.STR,
+                            inherited_from="spend_schema.name"),
+              total=S.Column("total", S.FLOAT64,
+                             inherited_from="spend_schema.total")),
+          filter_expr=(col("total") > 25.0),
+          exprs=[col("name"), col("total")])
+    res = client.run(plan(p), "main")
+    assert res.state.status == "committed"
+    big = client.read_table("main", "big")
+    assert sorted(big.column("name")) == ["bob", "cyd"]
+
+
+def _discover(client, table):
+    from repro.sql.discovery import schema_from_snapshot
+    snap = client.catalog.head("main").tables[table]
+    return schema_from_snapshot(client.store, snap, table)
+
+
+def test_sql_query_unknown_column_names_pipeline():
+    p = Pipeline("bad")
+    p.source("users", S.Schema.of(
+        "users", id=S.Column("id", S.INT64),
+        name=S.Column("name", S.STR)))
+    with pytest.raises(SqlCompileError) as ei:
+        p.sql_query(name="q", query="SELECT nme FROM users")
+    assert str(ei.value) == ("unknown column 'nme' at pipeline 'bad'; "
+                             "did you mean 'name'?")
+
+
+def test_sql_query_sees_upstream_node_outputs():
+    Users = S.Schema.of("users", id=S.Column("id", S.INT64),
+                        name=S.Column("name", S.STR))
+    p = Pipeline("chain")
+    p.source("users", Users)
+    p.sql_query(name="ids", query="SELECT id FROM users WHERE id > 1")
+    node = p.sql_query(name="doubled",
+                       query="SELECT id * 2 AS twice FROM ids")
+    assert node.inputs == {"ids": "ids"}
+    assert node.output_schema.columns()["twice"].dtype is S.INT64
+
+
+# --- satellite: sugar/joins mutual exclusion ---------------------------------
+
+def test_pipeline_sql_rejects_sugar_plus_joins_chain():
+    Users = S.Schema.of("users", user_id=S.Column("user_id", S.INT64))
+    Orders = S.Schema.of("orders", user_id=S.Column("user_id", S.INT64),
+                         amount=S.Column("amount", S.FLOAT64))
+    Out = S.Schema.of(
+        "out", user_id=S.Column("user_id", S.INT64,
+                                inherited_from="users.user_id"))
+    p = Pipeline("mixed")
+    p.source("users", Users)
+    p.source("orders", Orders)
+    with pytest.raises(PlanError, match=r"node 'out': pass either the "
+                                        r"single-join sugar"):
+        p.sql(name="out", inputs={"u": "users", "o": "orders"},
+              input_schemas={"u": Users, "o": Orders},
+              output_schema=Out,
+              join_with="orders", join_on=["user_id"],
+              joins=[("orders", ["user_id"])],
+              exprs=[col("user_id")])
+    # each spelling alone still registers
+    p.sql(name="a", inputs={"u": "users", "o": "orders"},
+          input_schemas={"u": Users, "o": Orders},
+          output_schema=Out,
+          join_with="orders", join_on=["user_id"],
+          exprs=[col("user_id")])
+    p.sql(name="b", inputs={"u": "users", "o": "orders"},
+          input_schemas={"u": Users, "o": Orders},
+          output_schema=Out,
+          joins=[("orders", ["user_id"])], exprs=[col("user_id")])

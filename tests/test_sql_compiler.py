@@ -1,0 +1,339 @@
+"""AST -> logical-IR compiler (DESIGN.md §13): canonical trees, schema
+inference via dummy evaluation, cache-key equivalence of different
+spellings, and the pinned unknown-name / shape-violation messages."""
+import numpy as np
+import pytest
+
+from repro.core import schema as S
+from repro.sql.compiler import compile_query
+from repro.sql.errors import (SqlCompileError, edit_distance, suggest)
+
+Users = S.Schema.of("users",
+                    id=S.Column("id", S.INT64),
+                    name=S.Column("name", S.STR),
+                    note=S.Column("note", S.STR, nullable=True))
+Orders = S.Schema.of("orders",
+                     order_id=S.Column("order_id", S.INT64),
+                     user_id=S.Column("user_id", S.INT64),
+                     amount=S.Column("amount", S.FLOAT64),
+                     status=S.Column("status", S.STR))
+SCHEMAS = {"users": Users, "orders": Orders}
+CTX = "ref 'main' (commit abc123)"
+
+
+def compile_(q, schemas=SCHEMAS):
+    return compile_query(q, name="query", schemas=schemas, context=CTX)
+
+
+# --- tree shapes and canonicalization --------------------------------------
+
+def test_simple_projection_tree():
+    cq = compile_("SELECT name, id FROM users")
+    assert cq.node.tree.describe() == \
+        "project(['name', 'id'], scan(users))"
+    assert cq.tables == ("users",)
+
+
+def test_where_becomes_filter_below_project():
+    cq = compile_("SELECT id FROM users WHERE id > 2")
+    assert cq.node.tree.describe() == \
+        "project(['id'], filter((id>2), scan(users)))"
+
+
+def test_join_where_group_order_limit_tree():
+    cq = compile_(
+        "SELECT u.name, SUM(o.amount) AS total FROM users u "
+        "JOIN orders o ON u.id = o.user_id WHERE o.amount > 10 "
+        "GROUP BY u.name ORDER BY total DESC LIMIT 5")
+    assert cq.node.tree.describe() == (
+        "limit(5, sort(keys=['total desc'], project(['name', 'total'], "
+        "aggregate(keys=['name'], specs=['sum(amount)->total'], "
+        "filter((amount>10), join(scan(users), "
+        "project(['user_id AS id', 'amount'], scan(orders)), "
+        "on=['id'], how=inner))))))")
+    assert cq.node.joins == (("orders", ("id",)),)
+    assert cq.node.group_keys == ("name",)
+    assert cq.node.agg_specs == (("sum", "amount", "total"),)
+
+
+def test_two_spellings_share_cache_material():
+    a = compile_("SELECT u.name, SUM(o.amount) AS total FROM users u "
+                 "JOIN orders o ON u.id = o.user_id "
+                 "GROUP BY u.name")
+    b = compile_("select   users.name ,  sum( orders.amount )  total\n"
+                 "from users join orders on orders.user_id = users.id\n"
+                 "group by name")
+    assert a.node.tree.describe() == b.node.tree.describe()
+    assert a.node.cache_material() == b.node.cache_material()
+    assert a.output_schema.fingerprint() == b.output_schema.fingerprint()
+
+
+def test_query_text_is_not_cache_material():
+    a = compile_("SELECT id FROM users")
+    b = compile_("SELECT  id  FROM  users  ")
+    assert a.node.query != b.node.query
+    assert a.node.cache_material() == b.node.cache_material()
+
+
+def test_same_named_keys_avoid_rename_project():
+    # both sides spell the key 'user_id'-free: the right scan enters
+    # the join unprojected, leaving join_reorder room to fire.
+    X = S.Schema.of("x", k=S.Column("k", S.INT64),
+                    v=S.Column("v", S.FLOAT64))
+    Y = S.Schema.of("y", k=S.Column("k", S.INT64),
+                    w=S.Column("w", S.FLOAT64))
+    cq = compile_("SELECT v, w FROM x JOIN y ON x.k = y.k",
+                  schemas={"x": X, "y": Y})
+    assert cq.node.tree.describe() == (
+        "project(['v', 'w'], join(scan(x), scan(y), "
+        "on=['k'], how=inner))")
+
+
+def test_colliding_right_columns_renamed_internally():
+    X = S.Schema.of("x", k=S.Column("k", S.INT64),
+                    v=S.Column("v", S.FLOAT64))
+    Y = S.Schema.of("y", j=S.Column("j", S.INT64),
+                    v=S.Column("v", S.FLOAT64))
+    cq = compile_("SELECT x.v, y.v AS v2 FROM x JOIN y ON x.k = y.j",
+                  schemas={"x": X, "y": Y})
+    # y.v collides with x.v: renamed behind a right-side Project, and
+    # the internal name never reaches the output contract.
+    assert "__q1_v" in cq.node.tree.describe()
+    assert list(cq.output_schema.columns()) == ["v", "v2"]
+
+
+def test_star_expansion_merges_keys_once():
+    cq = compile_("SELECT * FROM users u JOIN orders o "
+                  "ON u.id = o.user_id")
+    names = list(cq.output_schema.columns())
+    assert names == ["id", "name", "note",
+                     "order_id", "amount", "status"]
+
+
+def test_qualified_star():
+    cq = compile_("SELECT o.*, u.name FROM users u JOIN orders o "
+                  "ON u.id = o.user_id")
+    assert list(cq.output_schema.columns()) == [
+        "order_id", "user_id", "amount", "status", "name"]
+
+
+# --- inferred output contracts ---------------------------------------------
+
+def test_inferred_dtypes_and_lineage():
+    cq = compile_("SELECT name, id, amount * 2 AS dbl FROM users u "
+                  "JOIN orders o ON u.id = o.user_id")
+    cols = cq.output_schema.columns()
+    assert cols["name"].dtype is S.STR
+    assert cols["name"].inherited_from == "users.name"
+    assert cols["id"].dtype is S.INT64
+    assert cols["dbl"].dtype is S.FLOAT64
+    assert cols["dbl"].inherited_from is None
+
+
+def test_left_join_widens_right_nullability():
+    cq = compile_("SELECT u.name, o.amount FROM users u "
+                  "LEFT JOIN orders o ON u.id = o.user_id")
+    cols = cq.output_schema.columns()
+    assert not cols["name"].nullable
+    assert cols["amount"].nullable          # right side of a LEFT join
+
+
+def test_aggregate_dtype_contract():
+    cq = compile_("SELECT status, SUM(amount) s, COUNT(note) c, "
+                  "MIN(order_id) mn, MEAN(order_id) av "
+                  "FROM orders o JOIN users u ON o.user_id = u.id "
+                  "GROUP BY status")
+    cols = cq.output_schema.columns()
+    assert cols["s"].dtype is S.FLOAT64      # SUM keeps input dtype
+    assert cols["c"].dtype is S.INT64        # COUNT is int64 ...
+    assert not cols["c"].nullable            # ... and never NULL
+    assert cols["mn"].dtype is S.INT64       # MIN keeps input dtype
+    assert cols["av"].dtype is S.FLOAT64     # MEAN is always float64
+
+
+def test_comparison_and_bool_inference():
+    cq = compile_("SELECT id > 2 AS big, note IS NULL AS missing "
+                  "FROM users")
+    cols = cq.output_schema.columns()
+    assert cols["big"].dtype is S.BOOL
+    assert cols["missing"].dtype is S.BOOL
+    assert not cols["missing"].nullable      # IS NULL never returns NULL
+
+
+def test_unaliased_items_get_positional_names():
+    cq = compile_("SELECT id + 1, name FROM users")
+    assert list(cq.output_schema.columns()) == ["col0", "name"]
+
+
+def test_unaliased_aggregate_gets_value_fn_name():
+    cq = compile_("SELECT status, SUM(amount) FROM orders "
+                  "GROUP BY status")
+    assert list(cq.output_schema.columns()) == ["status", "amount_sum"]
+
+
+# --- pinned error messages --------------------------------------------------
+
+def test_unknown_table_message_format():
+    with pytest.raises(SqlCompileError) as ei:
+        compile_("SELECT a FROM userz")
+    assert str(ei.value) == (
+        "unknown table 'userz' at ref 'main' (commit abc123); "
+        "did you mean 'users'? known tables: ['orders', 'users']")
+
+
+def test_unknown_column_message_format():
+    with pytest.raises(SqlCompileError) as ei:
+        compile_("SELECT o.amnt FROM orders o")
+    assert str(ei.value) == (
+        "unknown column 'amnt' in table 'orders' at ref 'main' "
+        "(commit abc123); did you mean 'amount'?")
+
+
+def test_unknown_unqualified_column_suggests_across_scopes():
+    with pytest.raises(SqlCompileError) as ei:
+        compile_("SELECT nmae FROM users u JOIN orders o "
+                 "ON u.id = o.user_id")
+    assert "unknown column 'nmae'" in str(ei.value)
+    assert "did you mean 'name'?" in str(ei.value)
+
+
+def test_no_suggestion_when_nothing_is_close():
+    with pytest.raises(SqlCompileError) as ei:
+        compile_("SELECT zzzzzzzz FROM users")
+    assert "did you mean" not in str(ei.value)
+
+
+def test_unknown_qualifier():
+    with pytest.raises(SqlCompileError) as ei:
+        compile_("SELECT q.id FROM users u")
+    assert "unknown table 'q'" in str(ei.value)
+
+
+def test_ambiguous_column_requires_qualification():
+    X = S.Schema.of("x", k=S.Column("k", S.INT64),
+                    v=S.Column("v", S.FLOAT64))
+    Y = S.Schema.of("y", j=S.Column("j", S.INT64),
+                    v=S.Column("v", S.FLOAT64))
+    with pytest.raises(SqlCompileError, match="ambiguous column 'v'"):
+        compile_("SELECT v FROM x JOIN y ON x.k = y.j",
+                 schemas={"x": X, "y": Y})
+
+
+def test_on_equated_columns_are_not_ambiguous():
+    cq = compile_("SELECT user_id FROM orders o JOIN users u "
+                  "ON o.user_id = u.id")
+    assert "user_id" in cq.output_schema.columns()
+
+
+def test_duplicate_table_alias():
+    with pytest.raises(SqlCompileError,
+                       match="duplicate table alias 'u'"):
+        compile_("SELECT 1 x FROM users u JOIN orders u ON u.id = u.id")
+
+
+def test_join_must_relate_to_earlier_table():
+    with pytest.raises(SqlCompileError,
+                       match="must relate table 'o' to an earlier"):
+        compile_("SELECT 1 x FROM users u JOIN orders o "
+                 "ON u.id = u.id")
+
+
+def test_aggregates_banned_in_where():
+    with pytest.raises(SqlCompileError,
+                       match="aggregates are not allowed in WHERE"):
+        compile_("SELECT status FROM orders WHERE SUM(amount) > 1 "
+                 "GROUP BY status")
+
+
+def test_group_by_requires_an_aggregate():
+    with pytest.raises(SqlCompileError,
+                       match="GROUP BY requires at least one aggregate"):
+        compile_("SELECT status FROM orders GROUP BY status")
+
+
+def test_aggregate_requires_group_by():
+    with pytest.raises(SqlCompileError,
+                       match="aggregate SUM requires GROUP BY"):
+        compile_("SELECT SUM(amount) FROM orders")
+
+
+def test_nested_aggregate_rejected():
+    with pytest.raises(SqlCompileError,
+                       match=r"nested aggregate in SUM\(...\)"):
+        compile_("SELECT SUM(MIN(amount)) FROM orders GROUP BY status")
+
+
+def test_bare_column_must_be_grouped_or_aggregated():
+    with pytest.raises(SqlCompileError,
+                       match="must appear in GROUP BY or inside"):
+        compile_("SELECT amount, SUM(order_id) s FROM orders "
+                 "GROUP BY status")
+
+
+def test_star_banned_with_group_by():
+    with pytest.raises(SqlCompileError,
+                       match=r"'\*' cannot be combined with GROUP BY"):
+        compile_("SELECT *, SUM(amount) s FROM orders GROUP BY status")
+
+
+def test_sum_of_string_rejected():
+    with pytest.raises(SqlCompileError,
+                       match="requires a numeric argument"):
+        compile_("SELECT SUM(status) s FROM orders GROUP BY user_id")
+
+
+def test_underscore_output_name_rejected():
+    # the Schema metaclass drops '_'-prefixed names silently; the
+    # compiler must refuse rather than lose a column.
+    with pytest.raises(SqlCompileError,
+                       match="must not start with '_'"):
+        compile_("SELECT id AS _id FROM users")
+
+
+def test_duplicate_output_column():
+    with pytest.raises(SqlCompileError,
+                       match="duplicate output column 'id'"):
+        compile_("SELECT id, id FROM users")
+
+
+def test_order_by_must_be_in_select_list():
+    with pytest.raises(SqlCompileError,
+                       match="ORDER BY column 'amount' must appear"):
+        compile_("SELECT order_id FROM orders ORDER BY amount")
+
+
+def test_order_by_source_column_through_alias():
+    # ORDER BY u.name matches the select item that passes users.name
+    # through under a different output name.
+    cq = compile_("SELECT u.name AS who FROM users u ORDER BY u.name")
+    assert cq.node.tree.describe() == (
+        "sort(keys=['who asc'], "
+        "project(['name AS who'], scan(users)))")
+
+
+# --- edit distance ----------------------------------------------------------
+
+def test_edit_distance():
+    assert edit_distance("amount", "amount") == 0
+    assert edit_distance("amnt", "amount") == 2
+    assert edit_distance("AMOUNT", "amount") == 0   # case-insensitive
+    assert edit_distance("", "abc") == 3
+
+
+def test_suggest_radius_and_tiebreak():
+    assert suggest("userz", ["users", "orders"]) == "users"
+    assert suggest("zzzzzz", ["users", "orders"]) is None
+    # ties break lexicographically for deterministic messages
+    assert suggest("ac", ["ab", "aa"]) == "aa"
+
+
+# --- execution sanity for the compiled node ---------------------------------
+
+def test_compiled_node_runs_standalone():
+    from repro.data.tables import Table
+    cq = compile_("SELECT name FROM users WHERE id > 1")
+    out = cq.node.run({"users": Table({
+        "id": np.array([1, 2], dtype=np.int64),
+        "name": np.array(["a", "b"], dtype=object),
+        "note": np.array(["x", None], dtype=object)})})
+    assert list(out.column("name")) == ["b"]

@@ -1,0 +1,210 @@
+"""Tokenizer + recursive-descent parser for the SQL front door
+(DESIGN.md §13): token shapes, precedence, join/group/order clauses,
+and the pinned ``syntax error at position N`` message format."""
+import pytest
+
+from repro.core.errors import PlanError
+from repro.sql import ast as A
+from repro.sql.errors import SqlError, SqlParseError
+from repro.sql.parser import parse
+from repro.sql.tokens import tokenize
+
+
+# --- tokenizer -------------------------------------------------------------
+
+def test_tokenize_kinds_and_positions():
+    toks = tokenize("SELECT a.b, 'x''y' FROM t WHERE n >= 1.5e3")
+    kinds = [(t.kind, t.text) for t in toks]
+    assert kinds == [
+        ("KEYWORD", "SELECT"), ("IDENT", "a"), ("PUNCT", "."),
+        ("IDENT", "b"), ("PUNCT", ","), ("STRING", "x'y"),
+        ("KEYWORD", "FROM"), ("IDENT", "t"), ("KEYWORD", "WHERE"),
+        ("IDENT", "n"), ("OP", ">="), ("FLOAT", "1.5e3"), ("EOF", ""),
+    ]
+    # positions are character offsets into the query text
+    assert toks[0].pos == 0
+    assert toks[5].pos == 12          # the string literal's quote
+    assert toks[-1].pos == len("SELECT a.b, 'x''y' FROM t WHERE n >= 1.5e3")
+
+
+def test_tokenize_keywords_case_insensitive_idents_keep_case():
+    toks = tokenize("select Foo frOm Bar")
+    assert [(t.kind, t.text) for t in toks[:-1]] == [
+        ("KEYWORD", "SELECT"), ("IDENT", "Foo"),
+        ("KEYWORD", "FROM"), ("IDENT", "Bar")]
+
+
+def test_tokenize_longest_operator_wins():
+    toks = tokenize("a<=b <> c != d == e")
+    ops = [t.text for t in toks if t.kind == "OP"]
+    assert ops == ["<=", "<>", "!=", "=="]
+
+
+def test_tokenize_numbers():
+    toks = tokenize("1 2.5 .5 1e3 1.5E-2")
+    assert [(t.kind, t.text) for t in toks[:-1]] == [
+        ("INT", "1"), ("FLOAT", "2.5"), ("FLOAT", ".5"),
+        ("FLOAT", "1e3"), ("FLOAT", "1.5E-2")]
+
+
+def test_tokenize_unterminated_string():
+    with pytest.raises(SqlParseError, match="unterminated string"):
+        tokenize("SELECT 'oops FROM t")
+
+
+def test_tokenize_unexpected_character():
+    with pytest.raises(SqlParseError,
+                       match=r"unexpected character '#' at position 7"):
+        tokenize("SELECT #")
+
+
+# --- parser: shapes --------------------------------------------------------
+
+def test_parse_minimal_select():
+    q = parse("SELECT a FROM t")
+    assert q.from_table == A.TableRef("t", None, pos=q.from_table.pos)
+    assert len(q.items) == 1
+    assert q.items[0].expr == A.ColumnRef(None, "a", q.items[0].expr.pos)
+    assert q.items[0].alias is None
+    assert q.joins == () and q.where is None
+    assert q.group_by == () and q.order_by == () and q.limit is None
+
+
+def test_parse_aliases_with_and_without_as():
+    q = parse("SELECT a AS x, b y FROM t AS u")
+    assert [i.alias for i in q.items] == ["x", "y"]
+    assert q.from_table.alias == "u"
+    q2 = parse("SELECT a x FROM t u")
+    assert q2.items[0].alias == "x" and q2.from_table.alias == "u"
+
+
+def test_parse_star_and_qualified_star():
+    q = parse("SELECT *, u.* FROM t JOIN u ON t.k = u.k")
+    assert q.items[0].expr == A.Star(None, q.items[0].expr.pos)
+    assert q.items[1].expr == A.Star("u", q.items[1].expr.pos)
+
+
+def test_parse_join_variants():
+    q = parse("SELECT a FROM t JOIN u ON t.k = u.k "
+              "LEFT JOIN v ON u.j = v.j AND u.m = v.m "
+              "LEFT OUTER JOIN w ON v.i = w.i "
+              "INNER JOIN x ON w.h = x.h")
+    assert [j.how for j in q.joins] == ["inner", "left", "left", "inner"]
+    assert len(q.joins[1].on) == 2
+    a, b = q.joins[0].on[0]
+    assert (a.table, a.name) == ("t", "k")
+    assert (b.table, b.name) == ("u", "k")
+
+
+def test_parse_where_precedence():
+    # OR binds loosest: (a=1 AND b=2) OR NOT c=3
+    q = parse("SELECT a FROM t WHERE a = 1 AND b = 2 OR NOT c = 3")
+    w = q.where
+    assert isinstance(w, A.BinOp) and w.op == "OR"
+    assert isinstance(w.left, A.BinOp) and w.left.op == "AND"
+    assert isinstance(w.right, A.UnaryOp) and w.right.op == "NOT"
+    assert isinstance(w.right.operand, A.BinOp)
+    assert w.right.operand.op == "="
+
+
+def test_parse_arithmetic_precedence():
+    # a + b * -c  parses as  a + (b * (-c))
+    q = parse("SELECT a + b * -c FROM t")
+    e = q.items[0].expr
+    assert isinstance(e, A.BinOp) and e.op == "+"
+    assert isinstance(e.right, A.BinOp) and e.right.op == "*"
+    assert isinstance(e.right.right, A.UnaryOp)
+    assert e.right.right.op == "-"
+
+
+def test_parse_comparison_normalization():
+    for spelled, canon in [("=", "="), ("==", "="),
+                           ("!=", "!="), ("<>", "!=")]:
+        q = parse(f"SELECT a FROM t WHERE a {spelled} 1")
+        assert q.where.op == canon, spelled
+
+
+def test_parse_is_null_and_is_not_null():
+    q = parse("SELECT a FROM t WHERE a IS NULL AND b IS NOT NULL")
+    left, right = q.where.left, q.where.right
+    assert isinstance(left, A.IsNull) and not left.negated
+    assert isinstance(right, A.IsNull) and right.negated
+
+
+def test_parse_literals():
+    q = parse("SELECT 1, 2.5, 'it''s', TRUE, FALSE, NULL FROM t")
+    vals = [i.expr.value for i in q.items]
+    assert vals == [1, 2.5, "it's", True, False, None]
+    assert isinstance(vals[0], int) and isinstance(vals[1], float)
+
+
+def test_parse_aggregates_and_avg_synonym():
+    q = parse("SELECT SUM(a), COUNT(b), MIN(c), MAX(d), MEAN(e), AVG(e) "
+              "FROM t GROUP BY k")
+    fns = [i.expr.fn for i in q.items]
+    assert fns == ["sum", "count", "min", "max", "mean", "mean"]
+    assert q.group_by == (A.ColumnRef(None, "k", q.group_by[0].pos),)
+
+
+def test_parse_count_star_rejected():
+    with pytest.raises(SqlParseError,
+                       match=r"COUNT\(\*\) is not supported"):
+        parse("SELECT COUNT(*) FROM t GROUP BY k")
+
+
+def test_parse_order_by_and_limit():
+    q = parse("SELECT a, b FROM t ORDER BY a DESC, b, t.a ASC LIMIT 7")
+    assert [(o.ref.display(), o.ascending) for o in q.order_by] == [
+        ("a", False), ("b", True), ("t.a", True)]
+    assert q.limit == 7
+
+
+def test_parse_parenthesized_expressions():
+    q = parse("SELECT (a + b) * 2 FROM t")
+    e = q.items[0].expr
+    assert e.op == "*" and e.left.op == "+"
+
+
+# --- parser: errors (pinned format) ----------------------------------------
+
+def test_parse_error_format_position_and_got():
+    with pytest.raises(
+            SqlParseError,
+            match=r"syntax error at position 11: expected FROM, got 'c'"):
+        parse("SELECT a b c")   # alias consumed 'b'; 'c' has no home
+
+
+def test_parse_error_end_of_query():
+    with pytest.raises(SqlParseError,
+                       match="expected an expression, got end of query"):
+        parse("SELECT a FROM t WHERE")
+
+
+def test_parse_trailing_garbage():
+    with pytest.raises(SqlParseError, match="expected end of query"):
+        parse("SELECT a FROM t LIMIT 1 extra")
+
+
+def test_parse_empty_query():
+    with pytest.raises(SqlParseError, match="empty query"):
+        parse("   ")
+
+
+def test_parse_limit_requires_integer():
+    with pytest.raises(SqlParseError, match="expected an integer LIMIT"):
+        parse("SELECT a FROM t LIMIT 1.5")
+
+
+def test_parse_join_on_requires_column_equality():
+    with pytest.raises(SqlParseError,
+                       match="'=' between join key columns"):
+        parse("SELECT a FROM t JOIN u ON t.k < u.k")
+
+
+def test_sql_errors_are_plan_errors():
+    # an unparseable query is an ill-typed pipeline: one except clause
+    # catches both hand-built and SQL-authored planning failures.
+    with pytest.raises(PlanError):
+        parse("SELECT")
+    assert issubclass(SqlParseError, SqlError)
+    assert issubclass(SqlError, PlanError)
