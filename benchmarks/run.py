@@ -312,6 +312,7 @@ def bench_decode_step():
 
 
 def main() -> None:
+    import repro.obs as obs
     from benchmarks.columnar_kernels import bench_columnar
     from benchmarks.concurrent_publication import (
         bench_concurrent_publication)
@@ -322,29 +323,61 @@ def main() -> None:
     bench_txn_overhead()
     bench_concurrent_publication()
     bench_validation()
-    # execution-backend gate (DESIGN.md §9): asserts the vectorized
-    # backend's speedup over the row-loop reference, smoke-sized.
-    write_bench_doc(bench_columnar(smoke=True))
-    # distributed-join gate (DESIGN.md §10): asserts the sharded
-    # backend's speedup over vectorized on the forced 8-device mesh
-    # (subprocess: the mesh must exist before jax initializes).
-    write_bench_doc(bench_mesh_subprocess("sharded_join"))
-    # sharded group-by gate (DESIGN.md §12): asserts the pre-exchange
-    # partial-aggregation speedup over the vectorized single-sort path
-    # on the same forced mesh, all five agg fns fingerprint-checked
-    # against reference first.
-    write_bench_doc(bench_mesh_subprocess("sharded_groupby"))
-    # plan-optimizer gate (DESIGN.md §11): optimized plans must match
-    # unoptimized bit-for-bit and beat them on the pushdown-heavy
-    # three-table pipeline, smoke-sized.
-    from benchmarks.plan_optimizer import bench_plan_optimizer
-    write_bench_doc(bench_plan_optimizer(smoke=True))
-    # SQL front-door gate (DESIGN.md §13): text-to-result star query
-    # through Client.sql — optimizer passes must fire on the compiled
-    # tree, a repeated query at the same commit must execute zero
-    # nodes, and optimized must beat unoptimized, smoke-sized.
-    from benchmarks.sql_front_door import bench_sql_front_door
-    write_bench_doc(bench_sql_front_door(smoke=True))
+
+    # tracing-overhead gate (DESIGN.md §14): the flight recorder must
+    # cost <= 2% disabled / <= 10% enabled on the 1e6-row columnar
+    # workload. Runs FIRST, untraced — it measures tracing itself.
+    from benchmarks.tracing_overhead import bench_tracing_overhead
+    write_bench_doc(bench_tracing_overhead(smoke=True))
+
+    # Every remaining gate runs under one flight recorder: each gets a
+    # "benchmark" span whose wall time is folded into its committed
+    # BENCH doc (the per-phase trajectory), and the whole session's
+    # span tree lands in bench_trace.json (Chrome trace-event format —
+    # load in chrome://tracing or Perfetto; CI uploads it as an
+    # artifact). Gates compare candidates that are BOTH traced, so
+    # their speedup ratios are unperturbed.
+    with obs.tracing() as rec:
+        def gated(name, fn):
+            with rec.span("benchmark", name=name) as sp:
+                doc = fn()
+            doc["phase_wall_s"] = round(sp.duration_s, 6)
+            doc["phase_spans"] = len(rec.subtree(sp))
+            write_bench_doc(doc)
+
+        # execution-backend gate (DESIGN.md §9): asserts the vectorized
+        # backend's speedup over the row-loop reference, smoke-sized.
+        gated("columnar_kernels", lambda: bench_columnar(smoke=True))
+        # distributed-join gate (DESIGN.md §10): asserts the sharded
+        # backend's speedup over vectorized on the forced 8-device mesh
+        # (subprocess: the mesh must exist before jax initializes — the
+        # child's spans stay in the child; the span here times the
+        # phase).
+        gated("sharded_join",
+              lambda: bench_mesh_subprocess("sharded_join"))
+        # sharded group-by gate (DESIGN.md §12): asserts the
+        # pre-exchange partial-aggregation speedup over the vectorized
+        # single-sort path on the same forced mesh, all five agg fns
+        # fingerprint-checked against reference first.
+        gated("sharded_groupby",
+              lambda: bench_mesh_subprocess("sharded_groupby"))
+        # plan-optimizer gate (DESIGN.md §11): optimized plans must
+        # match unoptimized bit-for-bit and beat them on the
+        # pushdown-heavy three-table pipeline, smoke-sized.
+        from benchmarks.plan_optimizer import bench_plan_optimizer
+        gated("plan_optimizer", lambda: bench_plan_optimizer(smoke=True))
+        # SQL front-door gate (DESIGN.md §13): text-to-result star
+        # query through Client.sql — optimizer passes must fire on the
+        # compiled tree, a repeated query at the same commit must
+        # execute zero nodes, and optimized must beat unoptimized,
+        # smoke-sized.
+        from benchmarks.sql_front_door import bench_sql_front_door
+        gated("sql_front_door", lambda: bench_sql_front_door(smoke=True))
+
+    trace_path = os.path.join(_REPO_ROOT, "bench_trace.json")
+    obs.write_chrome_trace(trace_path, rec.spans())
+    row("trace", "spans", len(rec.spans()), "spans", trace_path)
+
     bench_pipeline_run()
     bench_train_step()
     bench_decode_step()

@@ -1,0 +1,206 @@
+"""Tracing-overhead gate (DESIGN.md §14): the flight recorder must be
+near-free when disabled and cheap when enabled.
+
+Workload: a 1e6-row columnar pipeline (filter + arithmetic projection
+into a narrowing select) executed end-to-end through ``Client.run``
+with the node cache off, so every rep pays execute + validate +
+snapshot + transactional publish — the realistic denominator for an
+"overhead" claim.
+
+Two gates:
+
+* **enabled <= 10%** — best-of A/B of the identical run traced (fresh
+  ``TraceRecorder`` per rep, manifest stored on commit) vs untraced.
+  Interleaved reps so host noise degrades both candidates alike.
+* **disabled <= 2%** — there is no uninstrumented build to A/B
+  against, so the disabled bound is cost-accounted from first
+  principles: the disabled path's only residue is ``get_recorder()``
+  + an ``.enabled`` attribute test at each instrumentation site (the
+  call-site discipline: no span objects, no attr dicts, no string
+  formatting unless enabled). We measure that primitive's cost in a
+  tight loop and charge a deliberately generous 100 sites per node
+  plus 1000 per run — an order of magnitude above the real count —
+  and the bill must still be <= 2% of the untraced run.
+
+Run: ``PYTHONPATH=src python -m benchmarks.tracing_overhead [--smoke]
+[--json PATH] [--trace PATH]`` — ``--trace`` dumps one traced rep's
+span tree as a Chrome trace-event file (load in ``chrome://tracing``
+or Perfetto; uploaded as a CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+MAX_ENABLED_OVERHEAD = 0.10
+MAX_DISABLED_OVERHEAD = 0.02
+
+N_ROWS = 1_000_000
+
+# deliberately generous accounting for the disabled-path bill (the
+# real engine touches get_recorder()/.enabled a handful of times per
+# node; we charge two orders of magnitude more headroom).
+SITES_PER_NODE = 100
+SITES_PER_RUN = 1000
+
+
+def row(name, metric, value, unit, notes=""):
+    print(f"{name},{metric},{value:.6g},{unit},{notes}")
+
+
+def _best_of_interleaved(reps, fns):
+    best = {name: float("inf") for name in fns}
+    for _ in range(reps):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            fn()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return best
+
+
+def _workload():
+    from repro.core import schema as S
+    from repro.core.dag import Pipeline
+    from repro.core.planner import plan
+    from repro.core.runner import Client
+    from repro.data.tables import Table, col
+
+    Raw = S.Schema.of("Raw", k=int, v=float, w=float)
+    Scored = S.Schema.of("Scored", k=int, score=float)
+    Top = S.Schema.of("Top", k=int, score=float)
+
+    rng = np.random.default_rng(0)
+    client = Client()
+    client.write_source_table("main", "raw_events", Table({
+        "k": rng.integers(0, 1 << 16, N_ROWS),
+        "v": rng.normal(size=N_ROWS),
+        "w": rng.normal(size=N_ROWS)}))
+
+    p = Pipeline("tracing_overhead")
+    p.source("raw_events", Raw)
+
+    @p.node()
+    def scored(df: Raw = "raw_events") -> Scored:
+        return df.select([col("k"), (col("v") * col("w")).alias("score")])
+
+    @p.node()
+    def top(df: Scored = "scored") -> Top:
+        return df.filter(col("score") > 0.0).select(
+            [col("k"), col("score")])
+
+    return client, plan(p)
+
+
+def _disabled_primitive_cost() -> float:
+    """Per-site cost of the disabled path's entire residue: fetch the
+    ambient recorder and test .enabled."""
+    from repro.obs import get_recorder
+
+    assert not get_recorder().enabled, (
+        "gate must run with the null recorder installed")
+    n = 200_000
+    hits = 0
+    t0 = time.perf_counter()
+    for _ in range(n):
+        if get_recorder().enabled:      # the real call-site shape
+            hits += 1
+    per_site = (time.perf_counter() - t0) / n
+    assert hits == 0
+    return per_site
+
+
+def bench_tracing_overhead(smoke: bool = False,
+                           json_path: str | None = None,
+                           trace_path: str | None = None,
+                           reps: int | None = None) -> dict:
+    import repro.obs as obs
+
+    reps = reps if reps is not None else (5 if smoke else 8)
+    client, pl = _workload()
+    n_nodes = len(pl.steps)
+
+    def untraced():
+        client.run(pl, "main", cache=False)
+
+    def traced():
+        with obs.tracing():
+            client.run(pl, "main", cache=False)
+
+    untraced()                          # warm (jit-free, but allocators)
+    timings = _best_of_interleaved(
+        reps, {"untraced": untraced, "traced": traced})
+    for name, t in timings.items():
+        row("tracing_overhead", name, t * 1e3, "ms/run",
+            f"{N_ROWS} rows, {n_nodes} nodes, cache off")
+
+    enabled_overhead = timings["traced"] / timings["untraced"] - 1.0
+    row("tracing_overhead", "enabled_overhead", enabled_overhead * 100,
+        "%", f"gate <= {MAX_ENABLED_OVERHEAD * 100:.0f}%")
+
+    per_site = _disabled_primitive_cost()
+    sites = SITES_PER_RUN + SITES_PER_NODE * n_nodes
+    disabled_bill = per_site * sites
+    disabled_overhead = disabled_bill / timings["untraced"]
+    row("tracing_overhead", "disabled_site_cost", per_site * 1e9,
+        "ns/site", "get_recorder() + .enabled test")
+    row("tracing_overhead", "disabled_overhead",
+        disabled_overhead * 100, "%",
+        f"{sites} sites charged (generous); "
+        f"gate <= {MAX_DISABLED_OVERHEAD * 100:.0f}%")
+
+    if trace_path:
+        with obs.tracing() as rec:
+            client.run(pl, "main", cache=False)
+        obs.write_chrome_trace(trace_path, rec.spans())
+        row("tracing_overhead", "trace_spans", len(rec.spans()),
+            "spans", trace_path)
+
+    doc = {
+        "bench": "tracing_overhead",
+        "smoke": smoke,
+        "n_rows": N_ROWS,
+        "n_nodes": n_nodes,
+        "timings_s": timings,
+        "enabled_overhead": enabled_overhead,
+        "disabled_site_cost_ns": per_site * 1e9,
+        "disabled_sites_charged": sites,
+        "disabled_overhead": disabled_overhead,
+        "gate_max_enabled": MAX_ENABLED_OVERHEAD,
+        "gate_max_disabled": MAX_DISABLED_OVERHEAD,
+    }
+    print("BENCH " + json.dumps(doc, sort_keys=True))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+
+    assert enabled_overhead <= MAX_ENABLED_OVERHEAD, (
+        f"enabled tracing overhead {enabled_overhead * 100:.1f}% "
+        f"exceeds the {MAX_ENABLED_OVERHEAD * 100:.0f}% gate "
+        f"({timings['traced'] * 1e3:.1f}ms vs "
+        f"{timings['untraced'] * 1e3:.1f}ms)")
+    assert disabled_overhead <= MAX_DISABLED_OVERHEAD, (
+        f"disabled-path bill {disabled_overhead * 100:.2f}% exceeds "
+        f"the {MAX_DISABLED_OVERHEAD * 100:.0f}% gate "
+        f"({per_site * 1e9:.0f}ns x {sites} sites)")
+    return doc
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: fewer reps (same 1e6-row workload)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the BENCH JSON document to PATH")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="dump one traced rep as a Chrome trace file")
+    args = ap.parse_args(argv)
+    print("name,metric,value,unit,notes")
+    bench_tracing_overhead(smoke=args.smoke, json_path=args.json,
+                           trace_path=args.trace)
+
+
+if __name__ == "__main__":
+    main()

@@ -140,6 +140,20 @@ class Catalog:
         with self._lock:
             return sorted(self._branches)
 
+    def run_manifest(self, ref: str) -> dict | None:
+        """The audit manifest anchored to a published commit, or None.
+
+        DESIGN.md §14: a traced :class:`~repro.core.transactions.
+        TransactionalRun` stores its finished span tree in this
+        catalog's object store under ``runmanifest/<commit_id>`` at
+        publication. ``ref`` may be any resolvable ref (branch, tag, or
+        commit id); ``None`` means the commit exists but the run that
+        produced it was not traced — a normal state, since tracing is
+        opt-in and manifests are observational, never load-bearing.
+        """
+        from repro.obs import load_manifest
+        return load_manifest(self.store, self.head(ref).id)
+
     def commit(self, cid: str) -> Commit:
         with self._lock:
             try:

@@ -29,9 +29,11 @@ the ABORTED branch, deterministically.
 """
 from __future__ import annotations
 
+import contextvars
 import dataclasses
 import hashlib
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Mapping
 
@@ -41,6 +43,7 @@ from repro.core.errors import ExecutionError
 from repro.core.planner import Plan, PlanStep
 from repro.core.store import ObjectStore
 from repro.data.tables import Table
+from repro.obs import get_recorder
 
 __all__ = ["cache_key", "NodeCache", "ExecutionOutcome", "PlanExecutor"]
 
@@ -73,6 +76,10 @@ def cache_key(step: PlanStep,
     list) keys exactly as before. The rewritten logical tree itself is
     already the static half (``PlanStep.cache_material`` describes the
     tree the step will actually execute, not the authored node body).
+
+    Non-key material, by invariant (DESIGN.md §14, test-gated): nothing
+    from ``repro.obs`` — tracing on or off, and any trace contents,
+    share cache entries bit for bit.
     """
     material = step.cache_material()
     if material is None:
@@ -195,9 +202,26 @@ class PlanExecutor:
                                                      snaps[table])
                 return tables[table]
 
+        rec = get_recorder()
+        # Per-node runtime profile, collected unconditionally (a few
+        # dict writes per NODE, not per row) so `plan.describe(
+        # analyze=True)` works with tracing off. Name -> record.
+        profile: dict[str, dict] = {}
+
         def run_step(step: PlanStep):
             """Returns (snapshot|None, table|None, was_cached, error)."""
+            if rec.enabled:
+                with rec.span("node", node=step.node.name,
+                              wave=step.wave) as sp:
+                    return step_body(step, sp)
+            return step_body(step, None)
+
+        def step_body(step: PlanStep, sp):
             node = step.node
+            t_start = time.perf_counter()
+            verdict = "uncacheable"
+            key = None
+            out = None
             try:
                 in_snaps = {}
                 for param, t in node.inputs.items():
@@ -209,6 +233,7 @@ class PlanExecutor:
                 key = (cache_key(step, in_snaps)
                        if self.cache is not None else None)
                 if key is not None:
+                    verdict = "miss"
                     hit = self.cache.lookup(key)
                     if hit is not None:
                         try:
@@ -226,6 +251,7 @@ class PlanExecutor:
                             validate_table(out, node.output_schema,
                                            elide=step.elided_null_checks,
                                            name=node.name)
+                            verdict = "hit"
                             return hit, out, True, self._inject(
                                 step, fail_after)
                 ins = {t: materialize(t)
@@ -240,36 +266,83 @@ class PlanExecutor:
                     self.cache.put(key, snap)
                 return snap, out, False, self._inject(step, fail_after)
             except Exception as e:
+                verdict = "error"
                 return None, None, False, e
+            finally:
+                wall_s = time.perf_counter() - t_start
+                rows_out = out.num_rows if out is not None else None
+                record = {"node": node.name, "wave": step.wave,
+                          "cache": verdict, "wall_s": wall_s,
+                          "rows_out": rows_out}
+                with mat_lock:
+                    profile[node.name] = record
+                if sp is not None:
+                    sp.set(cache=verdict, rows_out=rows_out)
+                    if key is not None:
+                        sp.set(cache_key=key)
+                    m = rec.metrics
+                    if verdict == "hit":
+                        m.counter("engine.cache.hits").inc()
+                    elif verdict == "miss":
+                        m.counter("engine.cache.misses").inc()
+                    m.histogram("engine.node.wall_s").observe(wall_s)
+
+        def submit(pool, step):
+            # copy_context(): worker threads inherit the submitting
+            # wave span as ambient parent (a fresh Context per task —
+            # one Context cannot be entered by two threads at once).
+            if rec.enabled:
+                return pool.submit(contextvars.copy_context().run,
+                                   run_step, step)
+            return pool.submit(run_step, step)
 
         with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
-            for wave in self.plan.waves:
-                futures = [pool.submit(run_step, step) for step in wave]
-                errors: list[tuple[str, BaseException]] = []
-                # drain the WHOLE wave before acting on any failure:
-                # siblings in flight finish, and their validated outputs
-                # are preserved — the flush set is a deterministic
-                # function of the plan, not of thread timing.
-                for step, fut in zip(wave, futures):
-                    snap, table, was_cached, err = fut.result()
-                    name = step.node.name
-                    if snap is not None:
-                        if step.published:
-                            written[name] = snap
-                        snaps[name] = snap
-                        tables[name] = table
-                        (cached if was_cached else executed).append(name)
-                    if err is not None:
-                        errors.append((name, err))
+            for wave_idx, wave in enumerate(self.plan.waves):
+                wave_span = (rec.span("wave", index=wave_idx,
+                                      nodes=len(wave))
+                             if rec.enabled else None)
+                if wave_span is not None:
+                    wave_span.__enter__()
+                try:
+                    futures = [submit(pool, step) for step in wave]
+                    errors: list[tuple[str, BaseException]] = []
+                    # drain the WHOLE wave before acting on any
+                    # failure: siblings in flight finish, and their
+                    # validated outputs are preserved — the flush set
+                    # is a deterministic function of the plan, not of
+                    # thread timing.
+                    for step, fut in zip(wave, futures):
+                        snap, table, was_cached, err = fut.result()
+                        name = step.node.name
+                        if snap is not None:
+                            if step.published:
+                                written[name] = snap
+                            snaps[name] = snap
+                            tables[name] = table
+                            (cached if was_cached
+                             else executed).append(name)
+                        if err is not None:
+                            errors.append((name, err))
+                finally:
+                    if wave_span is not None:
+                        wave_span.__exit__(None, None, None)
                 if errors:
                     name, cause = errors[0]   # first in plan order
+                    self._attach_runtime(profile)
                     raise ExecutionError(
                         f"node {name!r} failed: {cause}", cause=cause,
                         partial=written, executed=tuple(executed),
                         cached=tuple(cached))
+        self._attach_runtime(profile)
         return ExecutionOutcome(snapshots=dict(written),
                                 executed=tuple(executed),
                                 cached=tuple(cached))
+
+    def _attach_runtime(self, profile: dict[str, dict]) -> None:
+        # Plan is a frozen dataclass; the profile rides as a non-field
+        # attribute (observational only — never part of plan identity
+        # or cache keys). `describe(analyze=True)` renders it.
+        object.__setattr__(self.plan, "_runtime", profile)
 
     @staticmethod
     def _inject(step: PlanStep, fail_after: str | None):

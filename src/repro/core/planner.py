@@ -140,7 +140,24 @@ class Plan:
                     seen.append(t)
         return tuple(seen)
 
-    def describe(self) -> str:
+    def describe(self, *, analyze: bool = False) -> str:
+        """EXPLAIN (and, with ``analyze=True``, EXPLAIN ANALYZE).
+
+        ``analyze`` renders the actual per-step runtime the engine
+        recorded on the last execution of THIS plan object — cache
+        verdict, actual output rows (next to the TableStats
+        *estimates*), and wall time — as a format-pinned ``[actual:
+        cache=<verdict> rows=<n> time=<t>ms]`` suffix per step.
+        Raises :class:`PlanError` if the plan has not been executed.
+        """
+        runtime: "Mapping[str, dict] | None" = None
+        if analyze:
+            runtime = getattr(self, "_runtime", None)
+            if runtime is None:
+                raise PlanError(
+                    "describe(analyze=True) requires the plan to have "
+                    "been executed (run it through PlanExecutor or "
+                    "Client.run first)")
         lines = [f"plan {self.pipeline_name} (code={self.code_hash})"]
         # EXPLAIN header: nodes compiled from SQL carry their original
         # query text (display metadata only — never cache material).
@@ -160,11 +177,22 @@ class Plan:
                     for t, v in entries[:_DESCRIBE_STATS_MAX]]
                 if len(entries) > _DESCRIBE_STATS_MAX:
                     shown.append(
-                        f"+{len(entries) - _DESCRIBE_STATS_MAX} more")
+                        f"+{len(entries) - _DESCRIBE_STATS_MAX} more "
+                        f"(of {len(entries)})")
                 st = " [stats: " + "; ".join(shown) + "]"
+            an = ""
+            if runtime is not None:
+                rt = runtime.get(s.node.name)
+                if rt is None:
+                    an = " [actual: not executed]"
+                else:
+                    rows = rt["rows_out"]
+                    an = (f" [actual: cache={rt['cache']} "
+                          f"rows={'?' if rows is None else rows} "
+                          f"time={rt['wall_s'] * 1000:.2f}ms]")
             aux = "" if s.published else "(aux) "
             lines.append(
-                f"  [wave {s.wave}] {aux}{s.report.describe()}{el}{st}")
+                f"  [wave {s.wave}] {aux}{s.report.describe()}{el}{st}{an}")
         if self.optimizer_passes:
             rewrites = [(s.node.name, p) for s in self.steps
                         for p in s.provenance]

@@ -18,6 +18,7 @@ queryable for triage.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Callable, Mapping, Sequence
 
@@ -30,6 +31,8 @@ from repro.core.transactions import RunRegistry, RunState, TransactionalRun
 from repro.data.tables import Table
 
 __all__ = ["RunResult", "QueryResult", "Client"]
+
+_NOOP_CTX = contextlib.nullcontext()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,10 +65,11 @@ class QueryResult:
     executed: tuple[str, ...] = ()
     cached: tuple[str, ...] = ()
 
-    def describe(self) -> str:
+    def describe(self, *, analyze: bool = False) -> str:
         """EXPLAIN: the optimized plan with query text and rewrite
-        provenance."""
-        return self.plan.describe()
+        provenance. ``analyze=True`` adds per-step actuals (the query
+        already executed, so runtime is always present here)."""
+        return self.plan.describe(analyze=analyze)
 
     def fingerprint(self) -> str:
         return self.table.fingerprint()
@@ -159,40 +163,52 @@ class Client:
         """
         from repro.core.dag import Pipeline
         from repro.core.planner import plan as plan_fn
+        from repro.obs import get_recorder
         from repro.optimizer import optimize
         from repro.sql.compiler import compile_query
 
-        commit = self.catalog.head(ref)
-        context = f"ref {ref!r} (commit {commit.id})"
-        schemas = {t: self._discover_schema(t, snap)
-                   for t, snap in commit.tables.items()}
-        name = "query"
-        while name in commit.tables:
-            name += "_"
-        compiled = compile_query(query, name=name, schemas=schemas,
-                                 context=context)
+        rec = get_recorder()
+        sql_ctx = (rec.span("sql", ref=ref, query=query)
+                   if rec.enabled else _NOOP_CTX)
+        with sql_ctx as sql_span:
+            commit = self.catalog.head(ref)
+            if sql_span is not None:
+                sql_span.set(commit=commit.id)
+            context = f"ref {ref!r} (commit {commit.id})"
+            schemas = {t: self._discover_schema(t, snap)
+                       for t, snap in commit.tables.items()}
+            name = "query"
+            while name in commit.tables:
+                name += "_"
+            compiled = compile_query(query, name=name, schemas=schemas,
+                                     context=context)
 
-        pipeline = Pipeline("sql")
-        for t in compiled.tables:
-            pipeline.source(t, schemas[t])
-        pipeline.add(compiled.node)
-        stats = {t: self._snapshot_stats(commit.tables[t])
-                 for t in compiled.tables}
-        pl = plan_fn(pipeline, table_stats=stats)
-        if optimizer_passes is None:
-            pl = optimize(pl)
-        elif optimizer_passes:
-            pl = optimize(pl, optimizer_passes)
+            pipeline = Pipeline("sql")
+            for t in compiled.tables:
+                pipeline.source(t, schemas[t])
+            pipeline.add(compiled.node)
+            stats = {t: self._snapshot_stats(commit.tables[t])
+                     for t in compiled.tables}
+            pl = plan_fn(pipeline, table_stats=stats)
+            if optimizer_passes is None:
+                pl = optimize(pl)
+            elif optimizer_passes:
+                pl = optimize(pl, optimizer_passes)
 
-        engine = PlanExecutor(pl, self.store,
-                              cache=self.node_cache if cache else None)
-        outcome = engine.execute(commit.tables.__getitem__)
-        snap = outcome.snapshots[name]
-        return QueryResult(
-            table=Table.from_blobs(self.store, snap),
-            plan=pl, schema=compiled.output_schema, snapshot=snap,
-            commit_id=commit.id, query=query,
-            executed=outcome.executed, cached=outcome.cached)
+            engine = PlanExecutor(pl, self.store,
+                                  cache=self.node_cache if cache else None)
+            outcome = engine.execute(commit.tables.__getitem__)
+            snap = outcome.snapshots[name]
+            result = QueryResult(
+                table=Table.from_blobs(self.store, snap),
+                plan=pl, schema=compiled.output_schema, snapshot=snap,
+                commit_id=commit.id, query=query,
+                executed=outcome.executed, cached=outcome.cached)
+            if sql_span is not None:
+                sql_span.set(rows_out=result.table.num_rows,
+                             executed=len(outcome.executed),
+                             cached=len(outcome.cached))
+            return result
 
     def _table_verifier(self, table: str,
                         checks: Sequence[Verifier]

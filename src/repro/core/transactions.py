@@ -33,6 +33,7 @@ needed to replay the run (Listing 6).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 import time
@@ -43,8 +44,15 @@ from repro.core.catalog import Catalog, Commit, Visibility
 from repro.core.errors import (PublicationConflict, RefConflict,
                                TransactionAborted, TransactionError)
 from repro.core.store import ObjectStore, content_hash
+from repro.obs import build_manifest, get_recorder, store_manifest
 
 __all__ = ["RunState", "RunRegistry", "TransactionalRun", "run_transaction"]
+
+_NOOP_CTX = contextlib.nullcontext()
+
+
+def _verifier_name(fn) -> str:
+    return getattr(fn, "__name__", None) or type(fn).__name__
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +146,12 @@ class TransactionalRun:
         self._needs_reexecution = False
         self._status = "created"
         self._started_at = 0.0
+        # Flight recorder (DESIGN.md §14): the recorder active at
+        # begin() owns this run's span tree; the "run" span stays open
+        # across the begin()/commit() pair and its finished subtree is
+        # anchored to the published commit as an audit manifest.
+        self._rec = None
+        self._run_span = None
 
     # ------------------------------------------------------------------
     def begin(self) -> "TransactionalRun":
@@ -153,6 +167,13 @@ class TransactionalRun:
             self.branch, self.target, visibility=Visibility.TXN,
             owner_run=self.run_id)
         self._status = "running"
+        rec = get_recorder()
+        if rec.enabled:
+            self._rec = rec
+            self._run_span = rec.start_span(
+                "run", run_id=self.run_id, target=self.target,
+                txn_branch=self.branch, start_commit=self._start_commit,
+                code_hash=self.code_hash)
         self._record()
         return self
 
@@ -192,8 +213,15 @@ class TransactionalRun:
         observed = self.catalog.head(self.branch).id
         self._verifiers.append(fn)
         self._verifier_heads.append(None)
+        rec = get_recorder()
         try:
-            fn(self.read_table)
+            if rec.enabled:
+                with rec.span("verifier", fn=_verifier_name(fn),
+                              head=observed, phase="initial") as sp:
+                    fn(self.read_table)
+                    sp.set(outcome="passed")
+            else:
+                fn(self.read_table)
         except Exception as e:
             self.abort(e)
             raise TransactionAborted(
@@ -226,83 +254,133 @@ class TransactionalRun:
         """Re-run the registered executor (if a rebase made inputs
         stale) and then EVERY registered verifier against the current
         branch state; returns the branch head they all validated."""
-        if self._executor is not None and self._needs_reexecution:
-            try:
-                self._executor(self.read_table, self.write_tables)
-            except TransactionAborted:
-                raise
-            except Exception as e:
-                self.abort(e)
-                raise TransactionAborted(
-                    f"re-execution after rebase failed: {e}",
-                    branch=self.branch, cause=e) from e
-        self._needs_reexecution = False
-        observed = self.catalog.head(self.branch).id
-        for fn in self._verifiers:
-            try:
-                fn(self.read_table)
-            except Exception as e:
-                self.abort(e)
-                raise TransactionAborted(
-                    f"verifier failed on revalidation against "
-                    f"{observed[:8]}: {e}",
-                    branch=self.branch, cause=e) from e
-        self._verifier_heads = [observed] * len(self._verifiers)
-        return observed
+        rec = get_recorder()
+        reval_ctx = (rec.span("revalidate",
+                              reexecute=bool(self._executor is not None
+                                             and self._needs_reexecution),
+                              verifiers=len(self._verifiers))
+                     if rec.enabled else _NOOP_CTX)
+        with reval_ctx:
+            if self._executor is not None and self._needs_reexecution:
+                try:
+                    if rec.enabled:
+                        with rec.span("reexecute"):
+                            self._executor(self.read_table,
+                                           self.write_tables)
+                    else:
+                        self._executor(self.read_table, self.write_tables)
+                except TransactionAborted:
+                    raise
+                except Exception as e:
+                    self.abort(e)
+                    raise TransactionAborted(
+                        f"re-execution after rebase failed: {e}",
+                        branch=self.branch, cause=e) from e
+            self._needs_reexecution = False
+            observed = self.catalog.head(self.branch).id
+            for fn in self._verifiers:
+                try:
+                    if rec.enabled:
+                        with rec.span("verifier", fn=_verifier_name(fn),
+                                      head=observed,
+                                      phase="revalidate") as sp:
+                            fn(self.read_table)
+                            sp.set(outcome="passed")
+                    else:
+                        fn(self.read_table)
+                except Exception as e:
+                    self.abort(e)
+                    raise TransactionAborted(
+                        f"verifier failed on revalidation against "
+                        f"{observed[:8]}: {e}",
+                        branch=self.branch, cause=e) from e
+            self._verifier_heads = [observed] * len(self._verifiers)
+            return observed
 
     # step 4: atomic publication — CAS + rebase-and-revalidate
     def commit(self) -> Commit:
         self._require_running()
+        rec = self._rec if self._rec is not None else get_recorder()
         attempt = 0
         while True:
             attempt += 1
             self.publish_attempts = attempt
-            # Never publish state the full verifier set did not validate:
-            # if any verifier's observation is stale (a write or a rebase
-            # happened after it ran), or a rebase left the run's outputs
-            # possibly computed from moved inputs, re-derive and re-run
-            # them all first.
-            branch_head = self.catalog.head(self.branch).id
-            if self._needs_reexecution or (
-                    self._verifiers and any(h != branch_head
-                                            for h in self._verifier_heads)):
-                branch_head = self._revalidate()
-            try:
-                merged = self.catalog.merge(
-                    self.branch, into=self.target, run_id=self.run_id,
-                    message=f"txn commit {self.run_id}",
-                    expected_head=self._target_head, _system=True)
-                break
-            except RefConflict as e:
-                if attempt >= self.max_publish_attempts:
-                    self.abort(e)
-                    raise PublicationConflict(
-                        f"run {self.run_id}: target {self.target!r} kept "
-                        f"moving; gave up after {attempt} publication "
-                        f"attempts", branch=self.branch, cause=e) from e
-                if self.publish_backoff_s:
-                    time.sleep(self.publish_backoff_s * attempt)
-                # Rebase onto the head we just observed — an immutable
-                # commit id, so the subsequent CAS publishes exactly the
-                # (re-verified) rebased state or conflicts again.
+            att_ctx = (rec.span("publication_attempt", attempt=attempt,
+                                expected_head=self._target_head)
+                       if rec.enabled else _NOOP_CTX)
+            with att_ctx as att_span:
+                # Never publish state the full verifier set did not
+                # validate: if any verifier's observation is stale (a
+                # write or a rebase happened after it ran), or a rebase
+                # left the run's outputs possibly computed from moved
+                # inputs, re-derive and re-run them all first.
+                branch_head = self.catalog.head(self.branch).id
+                if self._needs_reexecution or (
+                        self._verifiers and any(
+                            h != branch_head
+                            for h in self._verifier_heads)):
+                    branch_head = self._revalidate()
                 try:
-                    new_head = self.catalog.head(self.target).id
-                    self.catalog.rebase(self.branch, new_head,
-                                        run_id=self.run_id, _system=True)
-                    self._target_head = new_head
-                    # the rebase may have moved this run's INPUT tables:
-                    # the executor must re-derive before revalidation.
-                    self._needs_reexecution = True
-                except Exception as e2:
-                    self.abort(e2)
+                    merged = self.catalog.merge(
+                        self.branch, into=self.target, run_id=self.run_id,
+                        message=f"txn commit {self.run_id}",
+                        expected_head=self._target_head, _system=True)
+                    if att_span is not None:
+                        att_span.set(outcome="published",
+                                     commit=merged.id)
+                    break
+                except RefConflict as e:
+                    if rec.enabled:
+                        actual = self.catalog.head(self.target).id
+                        rec.event("ref_conflict", attempt=attempt,
+                                  expected_head=self._target_head,
+                                  actual_head=actual, target=self.target)
+                        rec.metrics.counter(
+                            "txn.publication.conflicts").inc()
+                        if att_span is not None:
+                            att_span.set(outcome="conflict")
+                    if attempt >= self.max_publish_attempts:
+                        self.abort(e)
+                        raise PublicationConflict(
+                            f"run {self.run_id}: target {self.target!r} "
+                            f"kept moving; gave up after {attempt} "
+                            f"publication attempts",
+                            branch=self.branch, cause=e) from e
+                    if self.publish_backoff_s:
+                        time.sleep(self.publish_backoff_s * attempt)
+                    # Rebase onto the head we just observed — an
+                    # immutable commit id, so the subsequent CAS
+                    # publishes exactly the (re-verified) rebased state
+                    # or conflicts again.
+                    try:
+                        new_head = self.catalog.head(self.target).id
+                        if rec.enabled:
+                            with rec.span("rebase",
+                                          from_head=self._target_head,
+                                          onto=new_head):
+                                self.catalog.rebase(
+                                    self.branch, new_head,
+                                    run_id=self.run_id, _system=True)
+                            rec.metrics.counter("txn.rebases").inc()
+                        else:
+                            self.catalog.rebase(
+                                self.branch, new_head,
+                                run_id=self.run_id, _system=True)
+                        self._target_head = new_head
+                        # the rebase may have moved this run's INPUT
+                        # tables: the executor must re-derive before
+                        # revalidation.
+                        self._needs_reexecution = True
+                    except Exception as e2:
+                        self.abort(e2)
+                        raise TransactionAborted(
+                            f"publication failed: {e2}",
+                            branch=self.branch, cause=e2) from e2
+                except Exception as e:
+                    self.abort(e)
                     raise TransactionAborted(
-                        f"publication failed: {e2}", branch=self.branch,
-                        cause=e2) from e2
-            except Exception as e:
-                self.abort(e)
-                raise TransactionAborted(
-                    f"publication failed: {e}", branch=self.branch,
-                    cause=e) from e
+                        f"publication failed: {e}", branch=self.branch,
+                        cause=e) from e
         self._status = "committed"
         self.final_commit = merged
         if not self.keep_branch_on_success:
@@ -311,6 +389,7 @@ class TransactionalRun:
             # the branch's state is now published: release it to users
             self.catalog.mark(self.branch, Visibility.USER, _system=True)
         self._record(final_commit=merged.id)
+        self._finish_trace(merged)
         return merged
 
     def abort(self, error: BaseException | str | None = None) -> None:
@@ -322,6 +401,41 @@ class TransactionalRun:
         # inspection" — but Visibility.ABORTED means it can never merge.
         self.catalog.mark(self.branch, Visibility.ABORTED, _system=True)
         self._record(error=str(error) if error else None)
+        # Close the run span (aborted runs leave NO manifest: the
+        # anchoring rule keys manifests by published commit id, and an
+        # aborted run published nothing — the trace stays inspectable
+        # on the recorder itself).
+        if self._run_span is not None:
+            self._run_span.set(status="aborted",
+                               publish_attempts=self.publish_attempts,
+                               error=str(error) if error else None)
+            self._rec.end_span(self._run_span)
+            self._run_span = None
+
+    def _finish_trace(self, merged: Commit) -> None:
+        """Seal the run span and anchor its subtree to ``merged``.
+
+        The manifest is written to the catalog's own object store and
+        named ``runmanifest/<commit_id>`` (see ``repro.obs.manifest``),
+        so ``Catalog.run_manifest(commit_id)`` can audit any published
+        state post-hoc. Purely observational: written AFTER the merge
+        ref moved, never read by commit resolution or cache keys.
+        """
+        if self._run_span is None:
+            return
+        rec, span = self._rec, self._run_span
+        self._run_span = None
+        span.set(status="committed", commit=merged.id,
+                 publish_attempts=self.publish_attempts)
+        rec.end_span(span)
+        subtree = getattr(rec, "subtree", None)
+        if subtree is None:     # custom recorder without introspection
+            return
+        doc = build_manifest(
+            span, subtree(span), commit_id=merged.id, run_id=self.run_id,
+            metrics=rec.metrics.snapshot(),
+            orphan_events=rec.orphan_events())
+        store_manifest(self.catalog.store, merged.id, doc)
 
     # ------------------------------------------------------------------
     def __enter__(self) -> "TransactionalRun":

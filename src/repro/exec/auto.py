@@ -50,9 +50,10 @@ import numpy as np
 
 from repro.exec.base import AggSpec, Backend, Columns, normalize_agg_specs
 from repro.exec.stats import TableStats, collect_stats
+from repro.obs import get_recorder
 
 __all__ = ["AutoBackend", "choose_join", "choose_group_by",
-           "choose_group_by_agg"]
+           "choose_group_by_agg", "explain_join", "explain_group_by_agg"]
 
 # v2: group-by policy learned the sharded partial-aggregation row (and
 # group_by_sum now routes through it) — the bump moves every auto cache
@@ -80,20 +81,35 @@ def _dense_span(left: TableStats, right: TableStats) -> bool:
     return dense_span_affordable(span, left.n_rows + right.n_rows)
 
 
+def explain_join(left: TableStats, right: TableStats, *,
+                 n_devices: int = 1,
+                 sharded_available: bool = False) -> tuple[str, str]:
+    """The join decision table, returning ``(backend, why)`` — the
+    reason string names the decision-table row that fired, and rides
+    into run manifests as the ``auto_decision`` event's ``reason``."""
+    total = left.n_rows + right.n_rows
+    if total <= TINY_ROWS:
+        return "reference", (
+            f"total rows {total} <= tiny threshold {TINY_ROWS}")
+    if (left.single_int_key and right.single_int_key
+            and _dense_span(left, right)):
+        return "vectorized", (
+            "single int key with affordable dense span "
+            "(direct-address bincount probe)")
+    if total >= SHARD_ROWS and n_devices > 1 and sharded_available:
+        return "sharded", (
+            f"total rows {total} >= shard threshold {SHARD_ROWS} "
+            f"on {n_devices} devices")
+    return "vectorized", "default row (no specialized row matched)"
+
+
 def choose_join(left: TableStats, right: TableStats, *,
                 n_devices: int = 1,
                 sharded_available: bool = False) -> str:
     """The stats -> backend decision table for joins (pure function —
     the unit under test)."""
-    total = left.n_rows + right.n_rows
-    if total <= TINY_ROWS:
-        return "reference"
-    if (left.single_int_key and right.single_int_key
-            and _dense_span(left, right)):
-        return "vectorized"
-    if total >= SHARD_ROWS and n_devices > 1 and sharded_available:
-        return "sharded"
-    return "vectorized"
+    return explain_join(left, right, n_devices=n_devices,
+                        sharded_available=sharded_available)[0]
 
 
 def choose_group_by(stats: TableStats, value_dtype: np.dtype, *,
@@ -102,6 +118,34 @@ def choose_group_by(stats: TableStats, value_dtype: np.dtype, *,
     the general entry point is :func:`choose_group_by_agg`)."""
     return choose_group_by_agg(stats, (value_dtype,),
                                jax_available=jax_available)
+
+
+def explain_group_by_agg(stats: TableStats,
+                         value_dtypes: Sequence[np.dtype], *,
+                         n_devices: int = 1,
+                         sharded_available: bool = False,
+                         jax_available: bool = False) -> tuple[str, str]:
+    """The group_by_agg decision table, returning ``(backend, why)``
+    (see :func:`explain_join` for the reason-string contract)."""
+    if stats.n_rows <= TINY_ROWS:
+        return "reference", (
+            f"rows {stats.n_rows} <= tiny threshold {TINY_ROWS}")
+    lowers = all(_lowers(dt) for dt in value_dtypes)
+    if (stats.n_rows >= SHARD_ROWS and n_devices > 1
+            and sharded_available and lowers
+            and stats.single_int_key and _dense_group_span(stats)):
+        return "sharded", (
+            f"rows {stats.n_rows} >= shard threshold {SHARD_ROWS} on "
+            f"{n_devices} devices with dense single int key and "
+            f"device-lowerable values (pre-exchange partial agg)")
+    if stats.n_rows >= DEVICE_ROWS and jax_available and lowers:
+        return "jax", (
+            f"rows {stats.n_rows} >= device threshold {DEVICE_ROWS} "
+            f"with device-lowerable values (segment-reduce kernels)")
+    if not lowers:
+        return "vectorized", (
+            "value dtype(s) not device-lowerable")
+    return "vectorized", "default row (no specialized row matched)"
 
 
 def choose_group_by_agg(stats: TableStats,
@@ -115,16 +159,10 @@ def choose_group_by_agg(stats: TableStats,
     key and device-lowerable values -> sharded partial aggregation;
     large device-lowerable tables -> jax segment kernels; everything
     else -> vectorized."""
-    if stats.n_rows <= TINY_ROWS:
-        return "reference"
-    lowers = all(_lowers(dt) for dt in value_dtypes)
-    if (stats.n_rows >= SHARD_ROWS and n_devices > 1
-            and sharded_available and lowers
-            and stats.single_int_key and _dense_group_span(stats)):
-        return "sharded"
-    if stats.n_rows >= DEVICE_ROWS and jax_available and lowers:
-        return "jax"
-    return "vectorized"
+    return explain_group_by_agg(
+        stats, value_dtypes, n_devices=n_devices,
+        sharded_available=sharded_available,
+        jax_available=jax_available)[0]
 
 
 def _dense_group_span(stats: TableStats) -> bool:
@@ -167,6 +205,10 @@ class AutoBackend(Backend):
     def _delegate(self, name: str) -> Backend:
         from repro import exec as exec_backends
         if name != "vectorized" and not self._available(name):
+            rec = get_recorder()
+            if rec.enabled:
+                rec.event("degradation", kind="backend_unavailable",
+                          wanted=name, used="vectorized")
             name = "vectorized"
         return exec_backends.get_backend(name)
 
@@ -203,7 +245,8 @@ class AutoBackend(Backend):
     def _join_choice(self, left: Columns, right: Columns,
                      on: Sequence[str],
                      left_stats: "TableStats | None",
-                     right_stats: "TableStats | None") -> str:
+                     right_stats: "TableStats | None",
+                     op: str = "hash_join") -> str:
         # the decision table reads rows/kinds/span only — skip the
         # cardinality sampling pass on the dispatch hot path.
         if left_stats is None:
@@ -212,10 +255,18 @@ class AutoBackend(Backend):
         if right_stats is None:
             right_stats = collect_stats(right, on,
                                         estimate_cardinality=False)
-        return choose_join(
+        choice, reason = explain_join(
             left_stats, right_stats,
             n_devices=self._devices(),
             sharded_available=self._available("sharded"))
+        rec = get_recorder()
+        if rec.enabled:
+            rec.event("auto_decision", op=op, choice=choice,
+                      reason=reason, left_rows=left_stats.n_rows,
+                      right_rows=right_stats.n_rows,
+                      n_devices=self._devices())
+            rec.metrics.counter(f"auto.{op}.{choice}").inc()
+        return choice
 
     def hash_join(self, left: Columns, right: Columns,
                   on: Sequence[str], how: str = "inner", *,
@@ -236,7 +287,7 @@ class AutoBackend(Backend):
         # tables the delegate's fused probe will actually touch, so
         # sizing the choice on them is the honest estimate.
         choice = self._join_choice(left, right, on, left_stats,
-                                   right_stats)
+                                   right_stats, op="masked_hash_join")
         return self._delegate(choice).masked_hash_join(
             left, right, on, how,
             left_mask=left_mask, right_mask=right_mask)
@@ -250,11 +301,17 @@ class AutoBackend(Backend):
         if stats is None:
             stats = collect_stats(cols, keys,
                                   estimate_cardinality=False)
-        choice = choose_group_by_agg(
+        choice, reason = explain_group_by_agg(
             stats, tuple(cols[value][0].dtype for _fn, value, _o in specs),
             n_devices=self._devices(),
             sharded_available=self._available("sharded"),
             jax_available=self._available("jax"))
+        rec = get_recorder()
+        if rec.enabled:
+            rec.event("auto_decision", op="group_by_agg",
+                      choice=choice, reason=reason, rows=stats.n_rows,
+                      n_devices=self._devices())
+            rec.metrics.counter(f"auto.group_by_agg.{choice}").inc()
         return self._delegate(choice).group_by_agg(cols, keys, specs)
 
     def group_by_sum(self, cols: Columns, keys: Sequence[str],

@@ -84,6 +84,7 @@ inherited jax/vectorized path. Filter and concat stay inherited.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import os
 from typing import Sequence
@@ -104,6 +105,7 @@ from repro.kernels.hash_join.ops import hash_probe, masked_hash_probe
 from repro.kernels.segment_sum.ops import (masked_segment_reduce,
                                            masked_segment_sum)
 from repro.kernels.segment_sum.ref import reduce_identity
+from repro.obs import get_recorder
 
 __all__ = ["ShardedBackend"]
 
@@ -114,6 +116,8 @@ __all__ = ["ShardedBackend"]
 # key spaces hash-partition ("hash" mode); anything that fits int32
 # still ships as int32.
 MAX_TABLE_SPAN = 1 << 26
+
+_NOOP_CTX = contextlib.nullcontext()
 
 
 def _next_pow2(n: int) -> int:
@@ -493,7 +497,16 @@ class ShardedBackend(JaxBackend):
 
     def _host_fallback(self, left: Columns, right: Columns,
                        on: Sequence[str], how: str,
-                       probe_mask: "np.ndarray | None") -> Columns:
+                       probe_mask: "np.ndarray | None", *,
+                       reason: str = "keys cannot lower") -> Columns:
+        # sharded -> vectorized downgrade: structured degradation event
+        # so run manifests show it (the dtype-driven routes ALSO warn
+        # one-time via fallback.warn_numpy_fallback upstream).
+        rec = get_recorder()
+        if rec.enabled:
+            rec.event("degradation", kind="sharded_downgrade",
+                      op="hash_join", reason=reason)
+            rec.metrics.counter("sharded.downgrades").inc()
         if probe_mask is None:
             return super().hash_join(left, right, on, how)
         return super().masked_hash_join(left, right, on, how,
@@ -505,14 +518,24 @@ class ShardedBackend(JaxBackend):
         n_left = _column_length(left)
         n_right = _column_length(right)
         ndev = max(1, self.n_devices)
-        if (n_left == 0 or n_right == 0
-                or n_left >= 2**31 or n_right >= 2**31
-                or ndev > 255):          # buckets are uint8
-            return self._host_fallback(left, right, on, how, probe_mask)
+        if n_left == 0 or n_right == 0:
+            return self._host_fallback(left, right, on, how, probe_mask,
+                                       reason="empty input side")
+        if n_left >= 2**31 or n_right >= 2**31:
+            return self._host_fallback(left, right, on, how, probe_mask,
+                                       reason="row count exceeds int32")
+        if ndev > 255:                  # buckets are uint8
+            return self._host_fallback(
+                left, right, on, how, probe_mask,
+                reason=f"{ndev} devices exceeds the uint8 bucket space "
+                       f"(255)")
 
         keyed = self._device_keys(left, right, on)
         if keyed is None:               # cannot lower: vectorized path
-            return self._host_fallback(left, right, on, how, probe_mask)
+            return self._host_fallback(
+                left, right, on, how, probe_mask,
+                reason="keys cannot lower to the device without losing "
+                       "bits")
         lk, rk, span = keyed
         if span == 0:                   # no valid key anywhere
             if probe_mask is not None and how != "inner":
@@ -546,7 +569,10 @@ class ShardedBackend(JaxBackend):
             # positions the probes pack — possible past ~2e9 rows with
             # heavy bucket skew even though the raw row counts passed
             # the guard above.
-            return self._host_fallback(left, right, on, how, probe_mask)
+            return self._host_fallback(
+                left, right, on, how, probe_mask,
+                reason="padded slab lanes exceed int32 arrival space "
+                       "(bucket skew)")
         # probe side ships owner-major (src stays the minor axis, so
         # per-device arrival order matches what the build side's
         # all_to_all produces).
@@ -564,10 +590,23 @@ class ShardedBackend(JaxBackend):
             args = (l_slab, m_slab, r_slab)
         else:
             args = (l_slab, r_slab)
+        rec = get_recorder()
+        kernel_ctx = _NOOP_CTX
+        if rec.enabled:
+            # every slab in `args` crosses the mesh through all_to_all
+            bytes_moved = sum(a.nbytes for a in args)
+            kernel_ctx = rec.span(
+                "kernel", op="sharded.exchange_probe", ndev=ndev,
+                mode=("table" if span_shard > 0 else "hash"),
+                fused_mask=fused, all_to_all_bytes=bytes_moved,
+                rows_left=n_left, rows_right=n_right)
+            rec.metrics.histogram(
+                "sharded.all_to_all_bytes").observe(bytes_moved)
         # the packed/wide probes carry int64 intermediates; the x64
         # scope is thread-local and only governs types traced inside.
-        with jax.experimental.enable_x64():
-            out = fn(*args)
+        with kernel_ctx:
+            with jax.experimental.enable_x64():
+                out = fn(*args)
         starts, counts, gidx = (np.asarray(o) for o in out)
 
         # map device results back through the kept permutation: the
@@ -802,11 +841,28 @@ class ShardedBackend(JaxBackend):
 
         fn = _partial_agg_fn(ndev, seg_shard, tuple(col_sig),
                              self.use_pallas, self.interpret)
+        rec = get_recorder()
+        kernel_ctx = _NOOP_CTX
+        if rec.enabled:
+            # the exchange ships one lane per (shard, key slot) per
+            # partial vector — reduced slabs, never input rows: per
+            # column one COUNT partial (int32) plus one value-dtype
+            # partial per requested stat, each ndev*nseg lanes.
+            lanes = ndev * ndev * seg_shard
+            bytes_moved = sum(
+                lanes * (4 + np.dtype(dt).itemsize * len(stats))
+                for dt, stats in col_sig)
+            kernel_ctx = rec.span(
+                "kernel", op="sharded.partial_agg", ndev=ndev,
+                rows=n, slots=n_slots, all_to_all_bytes=bytes_moved)
+            rec.metrics.histogram(
+                "sharded.all_to_all_bytes").observe(bytes_moved)
         # the packed strategy sorts int64-packed lanes; the x64 scope
         # is thread-local and only governs types traced inside.
-        with jax.experimental.enable_x64():
-            outs = [np.asarray(o).reshape(-1) for o in
-                    fn(gid_slab, *col_slabs)]
+        with kernel_ctx:
+            with jax.experimental.enable_x64():
+                outs = [np.asarray(o).reshape(-1) for o in
+                        fn(gid_slab, *col_slabs)]
 
         # unpack in the body's emission order
         stats_of: dict[str, dict[str, np.ndarray]] = {}

@@ -11,6 +11,12 @@ decision therefore routes through :func:`device_supports_dtype`, and
 the first x64-induced fallback per (op, dtype) emits a
 ``warnings.warn`` naming the env fix, so degraded performance is
 observable without spamming one warning per batch.
+
+When tracing is on, EVERY fallback (not just the first) additionally
+lands as a structured ``degradation`` event on the active recorder —
+recorded *before* the one-time dedup check — so run manifests show all
+degradations a run suffered while the interactive warning stays
+one-shot (DESIGN.md §14).
 """
 from __future__ import annotations
 
@@ -18,6 +24,8 @@ import threading
 import warnings
 
 import numpy as np
+
+from repro.obs import get_recorder
 
 __all__ = ["device_supports_dtype", "warn_numpy_fallback",
            "reset_fallback_warnings", "NumpyFallbackWarning"]
@@ -60,6 +68,16 @@ def warn_numpy_fallback(op: str, dtype: np.dtype, *,
     """One-time (per op × dtype) warning that a device path degraded to
     numpy. Names the env fix when the x64 flag is the cause."""
     dtype = np.dtype(dtype)
+    rec = get_recorder()
+    if rec.enabled:
+        # before the dedup check: manifests record every degradation,
+        # only the interactive warning is one-shot.
+        rec.event("degradation", kind="numpy_fallback", op=op,
+                  dtype=dtype.str,
+                  reason=reason if reason is not None else (
+                      "x64 disabled" if x64_is_the_fix(dtype)
+                      else "dtype not device-representable"))
+        rec.metrics.counter("exec.numpy_fallbacks").inc()
     key = (op, dtype.str)
     with _lock:
         if key in _warned:

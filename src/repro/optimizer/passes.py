@@ -811,7 +811,10 @@ def optimize(plan: P.Plan,
     recomputed, provenance recorded, and the active pass list stamped
     on every step (engine cache keys fold it — flipping a pass can
     never serve a stale cross-plan cache hit)."""
+    from repro.obs import get_recorder
+
     active = tuple(passes) if passes is not None else DEFAULT_PASSES
+    rec = get_recorder()
     out = plan
     for name in active:
         try:
@@ -820,7 +823,18 @@ def optimize(plan: P.Plan,
             raise ValueError(
                 f"unknown optimizer pass {name!r} "
                 f"(registered: {sorted(PASSES)})") from None
-        out = fn(out)
+        if rec.enabled:
+            # provenance entries are appended per step — the per-pass
+            # delta is exactly the rewrites THIS pass performed (steps
+            # the pass materialized count whole).
+            prev = {s.node.name: len(s.provenance) for s in out.steps}
+            with rec.span("optimizer_pass", name=name) as sp:
+                out = fn(out)
+                new = [p for s in out.steps
+                       for p in s.provenance[prev.get(s.node.name, 0):]]
+                sp.set(rewrites=len(new), provenance=new)
+        else:
+            out = fn(out)
     stamped = tuple(dataclasses.replace(s, opt_passes=active)
                     for s in out.steps)
     return P.rebuild(out, stamped, optimizer_passes=active)

@@ -448,8 +448,17 @@ class _Compiler:
         if q.limit is not None:
             op = L.Limit(op, q.limit)
 
-        output_schema = self._synthesize_schema(
-            schema_name or f"{name}_schema", out_ns, item_exprs)
+        from repro.obs import get_recorder
+        rec = get_recorder()
+        if rec.enabled:
+            # contract inference = dummy evaluation against the real
+            # kernels — the one compile stage that executes anything.
+            with rec.span("infer", items=len(item_exprs)):
+                output_schema = self._synthesize_schema(
+                    schema_name or f"{name}_schema", out_ns, item_exprs)
+        else:
+            output_schema = self._synthesize_schema(
+                schema_name or f"{name}_schema", out_ns, item_exprs)
         tables = tuple(q.table_names())
         node = SqlNode(
             name=name,
@@ -743,6 +752,17 @@ def compile_query(query: str, *, name: str,
     ill-typed query is rejected at the control plane, before any
     worker touches data.
     """
-    q = parse(query)
-    return _Compiler(query, q, schemas, context).compile(
-        name=name, schema_name=schema_name)
+    from repro.obs import get_recorder
+
+    rec = get_recorder()
+    if not rec.enabled:
+        q = parse(query)
+        return _Compiler(query, q, schemas, context).compile(
+            name=name, schema_name=schema_name)
+    with rec.span("parse"):
+        q = parse(query)
+    with rec.span("compile", tables=list(q.table_names())) as sp:
+        compiled = _Compiler(query, q, schemas, context).compile(
+            name=name, schema_name=schema_name)
+        sp.set(output_schema=compiled.output_schema.__name__)
+    return compiled

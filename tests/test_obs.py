@@ -1,0 +1,627 @@
+"""Flight recorder (DESIGN.md §14): tracing, manifests, invariants.
+
+Covers the two test-gated invariants — cache-key non-interference
+(tracing on/off/different-sink shares cache entries bit for bit) and
+the near-zero-cost disabled path (shared no-op singletons; the wall-
+clock gate lives in ``benchmarks/tracing_overhead.py``) — plus the
+end-to-end audit story: a committed run that suffered an injected
+rebase yields ``Catalog.run_manifest(commit_id)`` with the full span
+tree, recorder thread-safety under the 8-thread concurrent-run
+harness, manifest round-trip through ``FileStore``, structured
+degradation events, and the EXPLAIN ANALYZE format.
+"""
+import json
+import threading
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.obs as obs
+from repro.core import schema as S
+from repro.core.dag import Pipeline
+from repro.core.engine import cache_key
+from repro.core.errors import PlanError
+from repro.core.planner import plan
+from repro.core.runner import Client
+from repro.core.store import FileStore, MemoryStore
+from repro.data.tables import Table, col
+from repro.kernels import fallback
+from repro.obs.trace import _NULL_SPAN
+
+Src = S.Schema.of("Src", x=int)
+Mid = S.Schema.of("Mid", x=int, y=int)
+Total = S.Schema.of("Total", total=int)
+
+
+def _source(vals=(1, 2, 3)) -> Table:
+    return Table({"x": np.array(vals, dtype=np.int64)})
+
+
+def _add_mid(p, i, mult):
+    @p.node(name=f"mid_{i}")
+    def mid(df: Src = "src") -> Mid:
+        return df.select([col("x"), (col("x") * mult).alias("y")])
+
+
+def _diamond() -> Pipeline:
+    p = Pipeline("diamond")
+    p.source("src", Src)
+    for i in range(3):
+        _add_mid(p, i, i + 1)
+
+    @p.node()
+    def sink(a: Mid = "mid_0", b: Mid = "mid_1", c: Mid = "mid_2") -> Total:
+        total = int(a.column("y").sum() + b.column("y").sum()
+                    + c.column("y").sum())
+        return Table({"total": np.array([total], dtype=np.int64)})
+
+    return p
+
+
+def _client(store=None) -> Client:
+    from repro.core.catalog import Catalog
+    c = Client(Catalog(store=store))
+    c.write_source_table("main", "src", _source())
+    return c
+
+
+# ---------------------------------------------------------------------------
+# recorder core
+# ---------------------------------------------------------------------------
+
+def test_span_tree_nesting_and_events():
+    with obs.tracing() as rec:
+        with rec.span("outer", a=1) as outer:
+            rec.event("point", detail="x")
+            with rec.span("inner") as inner:
+                inner.set(b=2)
+    assert outer.parent_id is None
+    assert inner.parent_id == outer.span_id
+    assert outer.events == [pytest.approx(outer.events[0])]
+    assert outer.events[0]["name"] == "point"
+    assert inner.attrs == {"b": 2}
+    sub = rec.subtree(outer)
+    assert [s.name for s in sub] == ["outer", "inner"]
+    assert all(s.t1 is not None for s in sub)
+
+
+def test_tracing_restores_previous_recorder():
+    before = obs.get_recorder()
+    with obs.tracing() as rec:
+        assert obs.get_recorder() is rec
+        assert rec.enabled
+    assert obs.get_recorder() is before
+    assert not obs.get_recorder().enabled
+
+
+def test_null_recorder_is_free_singletons():
+    rec = obs.NullRecorder()
+    assert rec.span("anything", k=1) is _NULL_SPAN
+    assert rec.start_span("x") is _NULL_SPAN
+    # shared no-op span: enter/exit/set all return without allocating
+    with rec.span("a") as sp:
+        assert sp.set(whatever=1) is sp
+    rec.event("ignored", k=2)
+    rec.end_span(_NULL_SPAN)
+    c = rec.metrics.counter("n")
+    c.inc()
+    assert c.value == 0            # null metrics drop updates
+    h = rec.metrics.histogram("h")
+    h.observe(3.0)
+    assert h.count == 0
+
+
+def test_metrics_registry_aggregates():
+    m = obs.MetricsRegistry()
+    m.counter("hits").inc()
+    m.counter("hits").inc(2)
+    m.histogram("lat").observe(1.0)
+    m.histogram("lat").observe(3.0)
+    snap = m.snapshot()
+    assert snap["counters"]["hits"] == 3
+    assert snap["histograms"]["lat"] == {
+        "count": 2, "sum": 4.0, "min": 1.0, "max": 3.0, "mean": 2.0}
+
+
+def test_orphan_events_recorded_without_open_span():
+    with obs.tracing() as rec:
+        rec.event("loose", why="no span open")
+    assert rec.orphan_events()[0]["name"] == "loose"
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_export_format(tmp_path):
+    with obs.tracing() as rec:
+        with rec.span("outer"):
+            rec.event("mark", n=1)
+            with rec.span("inner", rows=5):
+                pass
+    doc = obs.to_chrome_trace(rec.spans())
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    slices = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    instants = [e for e in doc["traceEvents"] if e["ph"] == "i"]
+    assert {e["name"] for e in slices} == {"outer", "inner"}
+    assert instants[0]["name"] == "mark" and instants[0]["args"] == {"n": 1}
+    inner = next(e for e in slices if e["name"] == "inner")
+    assert inner["args"] == {"rows": 5}
+    assert inner["dur"] >= 0 and isinstance(inner["ts"], float)
+    # ts strictly sorted, microseconds
+    ts = [e["ts"] for e in doc["traceEvents"]]
+    assert ts == sorted(ts)
+    # file round-trip is plain JSON (perfetto-loadable)
+    path = tmp_path / "trace.json"
+    obs.write_chrome_trace(path, rec.spans())
+    assert json.loads(path.read_text())["traceEvents"]
+
+
+def test_json_export_is_deterministic():
+    with obs.tracing() as rec:
+        with rec.span("a", z=1, a=2):
+            pass
+    out = obs.to_json(rec.spans())
+    assert json.loads(out)["spans"][0]["attrs"] == {"z": 1, "a": 2}
+
+
+# ---------------------------------------------------------------------------
+# end-to-end audit: committed run with an injected rebase
+# ---------------------------------------------------------------------------
+
+def _run_with_concurrent_write(client, pl, write_fn):
+    fired = []
+
+    def bump_main(_table):
+        if not fired:
+            fired.append(True)
+            write_fn()
+
+    return client.run(pl, "main", verifiers={"sink": [bump_main]})
+
+
+def test_rebase_heavy_run_manifest_full_audit():
+    """The ISSUE acceptance criterion: a committed run that suffered an
+    injected rebase yields a manifest holding publication attempts, the
+    re-executed node set, per-node cache verdicts, and the rebase's
+    conflict details."""
+    client = _client()
+    pl = plan(_diamond())
+    with obs.tracing() as rec:
+        res = _run_with_concurrent_write(
+            client, pl,
+            lambda: client.write_source_table("main", "src",
+                                              _source((10,))))
+    assert res.state.status == "committed"
+    assert res.state.publish_attempts == 2
+    assert res.rebase_reexecutions == (4,)     # full re-derivation
+
+    man = client.catalog.run_manifest(res.state.final_commit)
+    assert man is not None
+    assert man["format"] == obs.MANIFEST_FORMAT
+    assert man["commit_id"] == res.state.final_commit
+    assert man["run_id"] == res.state.run_id
+
+    by_name = {}
+    for s in man["spans"]:
+        by_name.setdefault(s["name"], []).append(s)
+
+    # run root, sealed committed
+    (run,) = by_name["run"]
+    assert run["span_id"] == man["root_span_id"]
+    assert run["attrs"]["status"] == "committed"
+    assert run["attrs"]["commit"] == res.state.final_commit
+    assert run["attrs"]["publish_attempts"] == 2
+
+    # two publication attempts: conflict then published
+    atts = sorted(by_name["publication_attempt"],
+                  key=lambda s: s["attrs"]["attempt"])
+    assert [a["attrs"]["outcome"] for a in atts] == ["conflict",
+                                                    "published"]
+    # the conflict attempt carries the ref_conflict event with heads
+    ev = [e for e in atts[0]["events"] if e["name"] == "ref_conflict"]
+    assert ev and ev[0]["expected_head"] != ev[0]["actual_head"]
+
+    # rebase + revalidate + re-execution + verifier re-run all traced
+    assert by_name["rebase"][0]["attrs"]["onto"] == \
+        ev[0]["actual_head"]
+    assert by_name["revalidate"][0]["attrs"]["reexecute"] is True
+    assert by_name["reexecute"]
+    phases = {v["attrs"]["phase"] for v in by_name["verifier"]}
+    assert phases == {"initial", "revalidate"}
+    assert all(v["attrs"]["outcome"] == "passed"
+               for v in by_name["verifier"])
+
+    # per-node cache verdicts: 4 misses on the first pass, 4 misses on
+    # re-execution (the source moved), all four nodes named
+    nodes = by_name["node"]
+    assert {n["attrs"]["node"] for n in nodes} == {
+        "mid_0", "mid_1", "mid_2", "sink"}
+    assert all(n["attrs"]["cache"] in ("hit", "miss") for n in nodes)
+    assert all("cache_key" in n["attrs"] for n in nodes)
+    reexecuted = [n["attrs"]["node"] for n in nodes
+                  if n["attrs"]["cache"] == "miss"]
+    assert len(nodes) == 8 and len(reexecuted) == 8
+
+    # metrics aggregated into the manifest
+    assert man["metrics"]["counters"]["txn.rebases"] == 1
+    assert man["metrics"]["counters"]["txn.publication.conflicts"] == 1
+    assert man["metrics"]["counters"]["engine.cache.misses"] == 8
+
+
+def test_untraced_run_leaves_no_manifest_and_aborted_run_none():
+    client = _client()
+    pl = plan(_diamond())
+    res = client.run(pl, "main")
+    assert client.catalog.run_manifest(res.state.final_commit) is None
+
+    # aborted traced run: no commit, so nothing to anchor — but the
+    # recorder still holds the sealed run span for live inspection
+    from repro.core.errors import TransactionAborted
+    client2 = _client()
+    with obs.tracing() as rec:
+        with pytest.raises(TransactionAborted):
+            client2.run(plan(_diamond()), "main", fail_after="mid_1")
+    (run,) = rec.spans("run")
+    assert run.attrs["status"] == "aborted"
+    assert run.t1 is not None
+
+
+def test_run_manifest_accepts_branch_refs():
+    client = _client()
+    with obs.tracing():
+        client.run(plan(_diamond()), "main")
+    assert client.catalog.run_manifest("main") is not None
+
+
+# ---------------------------------------------------------------------------
+# invariant 1: cache-key non-interference (tracing is never key material)
+# ---------------------------------------------------------------------------
+
+def test_cache_key_identical_tracing_on_off_and_different_sinks():
+    pl = plan(_diamond())
+    step = pl.steps[0]
+    snaps = {"df": "snap0"}
+    baseline = cache_key(step, snaps)
+    with obs.tracing():
+        assert cache_key(step, snaps) == baseline
+    with obs.tracing() as rec:
+        # a recorder with totally different contents
+        with rec.span("noise", blob="x" * 100):
+            assert cache_key(step, snaps) == baseline
+    assert cache_key(step, snaps) == baseline
+
+
+def test_cached_rerun_sweep_traced_untraced_different_sink():
+    """The ISSUE sweep: populate the cache under tracing, then rerun
+    with tracing off AND with a different sink — every rerun must
+    execute 0 nodes and publish identical fingerprints."""
+    store = MemoryStore()
+    client = _client(store)
+    pl = plan(_diamond())
+    with obs.tracing():
+        first = client.run(pl, "main")
+    assert len(first.executed) == 4
+    fp = {t: client.read_table("main", t).fingerprint()
+          for t in ("mid_0", "mid_1", "mid_2", "sink")}
+
+    # rerun untraced: all four nodes cache-hit
+    second = client.run(pl, "main")
+    assert second.executed == () and len(second.cached) == 4
+
+    # rerun under a DIFFERENT recorder: still all hits
+    with obs.tracing():
+        third = client.run(pl, "main")
+    assert third.executed == () and len(third.cached) == 4
+
+    # fingerprints bit-for-bit stable across the sweep
+    for t, want in fp.items():
+        assert client.read_table("main", t).fingerprint() == want
+
+    # and the traced run's manifest recorded the hits
+    man = client.catalog.run_manifest(third.state.final_commit)
+    # fully-cached rerun writes nothing new -> same head as before; a
+    # manifest exists iff the traced run actually published a commit
+    if man is not None:
+        nodes = [s for s in man["spans"] if s["name"] == "node"]
+        assert all(n["attrs"]["cache"] == "hit" for n in nodes)
+
+
+def test_traced_and_untraced_runs_share_cache_entries():
+    """Populate untraced, hit traced — and vice versa — against one
+    shared store: the key must not depend on the recorder either way."""
+    store = MemoryStore()
+    client = _client(store)
+    pl = plan(_diamond())
+    client.run(pl, "main")                 # populate untraced
+    with obs.tracing() as rec:
+        res = client.run(pl, "main")       # consume traced
+    assert res.executed == ()
+    nodes = rec.spans("node")
+    assert nodes and all(s.attrs["cache"] == "hit" for s in nodes)
+
+
+# ---------------------------------------------------------------------------
+# invariant 2: disabled path is no-op objects (cost gate in benchmarks/)
+# ---------------------------------------------------------------------------
+
+def test_disabled_path_returns_shared_noop_span():
+    rec = obs.get_recorder()
+    assert isinstance(rec, obs.NullRecorder)
+    assert rec.span("a", x=1) is rec.span("b") is _NULL_SPAN
+
+
+# ---------------------------------------------------------------------------
+# thread safety: the 8-thread concurrent-run harness, traced
+# ---------------------------------------------------------------------------
+
+def test_eight_concurrent_traced_runs_separate_manifests():
+    K = 8
+    CSrc = S.Schema.of("CSrc", k=str, v=int)
+    COut = S.Schema.of("COut", k=str, v=int)
+    client = Client()
+    client.write_source_table(
+        "main", "src_table",
+        Table({"k": np.array(["a", "b", "c"], dtype=object),
+               "v": np.arange(3, dtype=np.int64)}))
+
+    def _pipeline(i):
+        p = Pipeline(f"worker{i}")
+        p.source("src_table", CSrc)
+
+        @p.node(name=f"out_{i}")
+        def out_node(df: CSrc = "src_table") -> COut:
+            return df.select([col("k"), col("v")])
+
+        return p
+
+    plans = [plan(_pipeline(i)) for i in range(K)]
+    barrier = threading.Barrier(K)
+    results, errors = {}, {}
+
+    def worker(i):
+        barrier.wait()
+        try:
+            results[i] = client.run(plans[i], "main",
+                                    max_publish_attempts=K + 2)
+        except Exception as e:  # pragma: no cover - must not happen
+            errors[i] = e
+
+    with obs.tracing() as rec:
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(K)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    assert not errors
+
+    # one recorder took all K runs concurrently: every run span sealed,
+    # and each commit's manifest holds exactly its own run's spans
+    assert len(rec.spans("run")) == K
+    seen_runs = set()
+    for res in results.values():
+        man = client.catalog.run_manifest(res.state.final_commit)
+        assert man is not None
+        assert man["run_id"] == res.state.run_id
+        seen_runs.add(man["run_id"])
+        roots = [s for s in man["spans"] if s["parent_id"] is None]
+        assert [s["span_id"] for s in roots] == [man["root_span_id"]]
+        # this run's node span, and no other run's
+        node_names = {s["attrs"]["node"] for s in man["spans"]
+                      if s["name"] == "node"}
+        assert node_names == {res.tables and next(iter(res.tables))}
+    assert len(seen_runs) == K
+
+    # spans are internally consistent under concurrency: unique ids,
+    # every parent id resolves, t1 >= t0
+    spans = rec.spans()
+    ids = [s.span_id for s in spans]
+    assert len(ids) == len(set(ids))
+    id_set = set(ids)
+    for s in spans:
+        assert s.parent_id is None or s.parent_id in id_set
+        assert s.t1 is not None and s.t1 >= s.t0
+
+
+# ---------------------------------------------------------------------------
+# manifest round-trip through FileStore
+# ---------------------------------------------------------------------------
+
+def test_manifest_round_trip_file_store(tmp_path):
+    store = FileStore(tmp_path / "lake")
+    client = _client(store)
+    pl = plan(_diamond())
+    with obs.tracing():
+        res = client.run(pl, "main")
+    cid = res.state.final_commit
+
+    # a FRESH store over the same directory reads the manifest back
+    store2 = FileStore(tmp_path / "lake")
+    man = obs.load_manifest(store2, cid)
+    assert man is not None
+    assert man["commit_id"] == cid
+    assert {s["name"] for s in man["spans"]} >= {"run", "wave", "node",
+                                                 "publication_attempt"}
+    # manifest content is content-addressed: the anchored ref names the
+    # same blob both stores see
+    key = store2.get_ref(obs.MANIFEST_REF_PREFIX + cid)
+    assert key is not None and store2.get_json(key) == man
+
+
+# ---------------------------------------------------------------------------
+# satellite: structured degradation events
+# ---------------------------------------------------------------------------
+
+def test_numpy_fallback_records_event_every_time_warns_once():
+    fallback.reset_fallback_warnings()
+    try:
+        with obs.tracing() as rec:
+            with warnings.catch_warnings(record=True) as w:
+                warnings.simplefilter("always")
+                fallback.warn_numpy_fallback("test.op", np.dtype(np.int64))
+                fallback.warn_numpy_fallback("test.op", np.dtype(np.int64))
+        # warning stays one-shot for interactive use...
+        assert len(w) == 1
+        assert issubclass(w[0].category, fallback.NumpyFallbackWarning)
+        # ...but the manifest-bound event log records EVERY degradation
+        evs = [e for e in rec.orphan_events()
+               if e["name"] == "degradation"]
+        assert len(evs) == 2
+        assert evs[0]["kind"] == "numpy_fallback"
+        assert evs[0]["op"] == "test.op"
+        assert evs[0]["dtype"] == np.dtype(np.int64).str
+        assert "x64" in evs[0]["reason"]
+        assert rec.metrics.snapshot()["counters"][
+            "exec.numpy_fallbacks"] == 2
+    finally:
+        fallback.reset_fallback_warnings()
+
+
+def test_degradation_event_lands_inside_open_span():
+    fallback.reset_fallback_warnings()
+    try:
+        with obs.tracing() as rec:
+            with rec.span("node", node="n1") as sp:
+                with warnings.catch_warnings():
+                    warnings.simplefilter("ignore")
+                    fallback.warn_numpy_fallback("op2",
+                                                 np.dtype(np.float64))
+        assert any(e["name"] == "degradation" for e in sp.events)
+    finally:
+        fallback.reset_fallback_warnings()
+
+
+def test_sharded_downgrade_event_over_255_devices():
+    jax = pytest.importorskip("jax")
+    from repro.exec.sharded import ShardedBackend
+    be = ShardedBackend(n_devices=300)      # uint8 bucket space is 255
+    left = {"k": (np.array([1, 2], dtype=np.int64), None),
+            "v": (np.array([10, 20], dtype=np.int64), None)}
+    right = {"k": (np.array([2, 3], dtype=np.int64), None),
+             "w": (np.array([7, 8], dtype=np.int64), None)}
+    with obs.tracing() as rec:
+        out = be.hash_join(left, right, ["k"])
+    evs = [e for e in rec.orphan_events() if e["name"] == "degradation"]
+    assert evs and evs[0]["kind"] == "sharded_downgrade"
+    assert "255" in evs[0]["reason"]
+    assert out["k"][0].tolist() == [2]      # correctness preserved
+
+
+# ---------------------------------------------------------------------------
+# satellite: auto decision events with reasons
+# ---------------------------------------------------------------------------
+
+def test_auto_decision_event_names_table_row():
+    from repro.exec.auto import AutoBackend, TINY_ROWS
+    be = AutoBackend()
+    n = TINY_ROWS  # <= tiny on both sides combined? use tiny total
+    left = {"k": (np.arange(4, dtype=np.int64), None)}
+    right = {"k": (np.arange(4, dtype=np.int64), None)}
+    with obs.tracing() as rec:
+        be.hash_join(left, right, ["k"])
+    evs = [e for e in rec.orphan_events() if e["name"] == "auto_decision"]
+    assert evs and evs[0]["op"] == "hash_join"
+    assert evs[0]["choice"] == "reference"
+    assert "tiny threshold" in evs[0]["reason"]
+    assert rec.metrics.snapshot()["counters"][
+        "auto.hash_join.reference"] == 1
+
+
+def test_explain_variants_agree_with_choose():
+    from repro.exec import auto
+    from repro.exec.stats import TableStats
+    cases = [
+        (TableStats(n_rows=10), TableStats(n_rows=10)),
+        (TableStats(n_rows=500000), TableStats(n_rows=500000)),
+    ]
+    for l, r in cases:
+        for ndev, sh in ((1, False), (8, True)):
+            choice, reason = auto.explain_join(
+                l, r, n_devices=ndev, sharded_available=sh)
+            assert choice == auto.choose_join(
+                l, r, n_devices=ndev, sharded_available=sh)
+            assert isinstance(reason, str) and reason
+    st = TableStats(n_rows=10)
+    choice, reason = auto.explain_group_by_agg(
+        st, (np.dtype(np.int32),))
+    assert choice == auto.choose_group_by_agg(st, (np.dtype(np.int32),))
+    assert reason
+
+
+# ---------------------------------------------------------------------------
+# satellite: sql -> parse -> compile -> infer spans
+# ---------------------------------------------------------------------------
+
+def test_sql_span_hierarchy():
+    client = _client()
+    client.run(plan(_diamond()), "main")
+    with obs.tracing() as rec:
+        res = client.sql("SELECT x, y FROM mid_1 WHERE x > 1")
+    (sql,) = rec.spans("sql")
+    assert sql.attrs["ref"] == "main"
+    assert sql.attrs["rows_out"] == res.table.num_rows
+    (parse,) = rec.spans("parse")
+    (compile_,) = rec.spans("compile")
+    (infer,) = rec.spans("infer")
+    assert parse.parent_id == sql.span_id
+    assert compile_.parent_id == sql.span_id
+    assert infer.parent_id == compile_.span_id
+    assert compile_.attrs["tables"] == ["mid_1"]
+    # optimizer passes traced under the same sql span tree
+    opt = rec.spans("optimizer_pass")
+    assert {s.attrs["name"] for s in opt} >= {"filter_pushdown"}
+    assert all(s.parent_id == sql.span_id for s in opt)
+
+
+def test_optimizer_pass_spans_record_rewrites():
+    client = _client()
+    client.run(plan(_diamond()), "main")
+    with obs.tracing() as rec:
+        client.sql("SELECT x FROM mid_0 WHERE x > 1")
+    push = next(s for s in rec.spans("optimizer_pass")
+                if s.attrs["name"] == "filter_pushdown")
+    assert push.attrs["rewrites"] == len(push.attrs["provenance"])
+
+
+# ---------------------------------------------------------------------------
+# satellite: EXPLAIN ANALYZE
+# ---------------------------------------------------------------------------
+
+def test_describe_analyze_requires_execution():
+    pl = plan(_diamond())
+    with pytest.raises(PlanError, match="analyze=True"):
+        pl.describe(analyze=True)
+
+
+def test_describe_analyze_format_pinned():
+    import re
+    client = _client()
+    pl = plan(_diamond())
+    client.run(pl, "main")
+    d = pl.describe(analyze=True)
+    # format-pinned like the EXPLAIN section: every step line ends with
+    # the actual block; first run is all cache misses
+    actuals = re.findall(
+        r"\[actual: cache=(hit|miss|uncacheable|error) rows=(\d+|\?) "
+        r"time=\d+\.\d{2}ms\]", d)
+    assert len(actuals) == 4
+    assert {v for v, _ in actuals} == {"miss"}
+    # rerun: same plan object, now all hits with real row counts
+    client.run(pl, "main")
+    d2 = pl.describe(analyze=True)
+    actuals2 = re.findall(r"cache=(\w+) rows=(\d+)", d2)
+    assert {v for v, _ in actuals2} == {"hit"}
+    assert {r for _, r in actuals2} == {"3", "1"}  # mids=3 rows, sink=1
+    # plain describe unchanged (no actual block)
+    assert "[actual:" not in pl.describe()
+
+
+def test_query_result_describe_analyze():
+    client = _client()
+    client.run(plan(_diamond()), "main")
+    res = client.sql("SELECT x FROM mid_0")
+    d = res.describe(analyze=True)
+    assert "[actual: cache=" in d
+    assert "[actual:" not in res.describe()

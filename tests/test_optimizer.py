@@ -270,7 +270,7 @@ def test_describe_truncates_wide_stat_maps():
     step = dataclasses.replace(pl.steps[0], input_stats=wide)
     pl = dataclasses.replace(pl, steps=(step,))
     d = pl.describe()
-    assert "[stats: a rows=1; b rows=2; c rows=3; +2 more]" in d
+    assert "[stats: a rows=1; b rows=2; c rows=3; +2 more (of 5)]" in d
     assert "rows=4" not in d and "rows=5" not in d
 
 
