@@ -1,0 +1,228 @@
+"""Contended publication under chaos (DESIGN.md §15).
+
+K writers race disjoint-table publications against one ``main`` head:
+every CAS conflict forces a rebase, so head contention — not data
+conflict — is the bottleneck being measured. Three questions, one
+BENCH document:
+
+1. **Throughput + tail latency.** commits/s and p50/p99 publish
+   latency at 8/64/256 writers (smoke: 8/64). Backoff sleeps go
+   through a shared :class:`~repro.chaos.clock.FakeClock`, so the
+   *virtual* backoff seconds are reported separately from wall time.
+2. **Success under a fault budget.** A seeded
+   :class:`~repro.chaos.faults.FaultPlan` injects publication-seam
+   failures capped by a fixed budget; the success-rate gate
+   ``(total - budget) / total`` must hold — injected faults are the
+   ONLY acceptable losses.
+3. **Jittered vs linear backoff.** The same contended wave under the
+   legacy linear schedule and the seeded decorrelated-jitter schedule
+   (DESIGN.md §15): wasted CAS attempts and virtual backoff time,
+   side by side.
+
+A chaos-smoke section replays a handful of hostile swarm seeds through
+the linearizability checker — the cheap CI echo of the 240-seed tier-1
+gate.
+
+Run: ``PYTHONPATH=src python -m benchmarks.contended_publication
+[--smoke] [--json PATH]``
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.chaos import (FakeClock, FaultPlan, FaultRule, InjectedCrash,
+                         InjectedFault, SwarmConfig, check_swarm,
+                         fault_injection, run_swarm)
+from repro.core.catalog import Catalog
+from repro.core.errors import TransactionAborted
+from repro.core.transactions import TransactionalRun
+
+
+def row(name, metric, value, unit, notes=""):
+    print(f"{name},{metric},{value:.6g},{unit},{notes}")
+
+
+def _wave(k: int, runs_each: int, *, backoff: str = "decorrelated",
+          seed="bench", rules: tuple[FaultRule, ...] = (),
+          budget: int | None = None) -> dict:
+    """One publication wave: K threads x runs_each disjoint-table runs
+    against a single head. Returns the wave's metrics dict."""
+    cat = Catalog()
+    clock = FakeClock()
+    plan = FaultPlan(seed, rules, budget=budget)
+    committed = [0] * k
+    failed = [0] * k
+    attempts = [0] * k
+    latencies: list[list[float]] = [[] for _ in range(k)]
+    barrier = threading.Barrier(k)
+
+    def worker(i):
+        barrier.wait()
+        for r in range(runs_each):
+            t0 = time.perf_counter()
+            txn = TransactionalRun(
+                cat, "main", run_id=f"w{i}r{r}",
+                max_publish_attempts=4 * k, backoff=backoff,
+                backoff_seed=f"{seed}:w{i}r{r}", clock=clock)
+            txn.begin()
+            txn.write_table(f"t{i}.{r}", f"s{i}.{r}")
+            txn.verify(lambda read, _t=f"t{i}.{r}": read(_t))
+            try:
+                txn.commit()
+                committed[i] += 1
+            except (TransactionAborted, InjectedFault, InjectedCrash):
+                failed[i] += 1
+                try:
+                    txn.abort()
+                except Exception:       # noqa: BLE001 - already dead
+                    pass
+            attempts[i] += txn.publish_attempts
+            latencies[i].append(time.perf_counter() - t0)
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(k)]
+    with fault_injection(plan):
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        cat.gc(live_runs=(), grace_s=0.0)   # recovery sweep always runs
+
+    lats = np.array(sorted(x for per in latencies for x in per))
+    total = k * runs_each
+    ok = sum(committed)
+    return {
+        "writers": k,
+        "runs": total,
+        "committed": ok,
+        "failed": sum(failed),
+        "success_rate": round(ok / total, 4),
+        "commits_per_s": round(ok / wall, 2),
+        "wall_s": round(wall, 4),
+        "p50_latency_ms": round(float(np.percentile(lats, 50)) * 1e3, 3),
+        "p99_latency_ms": round(float(np.percentile(lats, 99)) * 1e3, 3),
+        "mean_cas_attempts": round(sum(attempts) / total, 3),
+        "backoff_virtual_s": round(clock.now_s, 4),
+        "backoff_sleeps": clock.sleep_count,
+        "fault_budget": budget,
+        "faults_injected": plan.faults_injected,
+    }
+
+
+# the pre_merge delay holds publishers between verification and CAS so
+# concurrent heads actually move in the window — contention is real,
+# not just theoretical (same trick as the tier-1 contended regime).
+FAULT_RULES = (FaultRule("txn.commit.pre_merge", "fail", 0.04),
+               FaultRule("txn.commit.pre_rebase", "fail", 0.02),
+               FaultRule("txn.commit.pre_merge", "delay", 0.5,
+                         delay_s=0.002))
+
+CONTENTION_RULES = (FaultRule("txn.commit.pre_merge", "delay", 0.9,
+                              delay_s=0.002),)
+
+SMOKE_SWARM = SwarmConfig(
+    n_agents=6, runs_per_agent=2, use_store=True, gc_every=2,
+    p_violate=0.2, p_abandon=0.15, p_reuse=0.2,
+    fault_rules=(FaultRule("txn.commit.post_merge", "crash", 0.10),
+                 FaultRule("txn.begin.post_branch", "crash", 0.03),
+                 FaultRule("store.put", "fail", 0.08)),
+    fault_budget=10)
+
+
+def bench_contended_publication_chaos(smoke: bool = False) -> dict:
+    writer_counts = (8, 64) if smoke else (8, 64, 256)
+    runs_each = 2 if smoke else 4
+    waves = {}
+    for k in writer_counts:
+        # fixed fault budget scales with the wave so the gate stays
+        # meaningful: the budget is the ONLY tolerated loss.
+        budget = max(2, (k * runs_each) // 16)
+        w = _wave(k, runs_each, seed=f"wave-{k}",
+                  rules=FAULT_RULES, budget=budget)
+        gate = (w["runs"] - budget) / w["runs"]
+        w["success_gate"] = round(gate, 4)
+        assert w["success_rate"] >= gate, (
+            f"{k} writers: success {w['success_rate']} below gate {gate} "
+            f"— losses beyond the injected-fault budget")
+        waves[str(k)] = w
+        row("contended_pub", f"throughput_{k}w", w["commits_per_s"],
+            "commits/s", f"p99 {w['p99_latency_ms']}ms; "
+            f"success {w['success_rate']} >= {gate:.3f}")
+
+    # jittered vs linear, same contended wave, no faults: every run
+    # must land; the schedules differ in retry churn + virtual sleep.
+    kc = 16 if smoke else 32
+    comparison = {}
+    for mode in ("linear", "decorrelated"):
+        w = _wave(kc, runs_each, backoff=mode, seed="backoff-cmp",
+                  rules=CONTENTION_RULES)
+        assert w["failed"] == 0, f"{mode}: contended wave lost runs"
+        comparison[mode] = {
+            "wasted_cas_attempts": round(
+                w["mean_cas_attempts"] * w["runs"] - w["committed"]),
+            "mean_cas_attempts": w["mean_cas_attempts"],
+            "backoff_virtual_s": w["backoff_virtual_s"],
+            "backoff_sleeps": w["backoff_sleeps"],
+            "p99_latency_ms": w["p99_latency_ms"],
+        }
+        row("contended_pub", f"backoff_{mode}_{kc}w",
+            w["mean_cas_attempts"], "attempts/run",
+            f"virtual backoff {w['backoff_virtual_s']}s over "
+            f"{w['backoff_sleeps']} sleeps")
+    comparison["writers"] = kc
+
+    # chaos smoke: hostile swarm seeds through the full checker — the
+    # CI echo of the 240-seed tier-1 gate.
+    n_seeds = 4 if smoke else 12
+    outcomes: dict[str, int] = {}
+    injected = 0
+    for i in range(n_seeds):
+        res = run_swarm(dataclasses.replace(SMOKE_SWARM,
+                                            seed=f"ci-smoke-{i}"))
+        violations = check_swarm(res)
+        assert not violations, (
+            f"seed 'ci-smoke-{i}' (replayable): {violations}")
+        injected += res.plan.faults_injected
+        for o, n in res.outcomes().items():
+            outcomes[o] = outcomes.get(o, 0) + n
+    row("contended_pub", "chaos_smoke_seeds", n_seeds, "seeds",
+        f"0 violations; {injected} faults injected; {outcomes}")
+
+    return {
+        "bench": "contended_publication",
+        "smoke": smoke,
+        "waves": waves,
+        "backoff_comparison": comparison,
+        "chaos_smoke": {"seeds": n_seeds, "violations": 0,
+                        "faults_injected": injected,
+                        "outcomes": outcomes},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    print("name,metric,value,unit,notes")
+    doc = bench_contended_publication_chaos(smoke=args.smoke)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+    else:
+        json.dump(doc, sys.stdout, indent=2)
+        print()
+
+
+if __name__ == "__main__":
+    main()

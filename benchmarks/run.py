@@ -373,6 +373,14 @@ def main() -> None:
         # smoke-sized.
         from benchmarks.sql_front_door import bench_sql_front_door
         gated("sql_front_door", lambda: bench_sql_front_door(smoke=True))
+        # chaos tier gate (DESIGN.md §15): contended publication under a
+        # fixed injected-fault budget — success-rate floor at every
+        # writer count, jittered-vs-linear backoff comparison, and a
+        # hostile-swarm linearizability smoke, smoke-sized.
+        from benchmarks.contended_publication import (
+            bench_contended_publication_chaos)
+        gated("contended_publication",
+              lambda: bench_contended_publication_chaos(smoke=True))
 
     trace_path = os.path.join(_REPO_ROOT, "bench_trace.json")
     obs.write_chrome_trace(trace_path, rec.spans())

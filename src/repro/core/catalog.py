@@ -50,7 +50,7 @@ from repro.core.errors import (
 )
 from repro.core.store import MemoryStore, ObjectStore
 
-__all__ = ["Visibility", "Commit", "BranchInfo", "Catalog"]
+__all__ = ["Visibility", "Commit", "BranchInfo", "GCReport", "Catalog"]
 
 
 class Visibility(enum.Enum):
@@ -84,6 +84,25 @@ class BranchInfo:
     visibility: Visibility = Visibility.USER
     owner_run: str | None = None   # for TXN branches: the owning run id
     verified: bool = False         # for QUARANTINED: re-verification flag
+    updated_at: float = 0.0        # last head move / visibility change
+
+
+@dataclasses.dataclass(frozen=True)
+class GCReport:
+    """What one :meth:`Catalog.gc` pass did (DESIGN.md §15).
+
+    ``collected``/``kept`` list GC *candidates* (TXN and ABORTED
+    branches) as ``(branch, reason)`` pairs; branches that are not
+    candidates (USER, QUARANTINED, tags) appear in neither. Commits are
+    never deleted — GC removes branch refs and observational
+    ``runmanifest/`` store refs only, so a pinned commit's ancestry is
+    intact by construction.
+    """
+
+    collected: tuple[tuple[str, str], ...] = ()
+    kept: tuple[tuple[str, str], ...] = ()
+    swept_manifests: tuple[str, ...] = ()   # commit ids unanchored
+    swept_tmp: int = 0                      # leaked store temp files
 
 
 def _commit_id(tables: Mapping[str, str], parents: tuple[str, ...],
@@ -111,8 +130,10 @@ class Catalog:
         root = Commit(id=_commit_id({}, (), "init", "0"), tables={},
                       parents=(), message="init", timestamp=time.time())
         self._commits[root.id] = root
-        self._branches[main] = BranchInfo(name=main, head=root.id)
+        self._branches[main] = BranchInfo(name=main, head=root.id,
+                                          updated_at=time.time())
         self.main = main
+        self._pins: dict[str, int] = {}   # commit id -> pin count
 
     # ------------------------------------------------------------------
     # refs
@@ -195,7 +216,8 @@ class Catalog:
                 vis = Visibility.QUARANTINED
             head = self.head(from_ref)
             info = BranchInfo(name=name, head=head.id, visibility=vis,
-                              owner_run=owner_run)
+                              owner_run=owner_run,
+                              updated_at=time.time())
             self._branches[name] = info
             return dataclasses.replace(info)
 
@@ -269,6 +291,7 @@ class Catalog:
             info.visibility = visibility
             if verified is not None:
                 info.verified = verified
+            info.updated_at = time.time()
 
     # ------------------------------------------------------------------
     # the only state-changing write (paper Listing 8)
@@ -336,6 +359,7 @@ class Catalog:
                             timestamp=time.time())
             self._commits[cid] = commit
             info.head = cid
+            info.updated_at = commit.timestamp
             return commit
 
     # ------------------------------------------------------------------
@@ -427,6 +451,7 @@ class Catalog:
                 return br_head            # already based on onto
             if br_head.id == base.id:
                 info.head = onto_head.id  # no local changes: fast-forward
+                info.updated_at = time.time()
                 return onto_head
             changed_br = {t for t in set(br_head.tables) | set(base.tables)
                           if br_head.tables.get(t) != base.tables.get(t)}
@@ -455,6 +480,7 @@ class Catalog:
                 timestamp=time.time())
             self._commits[cid] = commit
             info.head = cid
+            info.updated_at = commit.timestamp
             return commit
 
     def _is_published(self, cid: str) -> bool:
@@ -544,6 +570,7 @@ class Catalog:
             if dst_head.id == base.id:
                 # fast-forward: move the ref (zero-copy)
                 dst_info.head = src_head.id
+                dst_info.updated_at = time.time()
                 return src_head
 
             # three-way: detect table-level conflicts
@@ -572,7 +599,209 @@ class Catalog:
                 run_id=run_id, timestamp=time.time())
             self._commits[cid] = commit
             dst_info.head = cid
+            dst_info.updated_at = commit.timestamp
             return commit
+
+    # ------------------------------------------------------------------
+    # pinned readers (serve_pinned_commit + GC protection, DESIGN.md §15)
+    # ------------------------------------------------------------------
+    def pin(self, ref: str) -> str:
+        """Pin the commit ``ref`` resolves to; returns its id.
+
+        A pinned commit marks an active reader (a serving session, a
+        triage investigation): GC keeps any candidate branch whose head
+        is pinned and never unanchors the pinned commit's manifest.
+        Commits themselves are immortal metadata — pinning guards the
+        *refs* that make them discoverable. Refcounted: pin twice,
+        unpin twice.
+        """
+        with self._lock:
+            cid = self.head(ref).id
+            self._pins[cid] = self._pins.get(cid, 0) + 1
+            return cid
+
+    def unpin(self, commit_id: str) -> None:
+        with self._lock:
+            n = self._pins.get(commit_id, 0)
+            if n <= 1:
+                self._pins.pop(commit_id, None)
+            else:
+                self._pins[commit_id] = n - 1
+
+    def pinned(self) -> frozenset[str]:
+        with self._lock:
+            return frozenset(self._pins)
+
+    # ------------------------------------------------------------------
+    # quarantine release (DESIGN.md §6/§15: QUARANTINED -> re-verified
+    # -> mergeable)
+    # ------------------------------------------------------------------
+    def release_quarantined(
+            self, name: str,
+            verifier: Callable[[Callable[[str], str]], Any]) -> Commit:
+        """Re-verify a QUARANTINED branch and release it to USER.
+
+        The sanctioned exit from quarantine: ``verifier(read)`` runs
+        against the branch head captured at entry — ``read(table)``
+        resolves snapshots at that *immutable commit*, not the live
+        head — and the release CASes on the same head. If the branch
+        moved during verification (the concurrent-reuse race on the
+        Fig. 4 counterexample), :class:`RefConflict` is raised and the
+        branch stays quarantined: no state is ever released that the
+        verifier did not see. A verifier exception propagates and
+        leaves the branch quarantined.
+        """
+        with self._lock:
+            info = self._branches.get(name)
+            if info is None:
+                raise BranchNotFound(name)
+            if info.visibility is not Visibility.QUARANTINED:
+                raise VisibilityError(
+                    f"branch {name!r} is {info.visibility.value}, not "
+                    f"quarantined: nothing to release")
+            head = self._commits[info.head]
+
+        def read(table: str) -> str:
+            snap = head.snapshot_of(table)
+            if snap is None:
+                raise CatalogError(
+                    f"table {table!r} not found at quarantined head "
+                    f"{head.id[:8]}")
+            return snap
+
+        verifier(read)   # outside the lock: may read data, take time
+
+        with self._lock:
+            info = self._branches.get(name)
+            if info is None:
+                raise BranchNotFound(
+                    f"branch {name!r} was deleted during re-verification")
+            if info.head != head.id:
+                raise RefConflict(
+                    f"branch {name!r} moved during re-verification: "
+                    f"verified {head.id[:8]}, head is now "
+                    f"{info.head[:8]} — re-verify the new state")
+            info.verified = True
+            info.visibility = Visibility.USER
+            info.updated_at = time.time()
+            return head
+
+    # ------------------------------------------------------------------
+    # branch garbage collection (DESIGN.md §15)
+    # ------------------------------------------------------------------
+    def gc(self, *, live_runs: Sequence[str] | frozenset[str] = (),
+           grace_s: float = 0.0, now: float | None = None,
+           sweep_manifests: bool = True, sweep_store_tmp: bool = True,
+           dry_run: bool = False) -> GCReport:
+        """Collect dead transactional debris so the catalog survives
+        unbounded agent churn.
+
+        Candidates and liveness rules (each kept branch carries its
+        reason in the report):
+
+        - **TXN** branches: kept while ``owner_run`` is in
+          ``live_runs`` (the run still owns it — collecting it would
+          strand a live publication) or younger than ``grace_s``
+          (a run that exists but has not registered yet, or liveness
+          information lagging the catalog). Otherwise the owner is
+          dead — crashed or abandoned — and the branch is collected.
+        - **ABORTED** branches: preserved for triage (§3.3), but not
+          forever — collected after ``grace_s`` unless their head is
+          pinned (a reader is actively triaging).
+        - **QUARANTINED** branches: never collected. Unverified ones
+          are awaiting re-verification (collecting would break the
+          sanctioned reuse path); verified ones are user-domain.
+        - **USER** branches and tags: never candidates.
+
+        Commits are never deleted, so a pinned commit's ancestry — and
+        every published commit — survives any GC schedule by
+        construction. The ``runmanifest/`` sweep removes the
+        observational audit-manifest refs of commits no longer
+        reachable from any surviving branch, tag, or pin (safe by
+        construction: nothing load-bearing reads manifests), and
+        ``sweep_store_tmp`` collects temp files leaked by crashed
+        :class:`~repro.core.store.FileStore` writes.
+        """
+        t = time.time() if now is None else now
+        collected: list[tuple[str, str]] = []
+        kept: list[tuple[str, str]] = []
+        with self._lock:
+            # Snapshot liveness AFTER taking the lock: a run registers
+            # itself live BEFORE its begin() creates the TXN branch
+            # (which needs this lock), so every branch visible in the
+            # scan below has an owner that had already registered when
+            # this snapshot was taken — passing a live view (the swarm
+            # janitor does) can never observe branch-without-owner.
+            live = frozenset(live_runs)
+            for name, info in list(self._branches.items()):
+                if info.visibility is Visibility.TXN:
+                    if info.owner_run is not None \
+                            and info.owner_run in live:
+                        kept.append((name, "live txn: owner run "
+                                     f"{info.owner_run!r} is running"))
+                        continue
+                    if t - info.updated_at < grace_s:
+                        kept.append((name, "txn within grace period"))
+                        continue
+                    if info.head in self._pins:
+                        kept.append((name, "txn head pinned by reader"))
+                        continue
+                    collected.append(
+                        (name, f"abandoned txn: owner run "
+                               f"{info.owner_run!r} is not live"))
+                elif info.visibility is Visibility.ABORTED:
+                    if info.head in self._pins:
+                        kept.append((name, "aborted head pinned "
+                                           "(triage in progress)"))
+                        continue
+                    if t - info.updated_at < grace_s:
+                        kept.append((name, "aborted within grace "
+                                           "period (triage window)"))
+                        continue
+                    collected.append((name, "aborted past grace period"))
+                elif info.visibility is Visibility.QUARANTINED:
+                    kept.append((name,
+                                 "quarantined awaiting re-verification"
+                                 if not info.verified else
+                                 "quarantined (re-verified, user-domain)"))
+            if not dry_run:
+                for name, _reason in collected:
+                    del self._branches[name]
+            # manifest sweep: reachability from every SURVIVING ref.
+            # The ref listing happens UNDER the catalog lock: a
+            # publication merges (moves a head, under this lock) before
+            # it anchors its manifest, so any manifest ref visible here
+            # belongs to a commit already in the reachability snapshot —
+            # a racing publication's manifest can never be swept.
+            swept: list[str] = []
+            reachable: set[str] = set()
+            manifest_refs: list[str] = []
+            if sweep_manifests and not dry_run:
+                stack = [i.head for i in self._branches.values()]
+                stack += list(self._tags.values())
+                stack += list(self._pins)
+                while stack:
+                    c = stack.pop()
+                    if c in reachable:
+                        continue
+                    reachable.add(c)
+                    stack.extend(self._commits[c].parents)
+                from repro.obs import MANIFEST_REF_PREFIX
+                manifest_refs = list(
+                    self.store.refs(MANIFEST_REF_PREFIX))
+        swept_tmp = 0
+        if not dry_run:
+            from repro.obs import MANIFEST_REF_PREFIX
+            for ref in manifest_refs:
+                cid = ref[len(MANIFEST_REF_PREFIX):]
+                if cid not in reachable:
+                    self.store.delete_ref(ref)
+                    swept.append(cid)
+            if sweep_store_tmp and hasattr(self.store, "sweep_tmp"):
+                swept_tmp = self.store.sweep_tmp()
+        return GCReport(collected=tuple(collected), kept=tuple(kept),
+                        swept_manifests=tuple(swept),
+                        swept_tmp=swept_tmp)
 
     # ------------------------------------------------------------------
     # introspection for tests / tooling

@@ -87,6 +87,7 @@ class LakehouseModel:
         self._runs: dict[str, ModelRun] = {}
         self._fresh = itertools.count()
         self._branch_counter = itertools.count()
+        self._gc_violations: list[tuple[str, str]] = []
 
     # ------------------------------------------------------------------
     # Run lifecycle (Alloy: begin / step / finish / fail)
@@ -166,6 +167,73 @@ class LakehouseModel:
                 # branch (the Fig. 4 hazard).
                 self.catalog.mark(run.branch, Visibility.USER,
                                   _system=True)
+
+    def abandon_run(self, run: ModelRun) -> None:
+        """The owning agent walks away (or dies) mid-run: no commit, no
+        abort — the TXN branch dangles with its owner gone. This is the
+        debris :meth:`gc` exists to collect."""
+        assert run.status == "running"
+        run.status = "abandoned"
+
+    # ------------------------------------------------------------------
+    # Garbage collection (DESIGN.md §15)
+    # ------------------------------------------------------------------
+    def live_run_ids(self) -> frozenset[str]:
+        """Alloy's liveness relation: runs still executing own their
+        transactional branches."""
+        return frozenset(r.run_id for r in self._runs.values()
+                         if r.status == "running")
+
+    def gc(self, *, unsafe: bool = False) -> list[str]:
+        """Collect transactional debris; returns collected branch names.
+
+        The safe variant is the shipped :meth:`Catalog.gc` driven by
+        the model's liveness relation. The ``unsafe`` variant is the
+        pre-fix janitor the adequacy tests need: it deletes EVERY
+        TXN/ABORTED branch with no liveness or pin check — the
+        "cron job that cleans old branches" a naive lakehouse grows.
+        Either way, any collection of a branch whose owner is still
+        running, or whose head a reader has pinned, is recorded and
+        surfaced by :meth:`collected_live_branches`.
+        """
+        heads: dict[str, tuple[str, str | None]] = {}
+        vis_of: dict[str, Visibility] = {}
+        for name in self.catalog.branches():
+            info = self.catalog.branch_info(name)
+            heads[name] = (info.head, info.owner_run)
+            vis_of[name] = info.visibility
+        if unsafe:
+            collected = []
+            for name in heads:
+                if vis_of[name] in (Visibility.TXN, Visibility.ABORTED):
+                    self.catalog.delete_branch(name, _system=True)
+                    collected.append(name)
+        else:
+            report = self.catalog.gc(live_runs=self.live_run_ids(),
+                                     grace_s=0.0)
+            collected = [name for name, _reason in report.collected]
+        live = self.live_run_ids()
+        pinned = self.catalog.pinned()
+        for name in collected:
+            head, owner = heads[name]
+            if owner is not None and owner in live:
+                self._gc_violations.append(
+                    (name, f"collected while owner {owner!r} was live"))
+            if head in pinned:
+                self._gc_violations.append(
+                    (name, "collected while its head was pinned"))
+        return collected
+
+    def pin_branch(self, ref: str) -> str:
+        """A reader pins the state it is serving/triaging from."""
+        return self.catalog.pin(ref)
+
+    def collected_live_branches(self) -> list[tuple[str, str]]:
+        """The GC safety predicate: collections that destroyed state a
+        live run or a pinned reader still owned. Must stay empty for
+        the shipped GC under every schedule; the unsafe janitor
+        populates it (adequacy)."""
+        return list(self._gc_violations)
 
     # ------------------------------------------------------------------
     # Arbitrary-actor operations (the agent in Fig. 4)

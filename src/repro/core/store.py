@@ -26,9 +26,12 @@ import json
 import os
 import tempfile
 import threading
+import time
 from typing import Any, Iterator, Mapping
 
 import numpy as np
+
+from repro.core.hooks import fault_point
 
 __all__ = ["ObjectStore", "MemoryStore", "FileStore", "put_pytree",
            "get_pytree", "content_hash"]
@@ -66,6 +69,16 @@ class ObjectStore:
         raise NotImplementedError
 
     def get_ref(self, name: str) -> str | None:
+        raise NotImplementedError
+
+    def refs(self, prefix: str = "") -> Iterator[str]:
+        """Iterate ref names (optionally under ``prefix``) — the
+        enumeration surface ``Catalog.gc``'s manifest sweep walks."""
+        raise NotImplementedError
+
+    def delete_ref(self, name: str) -> bool:
+        """Remove a named ref; returns whether it existed. The blob it
+        pointed at stays (immutable space; content GC is out of scope)."""
         raise NotImplementedError
 
     # -- structured helpers -------------------------------------------
@@ -141,6 +154,14 @@ class MemoryStore(ObjectStore):
         with self._lock:
             return self._refs.get(name)
 
+    def refs(self, prefix: str = "") -> Iterator[str]:
+        with self._lock:
+            return iter([n for n in self._refs if n.startswith(prefix)])
+
+    def delete_ref(self, name: str) -> bool:
+        with self._lock:
+            return self._refs.pop(name, None) is not None
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._blobs)
@@ -152,7 +173,19 @@ class FileStore(ObjectStore):
     Layout: ``<root>/objects/<first2>/<hash>``. Put is write-to-temp then
     ``os.replace`` (atomic on POSIX) — the single-object atomicity the
     paper assumes of S3/Iceberg and builds on top of.
+
+    **Crash consistency** (DESIGN.md §15): temp files are dot-prefixed
+    (``.tmp-*``) so a crash between write and replace can never be
+    mistaken for an object or a ref — ``keys()``/``refs()``/``get_ref``
+    skip them by construction (ref-name validation already rejects
+    dot-leading components). Cleanup of an *errored* write runs on
+    ``Exception`` only: an :class:`~repro.core.hooks.InjectedCrash`
+    (``BaseException``, simulated process death) leaks the temp file
+    exactly as a killed process would, and :meth:`sweep_tmp` is the
+    GC that recovers the leak.
     """
+
+    _TMP_PREFIX = ".tmp-"
 
     def __init__(self, root: str):
         self.root = root
@@ -167,14 +200,21 @@ class FileStore(ObjectStore):
         if os.path.exists(path):
             return key  # dedup
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path))
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   prefix=self._TMP_PREFIX)
         try:
             with os.fdopen(fd, "wb") as f:
                 f.write(data)
+            fault_point("filestore.put.pre_replace", tmp=tmp, path=path,
+                        key=key)
             os.replace(tmp, path)  # atomic publish
-        finally:
-            if os.path.exists(tmp):  # pragma: no cover - crash path
+        except Exception:
+            # recoverable error: clean our temp. A crash (BaseException)
+            # skips this, leaking the temp like real process death —
+            # sweep_tmp() collects it.
+            if os.path.exists(tmp):
                 os.unlink(tmp)
+            raise
         return key
 
     def get(self, key: str) -> bytes:
@@ -190,8 +230,12 @@ class FileStore(ObjectStore):
     def keys(self) -> Iterator[str]:
         objdir = os.path.join(self.root, "objects")
         for d in os.listdir(objdir):
-            for k in os.listdir(os.path.join(objdir, d)):
-                yield k
+            sub = os.path.join(objdir, d)
+            if not os.path.isdir(sub):
+                continue
+            for k in os.listdir(sub):
+                if not k.startswith("."):   # leaked .tmp-* are not keys
+                    yield k
 
     def _ref_path(self, name: str) -> str:
         parts = name.split("/")
@@ -203,14 +247,22 @@ class FileStore(ObjectStore):
     def put_ref(self, name: str, key: str) -> None:
         path = self._ref_path(name)
         os.makedirs(os.path.dirname(path), exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path))
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   prefix=self._TMP_PREFIX)
         try:
             with os.fdopen(fd, "w") as f:
                 f.write(key)
+            # the torn-write window a naive open(path,"w").write() would
+            # have: a crash here leaves the OLD ref intact (the temp is
+            # invisible to readers) — regression-tested crash-at-every-
+            # byte in tests/test_chaos_faults.py.
+            fault_point("filestore.put_ref.pre_replace", tmp=tmp,
+                        path=path, name=name, key=key)
             os.replace(tmp, path)  # atomic, like blob put
-        finally:
-            if os.path.exists(tmp):  # pragma: no cover - crash path
+        except Exception:
+            if os.path.exists(tmp):
                 os.unlink(tmp)
+            raise
 
     def get_ref(self, name: str) -> str | None:
         path = self._ref_path(name)
@@ -218,6 +270,49 @@ class FileStore(ObjectStore):
             return None
         with open(path) as f:
             return f.read().strip()
+
+    def refs(self, prefix: str = "") -> Iterator[str]:
+        refdir = os.path.join(self.root, "refs")
+        if not os.path.isdir(refdir):
+            return
+        for dirpath, _dirs, files in os.walk(refdir):
+            rel = os.path.relpath(dirpath, refdir)
+            for fn in files:
+                if fn.startswith("."):      # leaked temp, not a ref
+                    continue
+                name = fn if rel == "." else "/".join(
+                    rel.split(os.sep) + [fn])
+                if name.startswith(prefix):
+                    yield name
+
+    def delete_ref(self, name: str) -> bool:
+        path = self._ref_path(name)
+        if not os.path.exists(path):
+            return False
+        os.unlink(path)
+        return True
+
+    def sweep_tmp(self, min_age_s: float = 0.0) -> int:
+        """GC leaked ``.tmp-*`` files (crashed writes). ``min_age_s``
+        guards in-flight writers by mtime; returns files removed."""
+        removed = 0
+        now = time.time()
+        for top in ("objects", "refs"):
+            base = os.path.join(self.root, top)
+            if not os.path.isdir(base):
+                continue
+            for dirpath, _dirs, files in os.walk(base):
+                for fn in files:
+                    if not fn.startswith(self._TMP_PREFIX):
+                        continue
+                    p = os.path.join(dirpath, fn)
+                    try:
+                        if now - os.path.getmtime(p) >= min_age_s:
+                            os.unlink(p)
+                            removed += 1
+                    except OSError:  # pragma: no cover - racing writer
+                        pass
+        return removed
 
 
 # ---------------------------------------------------------------------------

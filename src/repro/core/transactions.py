@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import random
 import threading
 import time
 import uuid
@@ -43,6 +44,7 @@ from typing import Any, Callable, Mapping, Sequence
 from repro.core.catalog import Catalog, Commit, Visibility
 from repro.core.errors import (PublicationConflict, RefConflict,
                                TransactionAborted, TransactionError)
+from repro.core.hooks import fault_point
 from repro.core.store import ObjectStore, content_hash
 from repro.obs import build_manifest, get_recorder, store_manifest
 
@@ -123,7 +125,12 @@ class TransactionalRun:
                  run_id: str | None = None, author: str = "",
                  keep_branch_on_success: bool = False,
                  max_publish_attempts: int = 8,
-                 publish_backoff_s: float = 0.001):
+                 publish_backoff_s: float = 0.001,
+                 publish_backoff_cap_s: float = 0.05,
+                 publish_retry_budget_s: float | None = None,
+                 backoff: str = "decorrelated",
+                 backoff_seed: int | str | None = None,
+                 clock: Any | None = None):
         self.catalog = catalog
         self.target = target
         self.registry = registry
@@ -131,7 +138,25 @@ class TransactionalRun:
         self.keep_branch_on_success = keep_branch_on_success
         self.max_publish_attempts = max_publish_attempts
         self.publish_backoff_s = publish_backoff_s
+        self.publish_backoff_cap_s = publish_backoff_cap_s
+        self.publish_retry_budget_s = publish_retry_budget_s
+        if backoff not in ("decorrelated", "linear"):
+            raise ValueError(
+                f"backoff must be 'decorrelated' or 'linear', "
+                f"got {backoff!r}")
+        self.backoff = backoff
         self.run_id = run_id or f"run_{uuid.uuid4().hex[:12]}"
+        # Seeded per run: the retry schedule is replayable (chaos tier)
+        # yet decorrelated ACROSS runs — contending runs with distinct
+        # run_ids never share a jitter sequence, so a thundering herd
+        # of conflicting publishers spreads out instead of re-colliding
+        # in lockstep the way the old `base * attempt` schedule did.
+        self._backoff_rng = random.Random(
+            backoff_seed if backoff_seed is not None else self.run_id)
+        self._prev_backoff = 0.0
+        self.backoff_spent_s = 0.0   # total injected sleep (fake or real)
+        # Injectable clock (chaos: FakeClock) — anything with .sleep().
+        self._sleep = clock.sleep if clock is not None else time.sleep
         code_bytes = code.encode() if isinstance(code, str) else code
         self.code_hash = content_hash(code_bytes)[:16]
         self.branch: str | None = None
@@ -166,6 +191,9 @@ class TransactionalRun:
         self.catalog.create_branch(
             self.branch, self.target, visibility=Visibility.TXN,
             owner_run=self.run_id)
+        # chaos: dying here abandons a fresh TXN branch (GC's problem)
+        fault_point("txn.begin.post_branch", run_id=self.run_id,
+                    branch=self.branch)
         self._status = "running"
         rec = get_recorder()
         if rec.enabled:
@@ -297,6 +325,27 @@ class TransactionalRun:
             self._verifier_heads = [observed] * len(self._verifiers)
             return observed
 
+    def _backoff_delay(self, attempt: int) -> float:
+        """Next publication-retry sleep (DESIGN.md §15).
+
+        ``decorrelated`` (default): seeded decorrelated-jitter
+        exponential backoff — ``min(cap, U[base, 3·prev])`` — so
+        conflicting publishers spread apart instead of re-colliding in
+        lockstep; the sequence is replayable from the run's seed.
+        ``linear`` keeps the old ``base · attempt`` schedule (the
+        contended-publication benchmark's baseline).
+        """
+        base = self.publish_backoff_s
+        if not base:
+            return 0.0
+        if self.backoff == "linear":
+            return base * attempt
+        prev = self._prev_backoff if self._prev_backoff else base
+        delay = min(self.publish_backoff_cap_s,
+                    self._backoff_rng.uniform(base, prev * 3.0))
+        self._prev_backoff = delay
+        return delay
+
     # step 4: atomic publication — CAS + rebase-and-revalidate
     def commit(self) -> Commit:
         self._require_running()
@@ -320,11 +369,23 @@ class TransactionalRun:
                             h != branch_head
                             for h in self._verifier_heads)):
                     branch_head = self._revalidate()
+                # chaos: the CAS boundary — a delay here preempts this
+                # publisher between verification and merge; a crash
+                # abandons a fully-verified, unpublished TXN branch.
+                fault_point("txn.commit.pre_merge", run_id=self.run_id,
+                            attempt=attempt,
+                            expected_head=self._target_head)
                 try:
                     merged = self.catalog.merge(
                         self.branch, into=self.target, run_id=self.run_id,
                         message=f"txn commit {self.run_id}",
                         expected_head=self._target_head, _system=True)
+                    # chaos: published but not yet acknowledged — a
+                    # crash here is the lost-ack window: the commit is
+                    # on the target, the TXN branch is orphaned, the
+                    # registry still says "running". Recovery = GC.
+                    fault_point("txn.commit.post_merge",
+                                run_id=self.run_id, commit=merged.id)
                     if att_span is not None:
                         att_span.set(outcome="published",
                                      commit=merged.id)
@@ -346,12 +407,30 @@ class TransactionalRun:
                             f"kept moving; gave up after {attempt} "
                             f"publication attempts",
                             branch=self.branch, cause=e) from e
-                    if self.publish_backoff_s:
-                        time.sleep(self.publish_backoff_s * attempt)
+                    delay = self._backoff_delay(attempt)
+                    if (self.publish_retry_budget_s is not None
+                            and self.backoff_spent_s + delay
+                            > self.publish_retry_budget_s):
+                        self.abort(e)
+                        raise PublicationConflict(
+                            f"run {self.run_id}: publication retry "
+                            f"budget "
+                            f"({self.publish_retry_budget_s:g}s) "
+                            f"exhausted after {attempt} attempts",
+                            branch=self.branch, cause=e) from e
+                    if delay:
+                        self.backoff_spent_s += delay
+                        if rec.enabled:
+                            rec.event("backoff", attempt=attempt,
+                                      delay_s=round(delay, 6),
+                                      kind=self.backoff)
+                        self._sleep(delay)
                     # Rebase onto the head we just observed — an
                     # immutable commit id, so the subsequent CAS
                     # publishes exactly the (re-verified) rebased state
                     # or conflicts again.
+                    fault_point("txn.commit.pre_rebase",
+                                run_id=self.run_id, attempt=attempt)
                     try:
                         new_head = self.catalog.head(self.target).id
                         if rec.enabled:
@@ -376,6 +455,9 @@ class TransactionalRun:
                         raise TransactionAborted(
                             f"publication failed: {e2}",
                             branch=self.branch, cause=e2) from e2
+                    fault_point("txn.commit.post_rebase",
+                                run_id=self.run_id, attempt=attempt,
+                                onto=self._target_head)
                 except Exception as e:
                     self.abort(e)
                     raise TransactionAborted(
@@ -435,7 +517,15 @@ class TransactionalRun:
             span, subtree(span), commit_id=merged.id, run_id=self.run_id,
             metrics=rec.metrics.snapshot(),
             orphan_events=rec.orphan_events())
-        store_manifest(self.catalog.store, merged.id, doc)
+        try:
+            store_manifest(self.catalog.store, merged.id, doc)
+        except Exception:
+            # observational means observational: the commit is already
+            # published, and a failed audit write must not turn a
+            # successful run into a dead one. The commit simply reads
+            # back as untraced (run_manifest -> None).
+            rec.event("manifest_write_failed", commit=merged.id,
+                      run_id=self.run_id)
 
     # ------------------------------------------------------------------
     def __enter__(self) -> "TransactionalRun":
@@ -445,7 +535,12 @@ class TransactionalRun:
         if exc_type is None:
             self.commit()
             return False
-        if not isinstance(exc, TransactionAborted):
+        # Only ordinary Exceptions abort (mark the branch for triage).
+        # BaseExceptions — InjectedCrash, KeyboardInterrupt, SystemExit
+        # — model process death: a dead process runs no cleanup, and
+        # the dangling TXN branch is exactly what Catalog.gc collects.
+        if not isinstance(exc, TransactionAborted) \
+                and isinstance(exc, Exception):
             self.abort(exc)
         return False  # propagate
 

@@ -1,0 +1,304 @@
+"""Catalog.gc + quarantine release (DESIGN.md §15).
+
+The liveness rules (live owners, grace windows, pins), the invariants
+(quarantine and published ancestry survive every schedule), the
+runmanifest sweep, and the concurrent-reuse race on
+release_quarantined — the Fig. 4 guardrail under branch reuse.
+"""
+import threading
+
+import pytest
+
+from repro.core.catalog import Catalog, Visibility
+from repro.core.errors import (BranchNotFound, RefConflict,
+                               VisibilityError)
+from repro.core.store import FileStore, MemoryStore
+from repro.core.transactions import RunRegistry, TransactionalRun
+from repro.obs import MANIFEST_REF_PREFIX, load_manifest, store_manifest
+
+
+def _txn_branch(cat, rid, tables=None):
+    """Create a TXN branch with one commit, owned by run ``rid``."""
+    b = f"txn/{rid}"
+    cat.create_branch(b, "main", visibility=Visibility.TXN, owner_run=rid)
+    for t, s in (tables or {"t": f"s@{rid}"}).items():
+        cat.write_table(b, t, s, run_id=rid, _system=True)
+    return b
+
+
+# ---------------------------------------------------------------------------
+# liveness rules
+# ---------------------------------------------------------------------------
+
+def test_gc_collects_abandoned_keeps_live():
+    cat = Catalog()
+    live = _txn_branch(cat, "r-live")
+    dead = _txn_branch(cat, "r-dead")
+    report = cat.gc(live_runs=["r-live"])
+    assert dead in [n for n, _ in report.collected]
+    assert live in [n for n, _ in report.kept]
+    assert live in cat.branches() and dead not in cat.branches()
+    reasons = dict(report.kept)
+    assert "live txn" in reasons[live]
+
+
+def test_gc_grace_period_protects_young_txn():
+    cat = Catalog()
+    b = _txn_branch(cat, "r1")
+    now = cat.branch_info(b).updated_at
+    report = cat.gc(live_runs=[], grace_s=60.0, now=now + 1.0)
+    assert b in [n for n, _ in report.kept]
+    report = cat.gc(live_runs=[], grace_s=60.0, now=now + 61.0)
+    assert b in [n for n, _ in report.collected]
+
+
+def test_gc_aborted_grace_then_collect_unless_pinned():
+    cat = Catalog()
+    b1, b2 = _txn_branch(cat, "a1"), _txn_branch(cat, "a2")
+    for b in (b1, b2):
+        cat.mark(b, Visibility.ABORTED, _system=True)
+    now = max(cat.branch_info(b).updated_at for b in (b1, b2))
+    # within the triage window both survive
+    rep = cat.gc(grace_s=300.0, now=now + 10)
+    assert {b1, b2} <= {n for n, _ in rep.kept}
+    # past the window, the pinned one (triage in progress) survives
+    pin = cat.pin(b1)
+    rep = cat.gc(grace_s=300.0, now=now + 301)
+    assert b1 in [n for n, _ in rep.kept]
+    assert b2 in [n for n, _ in rep.collected]
+    # unpinning releases it to the next pass
+    cat.unpin(pin)
+    rep = cat.gc(grace_s=300.0, now=now + 302)
+    assert b1 in [n for n, _ in rep.collected]
+
+
+def test_gc_pin_is_refcounted():
+    cat = Catalog()
+    b = _txn_branch(cat, "a1")
+    cat.mark(b, Visibility.ABORTED, _system=True)
+    pid = cat.pin(b)
+    assert cat.pin(b) == pid
+    cat.unpin(pid)
+    assert b in [n for n, _ in cat.gc().kept]     # one ref left
+    cat.unpin(pid)
+    assert b in [n for n, _ in cat.gc().collected]
+
+
+def test_gc_never_touches_user_quarantined_or_tags():
+    cat = Catalog()
+    cat.write_table("main", "t", "s0")
+    cat.create_branch("feature", "main")
+    cat.tag("v1", "main")
+    aborted = _txn_branch(cat, "a1")
+    cat.mark(aborted, Visibility.ABORTED, _system=True)
+    cat.create_branch("retry", aborted, allow_reuse=True)  # QUARANTINED
+    report = cat.gc()
+    names = {n for n, _ in report.collected}
+    assert names == {aborted}
+    assert "retry" in cat.branches() and "feature" in cat.branches()
+    assert cat.head("v1") is not None
+    kept = dict(report.kept)
+    assert "quarantined" in kept["retry"]
+
+
+def test_gc_dry_run_reports_without_deleting():
+    cat = Catalog()
+    b = _txn_branch(cat, "r1")
+    report = cat.gc(dry_run=True)
+    assert b in [n for n, _ in report.collected]
+    assert b in cat.branches()
+    assert report.swept_manifests == () and report.swept_tmp == 0
+
+
+def test_gc_preserves_pinned_commit_ancestry():
+    """Commits are never deleted: a pinned commit's whole ancestry is
+    readable after any GC schedule, even when the branch that produced
+    it was collected."""
+    cat = Catalog()
+    b = _txn_branch(cat, "r1", {"x": "s1"})
+    cat.write_table(b, "y", "s2", run_id="r1", _system=True)
+    pinned = cat.pin(cat.head(b).id)
+    cat.mark(b, Visibility.ABORTED, _system=True)
+    # pinned HEAD keeps the branch; unpin, collect, then re-pin the
+    # commit id directly — the metadata must still be fully walkable
+    cat.unpin(pinned)
+    cat.gc()
+    assert b not in cat.branches()
+    c = cat.commit(pinned)
+    assert c.tables == {"x": "s1", "y": "s2"}
+    parent = cat.commit(c.parents[0])
+    assert parent.tables == {"x": "s1"}
+
+
+# ---------------------------------------------------------------------------
+# runmanifest sweep
+# ---------------------------------------------------------------------------
+
+def test_gc_sweeps_unreachable_manifests_only():
+    store = MemoryStore()
+    cat = Catalog(store)
+    reachable = cat.write_table("main", "t", "s1").id
+    store_manifest(store, reachable, {"run_id": "keep"})
+    store_manifest(store, "deadbeef" * 3, {"run_id": "orphan"})
+    report = cat.gc()
+    assert report.swept_manifests == ("deadbeef" * 3,)
+    assert load_manifest(store, reachable) == {"run_id": "keep"}
+    assert load_manifest(store, "deadbeef" * 3) is None
+    assert list(store.refs(MANIFEST_REF_PREFIX)) == [
+        f"{MANIFEST_REF_PREFIX}{reachable}"]
+
+
+def test_gc_keeps_manifest_reachable_only_via_pin():
+    store = MemoryStore()
+    cat = Catalog(store)
+    cid = cat.write_table("main", "t", "s1").id
+    cat.write_table("main", "t", "s2")     # head moves past cid
+    store_manifest(store, cid, {"run_id": "pinned-reader"})
+    pin = cat.pin(cid)
+    assert cat.gc().swept_manifests == ()  # pin anchors reachability
+    cat.unpin(pin)
+    # cid is still an ancestor of main: reachable, still kept
+    assert cat.gc().swept_manifests == ()
+
+
+def test_gc_sweeps_store_tmp_through_filestore(tmp_path):
+    from repro.chaos import (FaultPlan, FaultRule, InjectedCrash,
+                             fault_injection)
+    store = FileStore(str(tmp_path))
+    cat = Catalog(store)
+    plan = FaultPlan(0, (FaultRule("filestore.put.pre_replace",
+                                   "crash", 1.0),))
+    with fault_injection(plan):
+        with pytest.raises(InjectedCrash):
+            store.put(b"leak")
+    report = cat.gc()
+    assert report.swept_tmp == 1
+    assert cat.gc(sweep_store_tmp=False).swept_tmp == 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: crashed runs leave debris GC recovers
+# ---------------------------------------------------------------------------
+
+def test_gc_recovers_crashed_publication_debris():
+    from repro.chaos import (FaultPlan, FaultRule, InjectedCrash,
+                             fault_injection)
+    cat = Catalog()
+    reg = RunRegistry()
+    txn = TransactionalRun(cat, "main", run_id="crasher", registry=reg)
+    txn.begin()
+    txn.write_tables({"t": "s@crasher"})
+    plan = FaultPlan(0, (FaultRule("txn.commit.post_merge",
+                                   "crash", 1.0),))
+    with fault_injection(plan):
+        with pytest.raises(InjectedCrash):
+            txn.commit()
+    # lost-ack state: published, branch dangling, registry says running
+    assert cat.tables("main")["t"] == "s@crasher"
+    assert txn.branch in cat.branches()
+    assert reg.get_run("crasher").status == "running"
+    report = cat.gc(live_runs=[])          # liveness says: dead
+    assert txn.branch in [n for n, _ in report.collected]
+    assert cat.tables("main")["t"] == "s@crasher"   # publication intact
+
+
+# ---------------------------------------------------------------------------
+# quarantine release
+# ---------------------------------------------------------------------------
+
+def _aborted_with_reuse(cat):
+    b = _txn_branch(cat, "bad", {"P": "P@bad"})
+    cat.mark(b, Visibility.ABORTED, _system=True)
+    q = "retry"
+    cat.create_branch(q, b, allow_reuse=True)
+    return b, q
+
+
+def test_release_quarantined_happy_path():
+    cat = Catalog()
+    _, q = _aborted_with_reuse(cat)
+    cat.write_table(q, "C", "C@retry")
+    with pytest.raises(VisibilityError):
+        cat.merge(q, into="main")          # unverified: gated
+    seen = []
+    head = cat.release_quarantined(q, lambda read: seen.append(read("C")))
+    assert seen == ["C@retry"] and head.tables["C"] == "C@retry"
+    info = cat.branch_info(q)
+    assert info.visibility is Visibility.USER and info.verified
+    merged = cat.merge(q, into="main")
+    assert merged.tables["C"] == "C@retry"
+    assert merged.tables["P"] == "P@bad"   # re-legitimized BY the release
+
+
+def test_release_requires_quarantined_state():
+    cat = Catalog()
+    cat.create_branch("feature", "main")
+    with pytest.raises(VisibilityError, match="not.*quarantined"):
+        cat.release_quarantined("feature", lambda read: None)
+    with pytest.raises(BranchNotFound):
+        cat.release_quarantined("ghost", lambda read: None)
+
+
+def test_release_verifier_failure_keeps_quarantine():
+    cat = Catalog()
+    _, q = _aborted_with_reuse(cat)
+
+    def bad(read):
+        raise ValueError("still broken")
+    with pytest.raises(ValueError, match="still broken"):
+        cat.release_quarantined(q, bad)
+    info = cat.branch_info(q)
+    assert info.visibility is Visibility.QUARANTINED and not info.verified
+    with pytest.raises(VisibilityError):
+        cat.merge(q, into="main")
+
+
+def test_release_concurrent_reuse_race_is_refused():
+    """The Fig. 4 counterexample under reuse: a writer appends to the
+    quarantined branch WHILE the verifier is running. The release must
+    CAS-fail — never releasing state the verifier did not see."""
+    cat = Catalog()
+    _, q = _aborted_with_reuse(cat)
+    cat.write_table(q, "C", "C@v1")
+    in_verifier = threading.Event()
+    let_finish = threading.Event()
+
+    def slow_verifier(read):
+        assert read("C") == "C@v1"
+        in_verifier.set()
+        assert let_finish.wait(5.0)
+
+    def racer():
+        assert in_verifier.wait(5.0)
+        cat.write_table(q, "C", "C@v2")    # sneak past re-verification?
+        let_finish.set()
+
+    t = threading.Thread(target=racer)
+    t.start()
+    with pytest.raises(RefConflict, match="moved during re-verification"):
+        cat.release_quarantined(q, slow_verifier)
+    t.join()
+    info = cat.branch_info(q)
+    assert info.visibility is Visibility.QUARANTINED and not info.verified
+    with pytest.raises(VisibilityError):
+        cat.merge(q, into="main")          # v2 never became mergeable
+    # re-verifying the NEW state is the sanctioned path forward
+    cat.release_quarantined(q, lambda read: read("C") == "C@v2")
+    assert cat.merge(q, into="main").tables["C"] == "C@v2"
+
+
+def test_release_reads_are_pinned_to_captured_head():
+    """The verifier's reader resolves against the head captured at
+    entry — an immutable commit — even if the branch moves mid-flight;
+    the release then refuses (the reader saw the OLD state)."""
+    cat = Catalog()
+    _, q = _aborted_with_reuse(cat)
+    cat.write_table(q, "C", "C@v1")
+    observed = {}
+
+    def verifier(read):
+        cat.write_table(q, "C", "C@v2")    # branch moves under us
+        observed["C"] = read("C")          # reader must NOT see v2
+    with pytest.raises(RefConflict):
+        cat.release_quarantined(q, verifier)
+    assert observed["C"] == "C@v1"

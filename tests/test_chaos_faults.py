@@ -1,0 +1,305 @@
+"""Fault-injection layer (DESIGN.md §15): seeded determinism, the
+FaultyStore wrapper, crash-consistent FileStore writes (including the
+crash-at-every-byte torn-ref regression), the fake clock, and the
+jittered publication backoff."""
+import time
+
+import pytest
+
+from repro.chaos import (FakeClock, FaultPlan, FaultRule, FaultyStore,
+                         InjectedCrash, InjectedFault, fault_injection,
+                         install_fault_hook)
+from repro.core.catalog import Catalog
+from repro.core.errors import PublicationConflict
+from repro.core.hooks import fault_point
+from repro.core.store import FileStore, MemoryStore
+from repro.core.transactions import TransactionalRun
+
+POINTS = ["txn.begin.post_branch", "txn.commit.pre_merge",
+          "txn.commit.post_merge", "store.put", "store.put_ref"]
+
+
+def _drive(plan, sequence):
+    """Replay a fixed visit sequence; collect what fired."""
+    fired = []
+    with fault_injection(plan):
+        for p in sequence:
+            try:
+                fault_point(p)
+            except InjectedFault:
+                fired.append((p, "fail"))
+            except InjectedCrash:
+                fired.append((p, "crash"))
+    return fired
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: seeded, deterministic, budgeted
+# ---------------------------------------------------------------------------
+
+def test_same_seed_same_decisions():
+    rules = (FaultRule("txn.commit", "fail", 0.4),
+             FaultRule("store.", "crash", 0.3))
+    seq = POINTS * 40
+    a = _drive(FaultPlan(7, rules), seq)
+    b = _drive(FaultPlan(7, rules), seq)
+    assert a == b and a   # identical AND non-empty (rates actually fire)
+    assert FaultPlan(7, rules, ).seed == 7
+
+
+def test_injected_log_replays_decisions():
+    rules = (FaultRule("txn", "fail", 0.5),)
+    plan = FaultPlan("s1", rules)
+    _drive(plan, POINTS * 20)
+    replay = FaultPlan("s1", rules)
+    _drive(replay, POINTS * 20)
+    assert plan.injected == replay.injected
+
+
+def test_different_seeds_diverge():
+    rules = (FaultRule("", "fail", 0.5),)
+    logs = {tuple(_drive(FaultPlan(s, rules), POINTS * 10))
+            for s in range(5)}
+    assert len(logs) > 1
+
+
+def test_rate_bounds():
+    assert not _drive(FaultPlan(0, (FaultRule("txn", "fail", 0.0),)),
+                      POINTS * 10)
+    always = _drive(FaultPlan(0, (FaultRule("txn.commit.pre_merge",
+                                            "fail", 1.0),)),
+                    ["txn.commit.pre_merge"] * 5)
+    assert len(always) == 5
+    with pytest.raises(ValueError):
+        FaultRule("x", "fail", 1.5)
+    with pytest.raises(ValueError):
+        FaultRule("x", "explode")
+
+
+def test_budget_caps_total_injections():
+    plan = FaultPlan(1, (FaultRule("", "fail", 1.0),), budget=3)
+    fired = _drive(plan, POINTS * 10)
+    assert len(fired) == 3 and plan.faults_injected == 3
+    # after exhaustion the plan is a pure passthrough
+    with fault_injection(plan):
+        fault_point("txn.commit.pre_merge")   # does not raise
+
+
+def test_delays_do_not_consume_budget():
+    slept = []
+    plan = FaultPlan(1, (FaultRule("txn", "delay", 1.0, delay_s=0.01),),
+                     budget=0, sleep=slept.append)
+    _drive(plan, ["txn.commit.pre_merge"] * 4)
+    assert len(slept) == 4 and all(0 <= s <= 0.01 for s in slept)
+    assert plan.faults_injected == 0
+
+
+def test_fault_injection_scope_restores_previous_hook():
+    seen = []
+    prev = install_fault_hook(lambda p, ctx: seen.append(p))
+    try:
+        with fault_injection(FaultPlan(0)):
+            fault_point("a")
+        fault_point("b")
+        assert seen == ["b"]   # outer hook back in force
+    finally:
+        install_fault_hook(prev)
+
+
+# ---------------------------------------------------------------------------
+# FaultyStore
+# ---------------------------------------------------------------------------
+
+def test_faulty_store_passthrough_without_hook():
+    fs = FaultyStore(MemoryStore())
+    k = fs.put(b"data")
+    assert fs.get(k) == b"data" and k in fs
+    fs.put_ref("r", k)
+    assert fs.get_ref("r") == k and list(fs.refs()) == ["r"]
+    assert fs.delete_ref("r") and not fs.delete_ref("r")
+
+
+def test_faulty_store_ops_fail_under_plan():
+    fs = FaultyStore(MemoryStore())
+    plan = FaultPlan(0, (FaultRule("store.put", "fail", 1.0),))
+    with fault_injection(plan):
+        with pytest.raises(InjectedFault):
+            fs.put(b"x")
+        with pytest.raises(InjectedFault):
+            fs.put_ref("r", "k")   # prefix "store.put" matches put_ref
+    assert b"x" not in [fs.get(k) for k in fs.keys()]
+
+
+def test_faulty_store_delegates_backend_surface(tmp_path):
+    fs = FaultyStore(FileStore(str(tmp_path)))
+    assert hasattr(fs, "sweep_tmp") and fs.sweep_tmp() == 0
+    assert not hasattr(FaultyStore(MemoryStore()), "sweep_tmp")
+
+
+def test_manifest_write_failure_does_not_kill_published_run():
+    """The audit manifest is observational: a store failure while
+    anchoring it (AFTER the merge moved the ref) must leave the run
+    committed — it just reads back untraced."""
+    import repro.obs as obs
+    store = FaultyStore(MemoryStore())
+    cat = Catalog(store)
+    plan = FaultPlan(0, (FaultRule("store.put_ref", "fail", 1.0),))
+    with obs.tracing():
+        with fault_injection(plan):
+            txn = TransactionalRun(cat, "main", run_id="r0")
+            txn.begin()
+            txn.write_tables({"t": "s"})
+            merged = txn.commit()          # must not raise
+    assert cat.tables("main")["t"] == "s"
+    assert cat.run_manifest(merged.id) is None
+
+
+# ---------------------------------------------------------------------------
+# FileStore crash consistency
+# ---------------------------------------------------------------------------
+
+def test_put_crash_leaks_tmp_invisible_then_swept(tmp_path):
+    store = FileStore(str(tmp_path))
+    plan = FaultPlan(0, (FaultRule("filestore.put.pre_replace",
+                                   "crash", 1.0),))
+    with fault_injection(plan):
+        with pytest.raises(InjectedCrash):
+            store.put(b"payload")
+    assert list(store.keys()) == []       # torn write is not an object
+    assert store.sweep_tmp() == 1         # exactly the leaked temp
+    key = store.put(b"payload")           # recovery: clean retry works
+    assert store.get(key) == b"payload"
+    assert store.sweep_tmp() == 0
+
+
+def test_put_ref_crash_at_every_byte_keeps_old_value(tmp_path):
+    """Regression for the torn-ref window: simulate dying after writing
+    any prefix of the new ref (0..N bytes) — the reader must ALWAYS see
+    the complete old value, never a prefix of the new one."""
+    store = FileStore(str(tmp_path))
+    old = store.put(b"old")
+    new = store.put(b"new")
+    store.put_ref("heads/main", old)
+    for nbytes in range(len(new) + 1):
+        def torn_hook(point, ctx, _n=nbytes):
+            if point == "filestore.put_ref.pre_replace":
+                with open(ctx["tmp"], "r+b") as f:
+                    f.truncate(_n)
+                raise InjectedCrash(point)
+        prev = install_fault_hook(torn_hook)
+        try:
+            with pytest.raises(InjectedCrash):
+                store.put_ref("heads/main", new)
+        finally:
+            install_fault_hook(prev)
+        assert store.get_ref("heads/main") == old, (
+            f"torn ref visible after crash at byte {nbytes}")
+        assert list(store.refs()) == ["heads/main"]
+    assert store.sweep_tmp() == len(new) + 1   # one leak per crash
+    store.put_ref("heads/main", new)           # clean write lands whole
+    assert store.get_ref("heads/main") == new
+
+
+def test_sweep_tmp_respects_min_age(tmp_path):
+    store = FileStore(str(tmp_path))
+    plan = FaultPlan(0, (FaultRule("filestore.put.pre_replace",
+                                   "crash", 1.0),))
+    with fault_injection(plan):
+        with pytest.raises(InjectedCrash):
+            store.put(b"x")
+    assert store.sweep_tmp(min_age_s=3600) == 0   # too young: in-flight?
+    assert store.sweep_tmp(min_age_s=0) == 1
+
+
+def test_plan_torn_kind_truncates_and_crashes(tmp_path):
+    store = FileStore(str(tmp_path))
+    k = store.put(b"v1")
+    store.put_ref("r", k)
+    plan = FaultPlan(3, (FaultRule("filestore.put_ref.pre_replace",
+                                   "torn", 1.0),))
+    with fault_injection(plan):
+        with pytest.raises(InjectedCrash):
+            store.put_ref("r", store.put(b"v2"))
+    assert plan.injected[-1][2] == "torn"
+    assert store.get_ref("r") == k        # old value intact
+    assert store.sweep_tmp() >= 1
+
+
+# ---------------------------------------------------------------------------
+# FakeClock + backoff
+# ---------------------------------------------------------------------------
+
+def test_fake_clock_accumulates_without_wall_time():
+    clock = FakeClock()
+    t0 = time.monotonic()
+    for _ in range(1000):
+        clock.sleep(1.0)
+    assert clock.now_s == pytest.approx(1000.0)
+    assert clock.sleep_count == 1000
+    assert time.monotonic() - t0 < 5.0     # virtual seconds, real millis
+
+
+def _delays(run, n=8):
+    return [run._backoff_delay(i + 1) for i in range(n)]
+
+
+def test_decorrelated_backoff_bounded_and_seeded():
+    cat = Catalog()
+    a = TransactionalRun(cat, "main", backoff_seed="s",
+                         publish_backoff_s=0.001,
+                         publish_backoff_cap_s=0.05)
+    b = TransactionalRun(cat, "main", backoff_seed="s",
+                         publish_backoff_s=0.001,
+                         publish_backoff_cap_s=0.05)
+    da, db = _delays(a), _delays(b)
+    assert da == db                        # replayable from seed
+    assert all(0.001 <= d <= 0.05 for d in da)
+    c = TransactionalRun(cat, "main", backoff_seed="other",
+                         publish_backoff_s=0.001,
+                         publish_backoff_cap_s=0.05)
+    assert _delays(c) != da                # decorrelated across runs
+
+
+def test_linear_backoff_is_the_old_schedule():
+    run = TransactionalRun(Catalog(), "main", backoff="linear",
+                           publish_backoff_s=0.002)
+    assert _delays(run, 4) == [0.002, 0.004, 0.006, 0.008]
+    with pytest.raises(ValueError):
+        TransactionalRun(Catalog(), "main", backoff="fibonacci")
+
+
+def test_zero_base_backoff_never_sleeps():
+    run = TransactionalRun(Catalog(), "main", publish_backoff_s=0.0)
+    assert _delays(run) == [0.0] * 8
+
+
+def test_retry_budget_exhaustion_aborts_with_publication_conflict():
+    cat = Catalog()
+    clock = FakeClock()
+    txn = TransactionalRun(cat, "main", publish_retry_budget_s=0.0,
+                           max_publish_attempts=100, clock=clock)
+    txn.begin()
+    txn.write_tables({"t": "s1"})
+    cat.write_table("main", "t", "other")   # move the target: conflict
+    with pytest.raises(PublicationConflict, match="retry budget"):
+        txn.commit()
+    assert cat.branch_info(txn.branch).visibility.value == "aborted"
+    assert clock.sleep_count == 0           # budget refused the sleep
+
+
+def test_backoff_sleeps_go_through_injected_clock():
+    cat = Catalog()
+    clock = FakeClock()
+    txn = TransactionalRun(cat, "main", clock=clock,
+                           max_publish_attempts=10,
+                           publish_backoff_s=0.01,
+                           publish_backoff_cap_s=0.01)
+    txn.begin()
+    txn.write_tables({"mine": "s"})
+    # move main a few times so commit() retries through the clock
+    cat.write_table("main", "theirs", "x1")
+    merged = txn.commit()
+    assert merged.tables["mine"] == "s" and merged.tables["theirs"] == "x1"
+    assert txn.publish_attempts >= 2
+    assert clock.sleep_count >= 1 and clock.now_s > 0
+    assert txn.backoff_spent_s == pytest.approx(clock.now_s)

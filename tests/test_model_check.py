@@ -149,6 +149,26 @@ class GuardedLakehouse(RuleBasedStateMachine):
         r = next(r for r in self.runs if r.status == "running")
         self.m.fail_run(r)
 
+    @precondition(lambda self: any(
+        r.status == "running" for r in self.runs))
+    @rule()
+    def abandon(self):
+        r = next(r for r in self.runs if r.status == "running")
+        self.m.abandon_run(r)
+
+    # -- janitor + readers (DESIGN.md §15) ---------------------------------
+    @rule()
+    def janitor_gc(self):
+        self.m.gc()
+
+    @rule(b=st.integers(0, 10))
+    def reader_pin(self, b):
+        candidates = self.m.catalog.branches()
+        try:
+            self.m.pin_branch(candidates[b % len(candidates)])
+        except ReproError:
+            pass
+
     # -- adversarial actor (the Fig. 4 agent) ------------------------------
     @rule(reuse=st.booleans(),
           src=st.integers(0, 10))
@@ -189,6 +209,20 @@ class GuardedLakehouse(RuleBasedStateMachine):
         stale = self.m.stale_publications()
         assert not stale, (
             f"rebase-and-revalidate published unverified state: {stale}")
+
+    @invariant()
+    def gc_never_collects_live_state(self):
+        bad = self.m.collected_live_branches()
+        assert not bad, f"GC collected live/pinned state: {bad}"
+
+    @invariant()
+    def gc_never_strands_a_run(self):
+        # every still-running txn run must still own its branch
+        for r in self.runs:
+            if r.status == "running" and r.branch is not None:
+                assert r.branch in self.m.catalog.branches(), (
+                    f"run {r.run_id} lost branch {r.branch} to GC "
+                    f"while live")
 
 
 GuardedLakehouse.TestCase.settings = settings(
@@ -256,6 +290,63 @@ def test_rebase_publication_conflict_aborts_cleanly():
     m.fail_run(r)
     assert m.is_consistent()
     assert m.publications_verified()
+
+
+# ---------------------------------------------------------------------------
+# Branch GC: liveness, pins, and the unsafe-janitor adequacy case
+# ---------------------------------------------------------------------------
+
+def test_unsafe_janitor_collects_live_branch_adequacy():
+    """The pre-fix cron janitor deletes EVERY txn branch — including one
+    whose run is mid-flight. The predicate must catch it (adequacy),
+    and the stranded run must then fail to publish."""
+    m = LakehouseModel(guarded=True)
+    r = m.begin_run(("P",), mode="txn")
+    m.step_run(r)                       # running, branch live
+    collected = m.gc(unsafe=True)
+    assert r.branch in collected
+    assert m.collected_live_branches(), "predicate missed a live collection"
+    with pytest.raises(ReproError):
+        m.finish_run(r)                 # branch gone: publication strands
+
+
+def test_safe_gc_keeps_live_collects_dead():
+    """The shipped GC on the same shape of state: the live run's branch
+    survives, the abandoned one goes, and nothing live was touched."""
+    m = LakehouseModel(guarded=True)
+    live = m.begin_run(("P",), mode="txn")
+    m.step_run(live)
+    dead = m.begin_run(("C",), mode="txn")
+    m.step_run(dead)
+    m.abandon_run(dead)                 # owner walked away
+    collected = m.gc()
+    assert dead.branch in collected
+    assert live.branch not in collected
+    assert not m.collected_live_branches()
+    m.finish_run(live)                  # still publishes fine
+    assert m.is_consistent() and m.publications_verified()
+
+
+def test_safe_gc_respects_pins_and_quarantine():
+    """Pinned aborted heads (triage in progress) and quarantined
+    branches awaiting re-verification are never collected."""
+    m = LakehouseModel(guarded=True)
+    r1 = m.begin_run(("P",), mode="txn")
+    m.step_run(r1)
+    m.fail_run(r1)                      # aborted, preserved
+    m.pin_branch(r1.branch)             # a reader is triaging it
+    r2 = m.begin_run(("C",), mode="txn")
+    m.step_run(r2)
+    m.fail_run(r2)
+    q = m.actor_branch(r2.branch, allow_reuse=True)  # quarantined
+    collected = m.gc()
+    assert r1.branch not in collected, "pinned aborted head collected"
+    assert q not in collected, "quarantined branch collected"
+    assert r2.branch in collected       # unpinned aborted: fair game
+    assert not m.collected_live_branches()
+    # the quarantine reuse path still works after GC
+    m.catalog.mark(q, m.catalog.branch_info(q).visibility, verified=True)
+    m.actor_merge(q, into="main")
 
 
 def test_second_counterexample_live_txn_branch_laundering():
